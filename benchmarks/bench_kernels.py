@@ -1,0 +1,43 @@
+"""Kernel microbenchmarks: banded block attention (the compute hot-spot)
+-- jnp blocked path timing on CPU + allclose check of the Pallas kernel
+in interpret mode.  On-TPU wall-clock is the perf pass's job; here the
+derived column verifies semantics and reports achieved arithmetic.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import band_attention, band_attention_ref
+
+from .common import time_fn, emit
+
+
+def run():
+    B, G, L, d, nr = 1, 4, 2048, 64, 16
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (B, G, L, d))
+    k = jax.random.normal(k2, (B, L, d))
+    v = jax.random.normal(k3, (B, L, d))
+    w = jnp.ones((B, L))
+    for mode in ("l0_bidir", "l0_causal", "coarse_bidir", "coarse_causal"):
+        fn = jax.jit(lambda q, k, v, w, m=mode: band_attention(
+            q, k, v, w, nr=nr, mode=m, impl="jnp"))
+        us = time_fn(fn, q, k, v, w, iters=3, warmup=1)
+        nbands = 2 if mode.endswith("causal") else 3
+        flops = 2 * B * G * L * nr * nbands * d * 2   # S and Y matmuls
+        emit(f"kernel_band_{mode}", us,
+             f"gflops_at_cpu={flops / us / 1e3:.2f}")
+    # interpret-mode correctness at bench shapes
+    ys = band_attention(q[:, :1, :256], k[:, :256], v[:, :256], w[:, :256],
+                        nr=nr, mode="l0_causal", impl="pallas_interpret")
+    yr = band_attention_ref(q[:, :1, :256], k[:, :256], v[:, :256],
+                            w[:, :256], nr=nr, mode="l0_causal")
+    err = max(float(jnp.abs(a - b).max()) for a, b in zip(ys, yr))
+    emit("kernel_pallas_interpret_allclose", 0.0, f"max_err={err:.2e}")
+    assert err < 1e-4
+    return {"err": err}
+
+
+if __name__ == "__main__":
+    run()

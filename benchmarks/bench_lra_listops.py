@@ -1,0 +1,84 @@
+"""Table-1 proxy (LRA ListOps): H1D vs full vs local attention encoders on
+synthetic ListOps -- the task where the paper gains most (+12.3).
+
+Offline proxy of the paper's Table 1: same task family, reduced scale
+(model/steps sized for 1 CPU core; raise BENCH_SCALE to approach paper
+scale).  The claim being reproduced is *relative*: H1D >= full attention
+accuracy and >> local attention at long range.
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import ListOps
+from repro.data.listops import VOCAB, NUM_CLASSES
+from repro.models.common import ModelConfig
+from repro.models.classifier import (classifier_init, classifier_loss,
+                                     classifier_logits)
+from repro.optim import adamw, apply_updates, cosine_schedule
+
+from .common import steps, emit
+
+
+def base_cfg(attention: str, window: int = 0):
+    return ModelConfig(
+        name=f"lra-{attention}", family="dense", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128,
+        vocab_size=VOCAB, attention=attention, nr=8,
+        sliding_window=window, global_every=10 ** 6 if window else 0)
+
+
+def train_classifier(cfg, seq_len=256, n_steps=150, batch=16, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params, _ = classifier_init(key, cfg, NUM_CLASSES)
+    opt = adamw(cosine_schedule(2e-3, 10, n_steps), weight_decay=0.01)
+    opt_state = opt.init(params)
+    data = ListOps(seq_len=seq_len, batch_per_host=batch, seed=seed,
+                   max_depth=4, breadth=3)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        (loss, m), g = jax.value_and_grad(
+            lambda p: classifier_loss(p, cfg, batch), has_aux=True)(params)
+        upd, opt_state = opt.update(g, opt_state, params)
+        return apply_updates(params, upd), opt_state, loss, m["acc"]
+
+    t0 = time.perf_counter()
+    for i in range(n_steps):
+        b = jax.tree.map(jnp.asarray, data.batch(i))
+        params, opt_state, loss, acc = step(params, opt_state, b)
+    train_s = time.perf_counter() - t0
+
+    # held-out eval
+    eval_data = ListOps(seq_len=seq_len, batch_per_host=64, seed=seed + 999,
+                        max_depth=4, breadth=3)
+    b = jax.tree.map(jnp.asarray, eval_data.batch(0))
+    logits = classifier_logits(params, cfg, b["tokens"], b["mask"])
+    acc = float((jnp.argmax(logits, -1) == b["label"]).mean())
+    return acc, train_s / max(n_steps, 1)
+
+
+def run():
+    n = steps(150)
+    results = {}
+    for name, cfg in [("h1d", base_cfg("h1d")),
+                      ("full", base_cfg("full")),
+                      ("local", base_cfg("full", window=16))]:
+        acc, s_per_step = train_classifier(cfg, n_steps=n)
+        results[name] = acc
+        emit(f"table1_listops_{name}_acc", s_per_step * 1e6,
+             f"eval_acc={acc:.3f}")
+    # paper-shaped claims (soft): h1d should not trail full attention by
+    # much, and should beat the local-window baseline
+    emit("table1_listops_h1d_minus_full", 0.0,
+         f"delta={results['h1d'] - results['full']:+.3f}")
+    emit("table1_listops_h1d_minus_local", 0.0,
+         f"delta={results['h1d'] - results['local']:+.3f}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

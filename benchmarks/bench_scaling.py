@@ -1,0 +1,50 @@
+"""Complexity-scaling benchmark: run time of H1D vs full attention as a
+function of sequence length (the paper's O(L) vs O(L^2) claim,
+section 7), plus the linear-memory property of the banded kernels.
+
+Reports the fitted log-log slope: ~1 for H1D, ~2 for dense attention.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import h1d_attention, dense_attention
+
+from .common import time_fn, emit
+
+
+def run():
+    d, nr = 32, 16
+    lengths = [256, 512, 1024, 2048, 4096]
+    t_h1d, t_full = [], []
+    key = jax.random.PRNGKey(0)
+    h1d_jit = jax.jit(lambda q, k, v: h1d_attention(
+        q, k, v, nr=nr, causal=True, causal_mode="fine-q"))
+    full_jit = jax.jit(lambda q, k, v: dense_attention(q, k, v, causal=True))
+    for L in lengths:
+        k1, k2, k3 = jax.random.split(key, 3)
+        q = jax.random.normal(k1, (1, 1, L, d))
+        k = jax.random.normal(k2, (1, L, d))
+        v = jax.random.normal(k3, (1, L, d))
+        us_h = time_fn(h1d_jit, q, k, v, iters=3, warmup=1)
+        us_f = time_fn(full_jit, q, k, v, iters=3, warmup=1)
+        t_h1d.append(us_h)
+        t_full.append(us_f)
+        emit(f"scaling_L{L}_h1d", us_h, f"full_us={us_f:.1f}")
+    logL = np.log(np.asarray(lengths, float))
+    slope_h = float(np.polyfit(logL, np.log(t_h1d), 1)[0])
+    slope_f = float(np.polyfit(logL, np.log(t_full), 1)[0])
+    emit("scaling_slope_h1d", 0.0, f"slope={slope_h:.2f} (linear ~1)")
+    emit("scaling_slope_full", 0.0, f"slope={slope_f:.2f} (quadratic ~2)")
+    # memory: banded similarity tensors are O(L * nr) vs O(L^2)
+    L = 4096
+    h1d_elems = L * nr * 3 + sum((L >> l) * nr for l in range(1, 8))
+    emit("scaling_attn_matrix_elems", 0.0,
+         f"h1d={h1d_elems} dense={L * L} ratio={L * L / h1d_elems:.1f}x")
+    return {"slope_h1d": slope_h, "slope_full": slope_f}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Shared benchmark utilities."""
+import os
+import time
+
+import jax
+import numpy as np
+
+
+def scale() -> float:
+    """BENCH_SCALE env knob: 1.0 = default (CI-sized), larger = closer to
+    paper scale."""
+    return float(os.environ.get("BENCH_SCALE", "1.0"))
+
+
+def steps(n: int) -> int:
+    return max(10, int(n * scale()))
+
+
+def time_fn(fn, *args, iters=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6   # us
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

@@ -1,0 +1,89 @@
+"""Benchmark harness: one benchmark per paper table/figure + kernel and
+roofline reports.  Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,table2,...]
+
+  table1   -- LRA ListOps proxy (H1D vs full vs local attention)
+  table2   -- LM test perplexity at matched params (H1D N_r=16 vs dense)
+  scaling  -- run-time vs L: the O(L) vs O(L^2) claim (section 7)
+  kernels  -- banded block-attention kernel microbench + allclose
+  roofline -- summary of artifacts/roofline (if the dry-run ran)
+"""
+import argparse
+import json
+import os
+import sys
+import traceback
+
+
+def bench_roofline():
+    from repro.launch import roofline as rl
+    adir = rl.ARTIFACT_DIR
+    if not os.path.isdir(adir) or not os.listdir(adir):
+        print("roofline_summary,0.0,skipped(no artifacts; run "
+              "python -m repro.launch.roofline)")
+        return
+    n = ok = 0
+    worst = (None, 1e9)
+    for f in sorted(os.listdir(adir)):
+        if not f.endswith(".json"):
+            continue
+        with open(os.path.join(adir, f)) as fh:
+            r = json.load(fh)
+        if r.get("tag"):
+            continue
+        n += 1
+        if r.get("ok"):
+            ok += 1
+            t = r["terms_s"]
+            peak = max(t.values())
+            frac = t["compute_s"] / peak if peak else 0.0
+            print(f"roofline_{r['arch']}_{r['shape']},"
+                  f"{peak*1e6:.1f},compute_frac={frac:.2f} "
+                  f"dom={r['dominant'].replace('_s','')}")
+            if frac < worst[1]:
+                worst = (f"{r['arch']}__{r['shape']}", frac)
+    print(f"roofline_cells,0.0,ok={ok}/{n} worst_compute_frac="
+          f"{worst[1]:.2f}@{worst[0]}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,table2,scaling,kernels,roofline")
+    args, _ = ap.parse_known_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    def on(name):
+        return want is None or name in want
+
+    print("name,us_per_call,derived")
+    failures = 0
+    jobs = []
+    if on("kernels"):
+        from benchmarks.bench_kernels import run as r
+        jobs.append(("kernels", r))
+    if on("scaling"):
+        from benchmarks.bench_scaling import run as r
+        jobs.append(("scaling", r))
+    if on("table2"):
+        from benchmarks.bench_lm_perplexity import run as r
+        jobs.append(("table2", r))
+    if on("table1"):
+        from benchmarks.bench_lra_listops import run as r
+        jobs.append(("table1", r))
+    if on("roofline"):
+        jobs.append(("roofline", bench_roofline))
+    for name, fn in jobs:
+        try:
+            fn()
+        except Exception as e:
+            failures += 1
+            print(f"{name}_ERROR,0.0,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""LRA-style long-sequence classification (paper section 8.1, ListOps):
+train an H1D encoder classifier on synthetic ListOps and compare against
+the dense-attention baseline.
+
+    PYTHONPATH=src python examples/lra_classification.py --steps 150
+"""
+import argparse
+
+from benchmarks.bench_lra_listops import base_cfg, train_classifier
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--seq-len", type=int, default=256)
+    args = ap.parse_args()
+    for name, cfg in [("h1d", base_cfg("h1d")), ("full", base_cfg("full"))]:
+        acc, sps = train_classifier(cfg, seq_len=args.seq_len,
+                                    n_steps=args.steps)
+        print(f"{name:6s}: eval_acc={acc:.3f} ({sps*1e3:.0f} ms/step)")
+
+
+if __name__ == "__main__":
+    main()

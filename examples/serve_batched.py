@@ -1,0 +1,56 @@
+"""Batched serving demo: continuous batching with hierarchical KV caches.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch llama3.2-1b
+
+Uses the reduced smoke config (random weights) to demonstrate the engine:
+8 requests over 4 slots, greedy decoding, O(nr log L) attention per step.
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import get_model
+from repro.serve import ServeEngine, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    fns = get_model(cfg)
+    params, _ = fns.init(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, slots=args.slots, max_len=128)
+
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              size=rng.integers(8, 24)).astype(np.int32)
+        r = Request(uid=i, prompt=prompt, max_new_tokens=args.new_tokens)
+        reqs.append(r)
+        eng.submit(r)
+
+    t0 = time.perf_counter()
+    ticks = 0
+    while eng.queue or eng.active.any():
+        eng.step()
+        ticks += 1
+    dt = time.perf_counter() - t0
+    total = sum(len(r.out_tokens) for r in reqs)
+    print(f"served {len(reqs)} requests / {total} tokens in {dt:.2f}s "
+          f"({ticks} engine ticks, {total / dt:.1f} tok/s on CPU)")
+    for r in reqs[:3]:
+        print(f"  req {r.uid}: prompt[:6]={r.prompt[:6].tolist()} "
+              f"-> out={r.out_tokens[:8]}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""End-to-end driver: train a ~100M-parameter H-Transformer-1D LM (the
+paper's 53M/144M family) for a few hundred steps with checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300 --arch h1d-lm-53m
+
+Kill it mid-run and re-launch: it resumes from the last committed
+checkpoint.  Use --mesh 2x2 etc. with
+XLA_FLAGS=--xla_force_host_platform_device_count=4 to exercise the
+sharded path on CPU.
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    defaults = ["--arch", "h1d-lm-53m", "--steps", "300", "--batch", "8",
+                "--seq", "512", "--data", "hier", "--ckpt-every", "100",
+                "--ckpt-dir", "checkpoints/h1d-lm-53m"]
+    # user args override defaults
+    train_main(defaults + args)

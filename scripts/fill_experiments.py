@@ -1,0 +1,116 @@
+"""Fill EXPERIMENTS.md result tables from artifacts/dryrun and
+artifacts/roofline.
+
+    PYTHONPATH=src python scripts/fill_experiments.py
+"""
+import json
+import os
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DRY = os.path.join(ROOT, "artifacts", "dryrun")
+ROOF = os.path.join(ROOT, "artifacts", "roofline")
+EXP = os.path.join(ROOT, "EXPERIMENTS.md")
+
+ARCH_ORDER = ["yi-6b", "qwen2.5-14b", "llama3.2-1b", "gemma3-4b",
+              "seamless-m4t-medium", "qwen2-moe-a2.7b", "arctic-480b",
+              "llava-next-34b", "mamba2-1.3b", "zamba2-1.2b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _fmt_bytes(n):
+    if n >= 1e9:
+        return f"{n / 1e9:.2f} GB"
+    return f"{n / 1e6:.1f} MB"
+
+
+def dryrun_table():
+    rows = ["| arch | shape | mesh | status | temp/device | args/device |"
+            " collective wire bytes/device (AG/AR/RS/A2A/CP) | compile s |",
+            "|---|---|---|---|---|---|---|---|"]
+    n_ok = n_all = 0
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh in ("pod16x16", "pod2x16x16"):
+                path = os.path.join(DRY, f"{arch}__{shape}__{mesh}.json")
+                if not os.path.exists(path):
+                    continue
+                with open(path) as f:
+                    r = json.load(f)
+                n_all += 1
+                if not r.get("ok"):
+                    rows.append(f"| {arch} | {shape} | {mesh} | FAIL "
+                                f"({r.get('error', '?')[:60]}) | | | | |")
+                    continue
+                n_ok += 1
+                mem = r.get("memory", {})
+                c = r.get("collectives", {})
+                wire = "/".join(
+                    _fmt_bytes(c.get(k, {}).get("wire_bytes", 0))
+                    for k in ("all-gather", "all-reduce", "reduce-scatter",
+                              "all-to-all", "collective-permute"))
+                rows.append(
+                    f"| {arch} | {shape} | {mesh} | OK | "
+                    f"{_fmt_bytes(mem.get('temp_size_in_bytes', 0))} | "
+                    f"{_fmt_bytes(mem.get('argument_size_in_bytes', 0))} | "
+                    f"{wire} | {r.get('seconds', 0):.0f} |")
+    header = (f"**{n_ok}/{n_all} cells compile** "
+              f"(40 arch x shape cells x 2 meshes).\n\n")
+    return header + "\n".join(rows)
+
+
+def roofline_table(root=None):
+    root = root or ROOF
+    rows = ["| arch | shape | compute ms | memory ms | collective ms |"
+            " dominant | useful ratio | what moves the dominant term |",
+            "|---|---|---|---|---|---|---|---|"]
+    hints = {
+        ("compute_s",): "more MXU-efficient tiles / lower remat recompute",
+        ("memory_s",): "fuse banded attention (Pallas kernel path), "
+                       "wider tiles to raise arithmetic intensity",
+        ("collective_s",): "shard differently to cut resharding; overlap "
+                           "collectives with compute; compress cross-pod",
+    }
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            path = os.path.join(root, f"{arch}__{shape}.json")
+            if not os.path.exists(path):
+                continue
+            with open(path) as f:
+                r = json.load(f)
+            if not r.get("ok"):
+                rows.append(f"| {arch} | {shape} | FAIL: "
+                            f"{r.get('error','?')[:50]} | | | | | |")
+                continue
+            t = r["terms_s"]
+            dom = r["dominant"]
+            hint = hints[(dom,)]
+            rows.append(
+                f"| {arch} | {shape} | {t['compute_s']*1e3:.2f} | "
+                f"{t['memory_s']*1e3:.2f} | {t['collective_s']*1e3:.2f} | "
+                f"{dom.replace('_s','')} | {r['useful_ratio']:.2f} | "
+                f"{hint} |")
+    return "\n".join(rows)
+
+
+def main():
+    with open(EXP) as f:
+        text = f.read()
+    text = text.replace(
+        "RESULTS_DRYRUN_TABLE (filled by scripts/fill_experiments.py)",
+        dryrun_table())
+    text = text.replace("RESULTS_DRYRUN_TABLE", dryrun_table())
+    text = text.replace("RESULTS_ROOFLINE_TABLE", roofline_table())
+    opt_dir = os.path.join(ROOT, "artifacts", "roofline_opt")
+    if os.path.isdir(opt_dir) and os.listdir(opt_dir):
+        text = text.replace(
+            "RESULTS_ROOFLINE_OPT_TABLE",
+            "#### §Roofline-optimized (post-hillclimb defaults, all 40 cells)\n\n"
+            + roofline_table(opt_dir))
+    with open(EXP, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Perf-iteration harness: measure roofline terms for one cell under
+config overrides, for the hypothesis -> change -> measure loop.
+
+    PYTHONPATH=src python scripts/perf_cell.py --arch yi-6b \
+        --shape train_4k --tag nr32 --set nr=32 --set remat=false
+
+Writes artifacts/roofline/<arch>__<shape>__<tag>.json and prints the
+three terms + deltas vs the untagged baseline if present.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import dataclasses
+import json
+
+
+def parse_override(s):
+    k, v = s.split("=", 1)
+    if v.lower() in ("true", "false"):
+        v = v.lower() == "true"
+    else:
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+    return k, v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", default="exp")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (repeatable)")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.launch import roofline as rl
+
+    cfg = get_config(args.arch)
+    overrides = dict(parse_override(s) for s in args.set)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    rec = rl.analyze_cell(args.arch, args.shape, cfg=cfg,
+                          tag=f"__{args.tag}")
+    base_path = os.path.join(rl.ARTIFACT_DIR,
+                             f"{args.arch}__{args.shape}.json")
+    if rec.get("ok") and os.path.exists(base_path):
+        with open(base_path) as f:
+            base = json.load(f)
+        if base.get("ok"):
+            for k in ("compute_s", "memory_s", "collective_s"):
+                b = base["terms_s"][k]
+                n = rec["terms_s"][k]
+                d = (n - b) / b * 100 if b else float("nan")
+                print(f"  {k}: {b*1e3:.3f} -> {n*1e3:.3f} ms ({d:+.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: H-Transformer-1D hierarchical attention as a production JAX framework."""
+__version__ = "0.1.0"

@@ -1,0 +1,52 @@
+"""Architecture configs: the 10 assigned archs + the paper's own models.
+
+``get_config(name)`` -> full config; ``get_smoke_config(name)`` -> reduced
+same-family config for CPU smoke tests.  ``ARCH_IDS`` lists the assigned
+pool; ``SHAPES`` defines the per-arch input-shape set.
+"""
+import importlib
+
+ARCH_IDS = [
+    "yi-6b", "qwen2.5-14b", "llama3.2-1b", "gemma3-4b",
+    "seamless-m4t-medium", "qwen2-moe-a2.7b", "arctic-480b",
+    "llava-next-34b", "mamba2-1.3b", "zamba2-1.2b",
+]
+PAPER_IDS = ["h1d-lm-53m", "h1d-lm-144m", "h1d-lra-encoder"]
+
+_MODULES = {
+    "yi-6b": "yi_6b",
+    "qwen2.5-14b": "qwen2_5_14b",
+    "llama3.2-1b": "llama3_2_1b",
+    "gemma3-4b": "gemma3_4b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "arctic-480b": "arctic_480b",
+    "llava-next-34b": "llava_next_34b",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "h1d-lm-53m": "h1d_lm",
+    "h1d-lm-144m": "h1d_lm",
+    "h1d-lra-encoder": "h1d_lm",
+}
+
+# (seq_len, global_batch, kind)
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def get_config(name: str):
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    if hasattr(mod, "CONFIGS"):
+        return mod.CONFIGS[name]()
+    return mod.config()
+
+
+def get_smoke_config(name: str):
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    if hasattr(mod, "SMOKES"):
+        return mod.SMOKES[name]()
+    return mod.smoke()

@@ -1,0 +1,19 @@
+"""Mamba2-1.3B: attention-free SSD [arXiv:2405.21060].  H1D attention is
+inapplicable (DESIGN.md section 5); long_500k runs natively."""
+from repro.models.common import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="mamba2-1.3b", family="ssm", num_layers=48, d_model=2048,
+        num_heads=0, num_kv_heads=0, head_dim=0, d_ff=0, vocab_size=50280,
+        ssm_state=128, ssm_head_dim=64, ssm_expand=2, ssm_chunk=256,
+        tie_embeddings=True, dtype="bfloat16", remat=True)
+
+
+def smoke():
+    return ModelConfig(
+        name="mamba2-smoke", family="ssm", num_layers=2, d_model=64,
+        num_heads=0, num_kv_heads=0, head_dim=0, d_ff=0, vocab_size=512,
+        ssm_state=16, ssm_head_dim=16, ssm_expand=2, ssm_chunk=16,
+        tie_embeddings=True)

@@ -1,0 +1,24 @@
+"""Core H-Transformer-1D hierarchical attention (the paper's contribution)."""
+from .h1d_attention import h1d_attention, h1d_attention_mha
+from .ref_attention import dense_attention, h1d_dense_oracle
+from .h1d_decode import (
+    H1DCache,
+    init_cache,
+    prefill_cache,
+    update_cache,
+    decode_attend,
+)
+from . import hierarchy
+
+__all__ = [
+    "h1d_attention",
+    "h1d_attention_mha",
+    "dense_attention",
+    "h1d_dense_oracle",
+    "H1DCache",
+    "init_cache",
+    "prefill_cache",
+    "update_cache",
+    "decode_attend",
+    "hierarchy",
+]

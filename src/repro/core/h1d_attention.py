@@ -1,0 +1,244 @@
+"""H-Transformer-1D hierarchical attention (paper core, pure JAX).
+
+Public entry points
+-------------------
+``h1d_attention(q, k, v, ...)``
+    Core operator.  ``q``: (B, G, L, D), ``k``/``v``: (B, L, D) where the
+    caller folds ``batch * kv_heads`` into B and the GQA group size into
+    G (G=1 for MHA).  Returns (B, G, L, Dv).
+
+``h1d_attention_mha(q, k, v, ...)``
+    Convenience wrapper over (B, L, H, D) / (B, L, Hkv, D) layouts.
+
+Modes
+-----
+* ``causal=False``              -- paper-faithful encoder attention
+  (symmetric coarsening of Q, K, V; Eq. 25-29).
+* ``causal=True, mode='coarse-q'`` -- paper-style decoder attention with
+  coarsened queries.  NOTE: coarse query rows average embeddings of
+  *future* tokens inside a cluster, so attention **weights** leak future
+  information.  Kept as the paper-faithful reference; see DESIGN.md.
+* ``causal=True, mode='fine-q'``   -- leak-free variant (default): fine
+  queries attend coarse keys/values.  Exactly consistent with the
+  hierarchical KV-cache incremental decode in ``h1d_decode.py``.
+
+All softmax arithmetic runs in float32 with a cross-level stable max
+(log-sum-exp combination of the per-level band contributions).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import hierarchy as hc
+
+NEG_INF = hc.NEG_INF
+_MIN_M = -1e30  # clamp for row-max so fully-masked rows yield zero weight
+
+
+# ---------------------------------------------------------------------------
+# banded block attention at a single level
+# ---------------------------------------------------------------------------
+
+def _band_terms(qb, terms, *, f32=jnp.float32):
+    """Attention of query blocks against a list of key-block bands.
+
+    qb: (B, G, NB, NQ, D)
+    terms: list of (kb, vb, wb, mask) with
+        kb: (B, NB, NK, D) or (B, G, NB, NK, D) (per-head KV),
+        vb likewise, wb: (B, NB, NK),
+        mask: (NQ, NK) bool allowed-mask or None.
+    Returns Y: (B, G, NB, NQ, Dv), Dn: (B, G, NB, NQ), m: (B, G, NB, NQ).
+    """
+    sims = []
+    for kb, vb, wb, mask in terms:
+        kv_g = kb.ndim == qb.ndim
+        s = jnp.einsum("bgnqd,bgnkd->bgnqk" if kv_g else "bgnqd,bnkd->bgnqk",
+                       qb, kb, preferred_element_type=f32)
+        valid = wb > 0  # (B, NB, NK)
+        allow = valid[:, None, :, None, :]
+        if mask is not None:
+            allow = jnp.logical_and(allow, mask[None, None, None])
+        s = jnp.where(allow, s, NEG_INF)
+        sims.append(s)
+
+    m = jnp.maximum(
+        jnp.max(jnp.stack([s.max(axis=-1) for s in sims], 0), axis=0), _MIN_M
+    )
+    y = None
+    dn = None
+    for (kb, vb, wb, mask), s in zip(terms, sims):
+        kv_g = kb.ndim == qb.ndim
+        a = jnp.exp(s - m[..., None])
+        yt = jnp.einsum("bgnqk,bgnkv->bgnqv" if kv_g else "bgnqk,bnkv->bgnqv",
+                        a, vb.astype(f32), preferred_element_type=f32)
+        dt = jnp.einsum("bgnqk,bnk->bgnq", a, wb.astype(f32),
+                        preferred_element_type=f32)
+        y = yt if y is None else y + yt
+        dn = dt if dn is None else dn + dt
+    return y, dn, m
+
+
+# ---------------------------------------------------------------------------
+# single-level contributions
+# ---------------------------------------------------------------------------
+
+def _level_fine_q(qb, kb, vb, wb):
+    """Level >= 1, fine queries (leak-free causal).  qb: (B,G,NB,NQ,D)
+    with NQ = nr * 2**l fine queries per block; kb: (B,NB,nr,Dk)."""
+    nr = kb.shape[-2]
+    terms = [
+        (hc.shift_blocks(kb, -1), hc.shift_blocks(vb, -1),
+         hc.shift_blocks(wb, -1, block_axis=-2),
+         hc.quadrant_mask(qb.shape[-2], nr, "sub")),
+    ]
+    return _band_terms(qb, terms)
+
+
+# ---------------------------------------------------------------------------
+# full operator
+# ---------------------------------------------------------------------------
+
+def _combine_levels(ys, dns, ms, out_dtype, eps=1e-9):
+    """Log-sum-exp combination of per-level (Y, D, m) at fine resolution."""
+    m_star = ms[0]
+    for m in ms[1:]:
+        m_star = jnp.maximum(m_star, m)
+    y = None
+    d = None
+    for yl, dl, ml in zip(ys, dns, ms):
+        w = jnp.exp(ml - m_star)
+        yl = yl * w[..., None]
+        dl = dl * w
+        y = yl if y is None else y + yl
+        d = dl if d is None else d + dl
+    z = y / jnp.maximum(d, eps)[..., None]
+    return z.astype(out_dtype)
+
+
+def h1d_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    nr: int = 16,
+    causal: bool = False,
+    causal_mode: str = "fine-q",
+    kv_weight: Optional[jnp.ndarray] = None,
+    softmax_scale: Optional[float] = None,
+    impl: str = "jnp",
+    tq: int = 128,
+) -> jnp.ndarray:
+    """Hierarchical attention.  See module docstring for shapes/modes.
+
+    ``impl``: banded-level backend -- ``'jnp'`` (blocked XLA; default and
+    the dry-run path), ``'pallas'`` (fused TPU kernel) or
+    ``'pallas_interpret'`` (kernel body on CPU, for validation).
+    ``tq``: Pallas query-tile rows (multiple of 128).
+
+    ``k``/``v`` may be (B, L, Dk) (shared across G) or (B, G, L, Dk)
+    (per-head KV -- the GSPMD-friendly layout: the head axis flows
+    through every einsum unchanged).
+    """
+    B, G, L, D = q.shape
+    kv_g = k.ndim == 4
+    if kv_g:
+        assert k.shape[:3] == (B, G, L) and v.shape[:3] == (B, G, L)
+        assert impl == "jnp", "per-head KV layout is the XLA path"
+    else:
+        assert k.shape == (B, L, k.shape[-1]) and v.shape[:2] == (B, L)
+    M = hc.num_levels(L, nr)
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    f32 = jnp.float32
+    out_dtype = v.dtype
+
+    from repro.kernels.ops import band_attention
+
+    q = q.astype(f32) * scale
+    k = k.astype(f32)
+    v = v.astype(f32)
+    w = (jnp.ones((B, L), f32) if kv_weight is None
+         else jnp.broadcast_to(kv_weight.astype(f32), (B, L)))
+    wv = w[:, None, :, None] if kv_g else w[..., None]
+    v = v * wv
+
+    if M == 0:  # single block: exact dense attention
+        s = jnp.einsum("bgqd,bgkd->bgqk" if kv_g else "bgqd,bkd->bgqk",
+                       q, k, preferred_element_type=f32)
+        allow = (w > 0)[:, None, None, :]
+        if causal:
+            allow = jnp.logical_and(allow, hc.causal_block_mask(L)[None, None])
+        s = jnp.where(allow, s, NEG_INF)
+        m = jnp.maximum(s.max(-1, keepdims=True), _MIN_M)
+        a = jnp.exp(s - m)
+        z = jnp.einsum("bgqk,bgkv->bgqv" if kv_g else "bgqk,bkv->bgqv",
+                       a, v) / jnp.maximum(
+            jnp.einsum("bgqk,bk->bgq", a, w), 1e-9)[..., None]
+        return z.astype(out_dtype)
+
+    # ---- level 0 ----------------------------------------------------------
+    y0, d0, m0 = band_attention(
+        q, k, v, w, nr=nr, mode="l0_causal" if causal else "l0_bidir",
+        impl=impl, tq=tq)
+    ys, dns, ms = [y0], [d0], [m0]
+
+    fine_q = causal and causal_mode == "fine-q"
+    kc, vc, wc = k, v, w
+    qc, wq = q, w
+    for l in range(1, M):
+        kc, _ = hc.coarsen_weighted_mean(kc, wc)
+        vc = hc.coarsen_sum(vc, axis=-2)
+        wc = hc.coarsen_sum(wc, axis=-1)
+        if fine_q:
+            # fine queries grouped per coarse key block (jnp path; the
+            # deep-level einsums are already MXU-shaped)
+            qbl = hc.block(q, nr * (1 << l))
+            yl, dl, ml = _level_fine_q(
+                qbl, hc.block(kc, nr), hc.block(vc, nr),
+                hc.block(wc, nr, axis=-1))
+            ys.append(hc.unblock(yl, axis=-3))
+            dns.append(hc.unblock(dl, axis=-2))
+            ms.append(hc.unblock(ml, axis=-2))
+        else:
+            # paper-faithful: coarsen queries too (weighted mean)
+            qc, _ = hc.coarsen_weighted_mean(qc, wq)
+            wq = hc.coarsen_sum(wq, axis=-1)
+            yl, dl, ml = band_attention(
+                qc, kc, vc, wc, nr=nr,
+                mode="coarse_causal" if causal else "coarse_bidir",
+                impl=impl, tq=tq)
+            rep = 1 << l
+            ys.append(hc.interp_repeat(yl, rep, axis=-2))
+            dns.append(hc.interp_repeat(dl, rep, axis=-1))
+            ms.append(hc.interp_repeat(ml, rep, axis=-1))
+
+    return _combine_levels(ys, dns, ms, out_dtype)
+
+
+def h1d_attention_mha(
+    q: jnp.ndarray,      # (B, L, Hq, D)
+    k: jnp.ndarray,      # (B, L, Hkv, D)
+    v: jnp.ndarray,      # (B, L, Hkv, Dv)
+    **kwargs,
+) -> jnp.ndarray:
+    """GQA-aware multi-head wrapper: folds (B, Hkv) into the core batch dim
+    and the Hq/Hkv group size into G.  Returns (B, L, Hq, Dv)."""
+    B, L, Hq, D = q.shape
+    Hkv = k.shape[2]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    # (B, L, Hq, D) -> (B, Hkv, G, L, D) -> (B*Hkv, G, L, D)
+    qh = q.reshape(B, L, Hkv, G, D).transpose(0, 2, 3, 1, 4)
+    qh = qh.reshape(B * Hkv, G, L, D)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * Hkv, L, D)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * Hkv, L, v.shape[-1])
+    kw = kwargs.pop("kv_weight", None)
+    if kw is not None:
+        kw = jnp.repeat(jnp.broadcast_to(kw, (B, L)), Hkv, axis=0)
+    z = h1d_attention(qh, kh, vh, kv_weight=kw, **kwargs)
+    z = z.reshape(B, Hkv, G, L, -1).transpose(0, 3, 1, 2, 4)
+    return z.reshape(B, L, Hq, -1)

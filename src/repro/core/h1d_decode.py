@@ -1,0 +1,320 @@
+"""Incremental decoding with a hierarchical KV cache (beyond-paper).
+
+The paper evaluates training/encoding only.  For autoregressive serving we
+derive the incremental form of the leak-free (``fine-q``) causal
+hierarchical attention: alongside the fine KV cache we maintain its
+coarsened levels (k: pairwise mean, v: pairwise sum).  Per generated
+token:
+
+* cache update touches O(log L) rows (the token's ancestors);
+* attention reads 2*nr fine keys + nr coarse keys per level
+  => O(nr log L) work instead of O(L).
+
+``decode_attend`` is bit-exact against ``h1d_attention(causal=True,
+causal_mode='fine-q')`` on the same prefix (tested).
+
+Shapes: the caller folds batch*kv_heads into ``B``; ``G`` is the GQA group.
+Cache arrays: fine (B, Lmax, D); level-l coarse (B, Lmax >> l, D).
+Positions ``t``: (B,) int32 -- the index of the *current* token (0-based),
+whose K/V must already be written by ``update_cache``.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import hierarchy as hc
+
+NEG_INF = hc.NEG_INF
+
+
+class H1DCache(NamedTuple):
+    k: jnp.ndarray            # (B, Lmax, D) fine keys
+    v: jnp.ndarray            # (B, Lmax, Dv) fine values
+    ck: Tuple[jnp.ndarray, ...]  # level-l coarse keys, (B, Lmax>>l, D)
+    cv: Tuple[jnp.ndarray, ...]  # level-l coarse values (pairwise sums)
+
+
+def init_cache(B: int, Lmax: int, D: int, Dv: int, nr: int,
+               dtype=jnp.float32) -> H1DCache:
+    M = hc.num_levels(Lmax, nr)
+    ck = tuple(jnp.zeros((B, Lmax >> l, D), dtype) for l in range(1, M))
+    cv = tuple(jnp.zeros((B, Lmax >> l, Dv), dtype) for l in range(1, M))
+    return H1DCache(
+        k=jnp.zeros((B, Lmax, D), dtype),
+        v=jnp.zeros((B, Lmax, Dv), dtype),
+        ck=ck, cv=cv,
+    )
+
+
+def prefill_cache(k: jnp.ndarray, v: jnp.ndarray, Lmax: int, nr: int) -> H1DCache:
+    """Build a cache from a full prefix (B, Lp, D); pads to Lmax."""
+    B, Lp, D = k.shape
+    Dv = v.shape[-1]
+    pad = Lmax - Lp
+    kf = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+    M = hc.num_levels(Lmax, nr)
+    ck, cv = [], []
+    kc, vc = kf, vf
+    for l in range(1, M):
+        kc = hc.coarsen_mean(kc, axis=-2)
+        vc = hc.coarsen_sum(vc, axis=-2)
+        ck.append(kc)
+        cv.append(vc)
+    return H1DCache(k=kf, v=vf, ck=tuple(ck), cv=tuple(cv))
+
+
+def _update_one(cache: H1DCache, k_new, v_new, t):
+    """Single-row update; k_new: (D,), v_new: (Dv,), t: scalar int32."""
+    k = jax.lax.dynamic_update_slice(cache.k, k_new[None], (t, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new[None], (t, 0))
+    ck, cv = [], []
+    k_lo, v_lo = k, v
+    for l, (ckl, cvl) in enumerate(zip(cache.ck, cache.cv), start=1):
+        c = t >> l                        # this token's ancestor at level l
+        # children at level l-1 live in the previous level's buffer
+        pair_k = jax.lax.dynamic_slice(k_lo, (2 * c, 0), (2, k_lo.shape[-1]))
+        pair_v = jax.lax.dynamic_slice(v_lo, (2 * c, 0), (2, v_lo.shape[-1]))
+        new_k = pair_k.mean(0)
+        new_v = pair_v.sum(0)
+        ckl = jax.lax.dynamic_update_slice(ckl, new_k[None], (c, 0))
+        cvl = jax.lax.dynamic_update_slice(cvl, new_v[None], (c, 0))
+        ck.append(ckl)
+        cv.append(cvl)
+        k_lo, v_lo = ckl, cvl
+    return H1DCache(k=k, v=v, ck=tuple(ck), cv=tuple(cv))
+
+
+def update_cache(cache: H1DCache, k_new, v_new, t) -> H1DCache:
+    """Batched cache update.  k_new: (B, D), v_new: (B, Dv), t: (B,)."""
+    return jax.vmap(_update_one)(cache, k_new, v_new, t)
+
+
+def _attend_one(cache: H1DCache, q, t, nr, scale):
+    """q: (G, D), t: scalar.  Returns (G, Dv)."""
+    f32 = jnp.float32
+    G, D = q.shape
+    q = q.astype(f32) * scale
+    Lmax = cache.k.shape[-2]
+    M = hc.num_levels(Lmax, nr)
+
+    logits, values, weights = [], [], []
+
+    def band(keys, vals, mask, wgt):
+        s = jnp.einsum("gd,kd->gk", q, keys.astype(f32),
+                       preferred_element_type=f32)
+        logits.append(jnp.where(mask[None], s, NEG_INF))
+        values.append(vals.astype(f32))
+        weights.append(jnp.where(mask, wgt, 0.0))
+
+    # level 0: own block (causal) + previous block
+    blk0 = t // nr
+    s0 = blk0 * nr
+    own_k = jax.lax.dynamic_slice(cache.k, (s0, 0), (nr, D))
+    own_v = jax.lax.dynamic_slice(cache.v, (s0, 0), (nr, cache.v.shape[-1]))
+    pos = s0 + jnp.arange(nr)
+    band(own_k, own_v, pos <= t, jnp.ones((nr,), f32))
+
+    sp = jnp.maximum(s0 - nr, 0)
+    prev_k = jax.lax.dynamic_slice(cache.k, (sp, 0), (nr, D))
+    prev_v = jax.lax.dynamic_slice(cache.v, (sp, 0), (nr, cache.v.shape[-1]))
+    band(prev_k, prev_v, jnp.broadcast_to(blk0 >= 1, (nr,)),
+         jnp.ones((nr,), f32))
+
+    # coarse levels
+    for l in range(1, M):
+        span = nr << l
+        Il = t // span
+        start = jnp.maximum((Il - 1) * nr, 0)
+        ckl = cache.ck[l - 1]
+        cvl = cache.cv[l - 1]
+        kk = jax.lax.dynamic_slice(ckl, (start, 0), (nr, D))
+        vv = jax.lax.dynamic_slice(cvl, (start, 0), (nr, cvl.shape[-1]))
+        first_half_q = (t % span) < (span // 2)
+        key_last_half = jnp.arange(nr) >= nr // 2
+        mask = (Il >= 1) & ~(first_half_q & key_last_half)
+        band(kk, vv, mask, jnp.full((nr,), float(1 << l), f32))
+
+    s = jnp.concatenate(logits, axis=-1)           # (G, K)
+    vcat = jnp.concatenate(values, axis=-2)        # (K, Dv)
+    wcat = jnp.concatenate(weights, axis=-1)       # (K,)
+    m = jnp.maximum(s.max(-1, keepdims=True), -1e30)
+    a = jnp.exp(s - m)
+    num = a @ vcat
+    den = a @ wcat
+    return num / jnp.maximum(den, 1e-9)[..., None]
+
+
+def _block_read_rows(arr, blk, size):
+    """Per-row block read: arr (B, L, D), blk (B,) -> (B, size, D).
+
+    One-hot contraction over the block axis: batch-aligned, so it stays
+    fully local on a batch-sharded cache (the vmap'd dynamic_slice
+    variant lowers to a cross-batch gather that GSPMD all-gathers --
+    EXPERIMENTS.md P21/P22)."""
+    B, L, D = arr.shape
+    nb = L // size
+    a2 = arr.reshape(B, nb, size * D)
+    sel = jax.nn.one_hot(blk, nb, dtype=arr.dtype)        # (B, nb)
+    out = jnp.einsum("bn,bnf->bf", sel, a2,
+                     preferred_element_type=arr.dtype)
+    return out.reshape(B, size, D)
+
+
+def decode_attend(cache: H1DCache, q, t, *, nr: int,
+                  softmax_scale=None) -> jnp.ndarray:
+    """Batched single-token attention.  q: (B, G, D), t: (B,) per-row
+    positions.  Returns (B, G, Dv) in q.dtype."""
+    f32 = jnp.float32
+    B, G, D = q.shape
+    scale = softmax_scale if softmax_scale is not None else 1 / math.sqrt(D)
+    qs = q.astype(f32) * scale
+    Lmax = cache.k.shape[-2]
+    M = hc.num_levels(Lmax, nr)
+
+    logits, values, weights = [], [], []
+
+    def band(keys, vals, mask, wgt):
+        """keys (B,nr,D), vals (B,nr,Dv), mask (B,nr), wgt (B,nr)."""
+        s = jnp.einsum("bgd,bkd->bgk", qs, keys.astype(f32),
+                       preferred_element_type=f32)
+        logits.append(jnp.where(mask[:, None, :], s, NEG_INF))
+        values.append(vals.astype(f32))
+        weights.append(jnp.where(mask, wgt, 0.0))
+
+    blk0 = t // nr                                        # (B,)
+    pos = blk0[:, None] * nr + jnp.arange(nr)[None, :]    # (B, nr)
+    ones = jnp.ones((B, nr), f32)
+    band(_block_read_rows(cache.k, blk0, nr),
+         _block_read_rows(cache.v, blk0, nr),
+         pos <= t[:, None], ones)
+    band(_block_read_rows(cache.k, jnp.maximum(blk0 - 1, 0), nr),
+         _block_read_rows(cache.v, jnp.maximum(blk0 - 1, 0), nr),
+         jnp.broadcast_to((blk0 >= 1)[:, None], (B, nr)), ones)
+    for l in range(1, M):
+        span = nr << l
+        Il = t // span
+        blk = jnp.maximum(Il - 1, 0)
+        first_half_q = (t % span) < (span // 2)           # (B,)
+        key_last_half = jnp.arange(nr) >= nr // 2         # (nr,)
+        mask = (Il >= 1)[:, None] & ~(first_half_q[:, None]
+                                      & key_last_half[None, :])
+        band(_block_read_rows(cache.ck[l - 1], blk, nr),
+             _block_read_rows(cache.cv[l - 1], blk, nr),
+             mask, jnp.full((B, nr), float(1 << l), f32))
+
+    s = jnp.concatenate(logits, axis=-1)                  # (B, G, K)
+    vcat = jnp.concatenate(values, axis=-2)               # (B, K, Dv)
+    wcat = jnp.concatenate(weights, axis=-1)              # (B, K)
+    m = jnp.maximum(s.max(-1, keepdims=True), -1e30)
+    a = jnp.exp(s - m)
+    num = jnp.einsum("bgk,bkv->bgv", a, vcat)
+    den = jnp.einsum("bgk,bk->bg", a, wcat)
+    return (num / jnp.maximum(den, 1e-9)[..., None]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# uniform-position fast path (single-sequence / long-context decode)
+# ---------------------------------------------------------------------------
+# When every batch row decodes the same position (B=1 with kv-heads folded,
+# the long_500k serving shape), the vmap'd dynamic_slices above become
+# gathers, which GSPMD lowers as full all-gathers of the sequence-sharded
+# cache (~2 GB/step/layer at 512k).  With a *scalar* t the reads stay
+# dynamic-slices on the sharded dim, which partition efficiently
+# (EXPERIMENTS.md P21).
+
+def _batched_slice(arr, start, size):
+    """arr: (B, L, D) -> (B, size, D) at scalar ``start`` along L."""
+    return jax.lax.dynamic_slice(
+        arr, (0, start, 0), (arr.shape[0], size, arr.shape[-1]))
+
+
+def _block_read(arr, blk, size):
+    """Block-aligned read: arr (B, L, D) -> (B, size, D) at row
+    ``blk * size`` (scalar ``blk``).
+
+    Implemented as a one-hot contraction over the block axis instead of
+    a dynamic_slice: on a sequence-sharded cache GSPMD contracts locally
+    and psums only the (B, size, D) result (~KBs), where a dynamic_slice
+    would all-gather the whole cache (EXPERIMENTS.md P22).  Costs
+    O(L * D / size) extra FLOPs -- noise next to the saved wire bytes.
+    """
+    B, L, D = arr.shape
+    nb = L // size
+    a2 = arr.reshape(B, nb, size * D)
+    sel = jax.nn.one_hot(blk, nb, dtype=arr.dtype)        # (nb,)
+    out = jnp.einsum("n,bnf->bf", sel, a2,
+                     preferred_element_type=arr.dtype)
+    return out.reshape(B, size, D)
+
+
+def update_cache_uniform(cache: H1DCache, k_new, v_new, t) -> H1DCache:
+    """k_new: (B, D), v_new: (B, Dv), t: scalar int32 (same for all rows)."""
+    k = jax.lax.dynamic_update_slice(cache.k, k_new[:, None], (0, t, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new[:, None], (0, t, 0))
+    ck, cv = [], []
+    k_lo, v_lo = k, v
+    for l, (ckl, cvl) in enumerate(zip(cache.ck, cache.cv), start=1):
+        c = t >> l
+        pair_k = _block_read(k_lo, c, 2)
+        pair_v = _block_read(v_lo, c, 2)
+        ckl = jax.lax.dynamic_update_slice(
+            ckl, pair_k.mean(1, keepdims=True), (0, c, 0))
+        cvl = jax.lax.dynamic_update_slice(
+            cvl, pair_v.sum(1, keepdims=True), (0, c, 0))
+        ck.append(ckl)
+        cv.append(cvl)
+        k_lo, v_lo = ckl, cvl
+    return H1DCache(k=k, v=v, ck=tuple(ck), cv=tuple(cv))
+
+
+def decode_attend_uniform(cache: H1DCache, q, t, *, nr: int,
+                          softmax_scale=None) -> jnp.ndarray:
+    """q: (B, G, D); t: scalar int32.  Returns (B, G, Dv)."""
+    f32 = jnp.float32
+    B, G, D = q.shape
+    scale = softmax_scale if softmax_scale is not None else 1 / math.sqrt(D)
+    qs = q.astype(f32) * scale
+    Lmax = cache.k.shape[-2]
+    M = hc.num_levels(Lmax, nr)
+
+    logits, values, weights = [], [], []
+
+    def band(keys, vals, mask, wgt):
+        s = jnp.einsum("bgd,bkd->bgk", qs, keys.astype(f32),
+                       preferred_element_type=f32)
+        logits.append(jnp.where(mask[None, None, :], s, NEG_INF))
+        values.append(vals.astype(f32))
+        weights.append(jnp.where(mask, wgt, 0.0))
+
+    blk0 = t // nr
+    s0 = blk0 * nr
+    pos = s0 + jnp.arange(nr)
+    band(_block_read(cache.k, blk0, nr), _block_read(cache.v, blk0, nr),
+         pos <= t, jnp.ones((nr,), f32))
+    band(_block_read(cache.k, jnp.maximum(blk0 - 1, 0), nr),
+         _block_read(cache.v, jnp.maximum(blk0 - 1, 0), nr),
+         jnp.broadcast_to(blk0 >= 1, (nr,)), jnp.ones((nr,), f32))
+    for l in range(1, M):
+        span = nr << l
+        Il = t // span
+        blk = jnp.maximum(Il - 1, 0)
+        first_half_q = (t % span) < (span // 2)
+        key_last_half = jnp.arange(nr) >= nr // 2
+        mask = (Il >= 1) & ~(first_half_q & key_last_half)
+        band(_block_read(cache.ck[l - 1], blk, nr),
+             _block_read(cache.cv[l - 1], blk, nr),
+             mask, jnp.full((nr,), float(1 << l), f32))
+
+    s = jnp.concatenate(logits, axis=-1)              # (B, G, K)
+    vcat = jnp.concatenate(values, axis=-2)           # (B, K, Dv)
+    wcat = jnp.concatenate(weights, axis=-1)          # (K,)
+    m = jnp.maximum(s.max(-1, keepdims=True), -1e30)
+    a = jnp.exp(s - m)
+    num = jnp.einsum("bgk,bkv->bgv", a, vcat)
+    den = jnp.einsum("bgk,k->bg", a, wcat)
+    return (num / jnp.maximum(den, 1e-9)[..., None]).astype(q.dtype)

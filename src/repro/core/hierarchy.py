@@ -1,0 +1,195 @@
+"""Binary-tree hierarchy utilities for H-Transformer-1D attention.
+
+Terminology (paper Eq. 25-33):
+  * ``nr``      -- numerical rank == level-0 block size (paper: N_r).
+  * level-l sequence: the original sequence coarsened ``l`` times; its
+    length is ``L / 2**l`` and it is partitioned into blocks of ``nr``
+    coarse tokens (``nb_l = L / (nr * 2**l)`` blocks).
+  * Queries/keys coarsen with a pairwise *mean* (Eq. 25-26), values and
+    key-weights with a pairwise *sum* (Eq. 27) so that the normalizer
+    ``D = A @ 1`` falls out of the same operator applied to the weight
+    vector.
+
+Partition rule (DESIGN.md section 1.1): a fine token pair ``(i, j)`` is
+attended at the smallest level ``l`` with ``|blk_l(i) - blk_l(j)| <= 1``
+where ``blk_l(x) = x // (nr * 2**l)``.  For ``l >= 1`` this yields the
+uniform quadrant exclusion masks implemented below.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "validate_h1d_shape",
+    "num_levels",
+    "coarsen_mean",
+    "coarsen_sum",
+    "block",
+    "unblock",
+    "shift_blocks",
+    "quadrant_mask",
+    "causal_block_mask",
+    "interp_repeat",
+    "level_assignment_map",
+    "padded_length",
+]
+
+NEG_INF = float(np.finfo(np.float32).min)
+
+
+def padded_length(L: int, nr: int) -> int:
+    """Smallest L' >= L with L' = nr * 2**k (k >= 0)."""
+    if L <= nr:
+        return nr
+    nb = (L + nr - 1) // nr
+    return nr * (1 << max(0, math.ceil(math.log2(nb))))
+
+
+def validate_h1d_shape(L: int, nr: int) -> int:
+    """Check L == nr * 2**k, return number of level-0 blocks."""
+    if nr < 2 or nr & (nr - 1):
+        raise ValueError(f"nr must be a power of two >= 2, got {nr}")
+    if L % nr:
+        raise ValueError(f"L={L} not a multiple of nr={nr}")
+    nb = L // nr
+    if nb & (nb - 1):
+        raise ValueError(f"num blocks L/nr={nb} must be a power of two")
+    return nb
+
+
+def num_levels(L: int, nr: int) -> int:
+    """Number of hierarchy levels M = log2(L / nr); 0 means single block."""
+    nb = validate_h1d_shape(L, nr)
+    return int(math.log2(nb)) if nb > 1 else 0
+
+
+def coarsen_mean(x: jnp.ndarray, axis: int = -2) -> jnp.ndarray:
+    """Pairwise mean along ``axis`` (Eq. 25/26). Length must be even."""
+    shape = list(x.shape)
+    axis = axis % x.ndim
+    shape[axis : axis + 1] = [shape[axis] // 2, 2]
+    return jnp.reshape(x, shape).mean(axis=axis + 1)
+
+
+def coarsen_sum(x: jnp.ndarray, axis: int = -2) -> jnp.ndarray:
+    """Pairwise sum along ``axis`` (Eq. 27)."""
+    shape = list(x.shape)
+    axis = axis % x.ndim
+    shape[axis : axis + 1] = [shape[axis] // 2, 2]
+    return jnp.reshape(x, shape).sum(axis=axis + 1)
+
+
+def coarsen_weighted_mean(x: jnp.ndarray, w: jnp.ndarray):
+    """Weighted pairwise mean along the token axis; returns (coarse_x, coarse_w).
+
+    ``x``: (B, ..., L, D); ``w``: (B, L) (or (L,)).  Padded (weight-0)
+    tokens then do not pollute coarse rows.
+    """
+    wx = w
+    if wx.ndim < x.ndim - 1:  # insert middle broadcast dims after batch
+        shape = (w.shape[0],) + (1,) * (x.ndim - 1 - w.ndim) + (w.shape[-1],)
+        wx = jnp.reshape(w, shape)
+    xw = coarsen_sum(x * wx[..., None], axis=-2)
+    ws = coarsen_sum(w, axis=-1)
+    wsx = ws
+    if wsx.ndim < x.ndim - 1:
+        shape = (ws.shape[0],) + (1,) * (x.ndim - 1 - ws.ndim) + (ws.shape[-1],)
+        wsx = jnp.reshape(ws, shape)
+    return xw / jnp.maximum(wsx, 1.0)[..., None], ws
+
+
+def block(x: jnp.ndarray, n: int, axis: int = -2) -> jnp.ndarray:
+    """(... , L, ...) -> (..., L//n, n, ...) along ``axis``."""
+    shape = list(x.shape)
+    axis = axis % x.ndim
+    shape[axis : axis + 1] = [shape[axis] // n, n]
+    return jnp.reshape(x, shape)
+
+
+def unblock(x: jnp.ndarray, axis: int = -3) -> jnp.ndarray:
+    """Inverse of :func:`block`: merge (nb, n) axes."""
+    shape = list(x.shape)
+    axis = axis % x.ndim
+    shape[axis : axis + 2] = [shape[axis] * shape[axis + 1]]
+    return jnp.reshape(x, shape)
+
+
+def shift_blocks(xb: jnp.ndarray, offset: int, block_axis: int = -3) -> jnp.ndarray:
+    """Return ``yb[i] = xb[i + offset]`` with zero padding out of range.
+
+    ``offset=-1`` gives each block its left neighbour ("prev"),
+    ``offset=+1`` the right neighbour ("next").
+    """
+    axis = block_axis % xb.ndim
+    nb = xb.shape[axis]
+    if offset == 0:
+        return xb
+    pad = [(0, 0)] * xb.ndim
+    if offset > 0:
+        pad[axis] = (0, offset)
+        sl = [slice(None)] * xb.ndim
+        sl[axis] = slice(offset, offset + nb)
+    else:
+        pad[axis] = (-offset, 0)
+        sl = [slice(None)] * xb.ndim
+        sl[axis] = slice(0, nb)
+    return jnp.pad(xb, pad)[tuple(sl)]
+
+
+def quadrant_mask(nq: int, nk: int, kind: str) -> jnp.ndarray:
+    """Boolean (nq, nk) mask of *allowed* entries for level >= 1 blocks.
+
+    ``kind='sub'``  : query block I attends key block I-1.  Excluded:
+        queries in the first half of their span x keys in the last half
+        of the previous block (covered at the finer level).
+    ``kind='super'``: query block I attends key block I+1.  Excluded:
+        last-half queries x first-half keys.
+
+    ``nq`` may exceed ``nk`` (fine-query causal path): the query half is
+    measured against ``nq``, the key half against ``nk``.
+    """
+    q = np.arange(nq)[:, None]
+    k = np.arange(nk)[None, :]
+    if kind == "sub":
+        excl = (q < nq // 2) & (k >= nk // 2)
+    elif kind == "super":
+        excl = (q >= nq // 2) & (k < nk // 2)
+    else:
+        raise ValueError(kind)
+    return jnp.asarray(~excl)
+
+
+def causal_block_mask(n: int) -> jnp.ndarray:
+    """Lower-triangular (n, n) allowed-mask for level-0 diagonal blocks."""
+    return jnp.asarray(np.tril(np.ones((n, n), dtype=bool)))
+
+
+def interp_repeat(x: jnp.ndarray, factor: int, axis: int = -2) -> jnp.ndarray:
+    """Piecewise-constant prolongation P^(l) (Eq. 38-40): repeat rows."""
+    if factor == 1:
+        return x
+    return jnp.repeat(x, factor, axis=axis)
+
+
+def level_assignment_map(L: int, nr: int, causal: bool = False) -> np.ndarray:
+    """(L, L) int map: level at which pair (i, j) is attended; -1 = never.
+
+    Pure-numpy specification of the partition used by property tests and
+    the dense reference oracle.
+    """
+    M = num_levels(L, nr)
+    i = np.arange(L)[:, None]
+    j = np.arange(L)[None, :]
+    out = np.full((L, L), -1, dtype=np.int64)
+    for l in range(max(M, 1) - 1, -1, -1):
+        span = nr * (1 << l)
+        bi, bj = i // span, j // span
+        out[np.abs(bi - bj) <= 1] = l
+    if causal:
+        out[j > i] = -1
+    return out

@@ -1,0 +1,147 @@
+"""Dense reference oracles for H-Transformer-1D attention.
+
+Two independent implementations used by tests and benchmarks:
+
+* :func:`dense_attention` -- standard O(L^2) softmax attention (the
+  paper's baseline Transformer attention, Eq. 1-6).
+* :func:`h1d_dense_oracle` -- O(L^2) *dense reconstruction* of the exact
+  hierarchical approximation: builds the per-level coarse similarity
+  matrices, expands them back to the fine grid (Eq. 49-51) with the
+  disjoint partition masks, and normalizes.  Must match
+  ``h1d_attention`` to float tolerance for every mode.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import hierarchy as hc
+
+NEG_INF = hc.NEG_INF
+
+
+def dense_attention(q, k, v, *, causal=False, kv_weight=None,
+                    softmax_scale=None):
+    """q: (B, G, Lq, D); k, v: (B, Lk, Dv). Standard softmax attention.
+    Supports rectangular (cross-) attention; ``causal`` requires
+    Lq == Lk."""
+    B, G, Lq, D = q.shape
+    kv_g = k.ndim == 4
+    Lk = k.shape[-2]
+    scale = softmax_scale if softmax_scale is not None else 1 / math.sqrt(D)
+    s = jnp.einsum("bgqd,bgkd->bgqk" if kv_g else "bgqd,bkd->bgqk",
+                   q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    allow = jnp.ones((B, 1, Lq, Lk), bool)
+    if kv_weight is not None:
+        allow = jnp.logical_and(allow, (kv_weight > 0)[:, None, None, :])
+    if causal:
+        assert Lq == Lk, "causal dense attention requires square shapes"
+        allow = jnp.logical_and(allow, np.tril(np.ones((Lq, Lk), bool)))
+    s = jnp.where(allow, s, NEG_INF)
+    m = jnp.maximum(s.max(-1, keepdims=True), -1e30)
+    a = jnp.exp(s - m)
+    num = jnp.einsum("bgqk,bgkv->bgqv" if kv_g else "bgqk,bkv->bgqv",
+                     a, v.astype(jnp.float32))
+    den = a.sum(-1, keepdims=True)
+    return (num / jnp.maximum(den, 1e-9)).astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# level masks in coarse coordinates (independent re-derivation)
+# ---------------------------------------------------------------------------
+
+def _level_mask_coarse(Lc: int, nr: int, level: int, causal: bool) -> np.ndarray:
+    """Allowed-mask over coarse pairs (a, b), both at level ``level``."""
+    a = np.arange(Lc)[:, None]
+    b = np.arange(Lc)[None, :]
+    blk_a, blk_b = a // nr, b // nr
+    if level == 0:
+        m = np.abs(blk_a - blk_b) <= 1
+        if causal:
+            m &= b <= a
+    else:
+        diff = blk_a - blk_b
+        m = (diff == 1) if causal else (np.abs(diff) == 1)
+        # exclude pairs covered at level-1: children block distance <= 1
+        child_blk_a = (2 * a) // nr
+        child_blk_b = (2 * b) // nr
+        m &= np.abs(child_blk_a - child_blk_b) >= 2
+    return m
+
+
+def _level_mask_fine_q(L: int, Lc: int, nr: int, level: int) -> np.ndarray:
+    """Allowed-mask over (fine query i, coarse key b) for fine-q causal."""
+    span = nr * (1 << level)
+    i = np.arange(L)[:, None]
+    b = np.arange(Lc)[None, :]
+    blk_i = i // span          # query block at this level
+    blk_b = b // nr            # key block (coarse coords)
+    m = (blk_i - blk_b) == 1   # strict sub-diagonal
+    s_i = (i % span) < span // 2      # query in first half of its span
+    s_b = (b % nr) >= nr // 2         # key in last half of its block
+    m &= ~(s_i & s_b)
+    return m
+
+
+def _expand(x, frow: int, fcol: int):
+    if frow > 1:
+        x = jnp.repeat(x, frow, axis=-2)
+    if fcol > 1:
+        x = jnp.repeat(x, fcol, axis=-1)
+    return x
+
+
+def h1d_dense_oracle(q, k, v, *, nr=16, causal=False, causal_mode="fine-q",
+                     kv_weight=None, softmax_scale=None):
+    """Dense reconstruction of h1d_attention.  Same signature semantics."""
+    B, G, L, D = q.shape
+    M = hc.num_levels(L, nr)
+    scale = softmax_scale if softmax_scale is not None else 1 / math.sqrt(D)
+    f32 = jnp.float32
+    q = q.astype(f32) * scale
+    k = k.astype(f32)
+    v = v.astype(f32)
+    w = (jnp.ones((B, L), f32) if kv_weight is None
+         else jnp.broadcast_to(kv_weight.astype(f32), (B, L)))
+    v = v * w[..., None]
+
+    if M == 0:
+        return dense_attention(q, k, v, causal=causal, kv_weight=kv_weight,
+                               softmax_scale=1.0).astype(v.dtype)
+
+    fine_q = causal and causal_mode == "fine-q"
+    # build the combined fine-grid log-similarity matrix; per-level masked
+    # supports are disjoint by the partition rule, so elementwise max works.
+    s_total = jnp.full((B, G, L, L), NEG_INF, f32)
+    kc, wc, qc, wq = k, w, q, w
+    for l in range(M):
+        if l > 0:
+            kc, _ = hc.coarsen_weighted_mean(kc, wc)
+            wc = hc.coarsen_sum(wc, axis=-1)
+            if not fine_q:
+                qc, _ = hc.coarsen_weighted_mean(qc, wq)
+                wq = hc.coarsen_sum(wq, axis=-1)
+        Lc = kc.shape[-2]
+        if fine_q or l == 0:
+            s = jnp.einsum("bgqd,bkd->bgqk", q if l else qc, kc)
+            mask = (_level_mask_fine_q(L, Lc, nr, l) if l
+                    else _level_mask_coarse(L, nr, 0, causal))
+            s = jnp.where(jnp.asarray(mask)[None, None], s, NEG_INF)
+            s = jnp.where((wc > 0)[:, None, None, :], s, NEG_INF)
+            s = _expand(s, 1, 1 << l)
+        else:
+            s = jnp.einsum("bgqd,bkd->bgqk", qc, kc)
+            mask = _level_mask_coarse(Lc, nr, l, causal)
+            s = jnp.where(jnp.asarray(mask)[None, None], s, NEG_INF)
+            s = jnp.where((wc > 0)[:, None, None, :], s, NEG_INF)
+            s = _expand(s, 1 << l, 1 << l)
+        s_total = jnp.maximum(s_total, s)
+
+    m = jnp.maximum(s_total.max(-1, keepdims=True), -1e30)
+    a = jnp.exp(s_total - m)
+    num = jnp.einsum("bgqk,bkv->bgqv", a, v)
+    den = jnp.einsum("bgqk,bk->bgq", a, w)[..., None]
+    return (num / jnp.maximum(den, 1e-9)).astype(v.dtype)

@@ -1,0 +1,3 @@
+"""Deterministic shardable data pipelines + synthetic task generators."""
+from .pipeline import ZipfLM, HierarchicalLM, file_corpus, Prefetcher
+from .listops import ListOps, VOCAB as LISTOPS_VOCAB, NUM_CLASSES

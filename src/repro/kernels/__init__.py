@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the H-Transformer-1D compute hot-spots."""
+from .ops import band_attention
+from .h1d_block import band_attention_fwd, band_mask, MODES
+from .ref import band_attention_ref
+
+__all__ = ["band_attention", "band_attention_fwd", "band_mask",
+           "band_attention_ref", "MODES"]

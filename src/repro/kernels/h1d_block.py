@@ -1,0 +1,178 @@
+"""Pallas TPU kernel: fused banded block attention for H-Transformer-1D.
+
+This is the compute hot-spot of the paper (Algorithm 1 steps 2/4/5): for
+one hierarchy level, every query block attends its self/prev/next key
+blocks, with the level masks, producing the unnormalized output ``Y``,
+the normalizer contribution ``D`` and the row-max ``m`` in ONE VMEM pass
+-- no (L x L) or even (L x 3*nr) attention tensor ever hits HBM.
+
+TPU adaptation (DESIGN.md section 2): the paper's logical block size
+``nr`` (16 in the LM experiments) is far below the 128x128 MXU tile, so
+the kernel processes *groups* of blocks: a TQ-row query tile (TQ >= 128)
+against its own TQ-key tile plus the ``nr``-wide halo edges of the two
+neighbouring tiles.  The band/quadrant/causal masks are generated from
+global indices with ``broadcasted_iota`` -- no mask tensors in HBM.
+
+Grid: ``(B, G, Lq // TQ)``; GQA is handled by letting the K/V/W
+BlockSpec index maps ignore the group axis ``g`` (no KV replication in
+HBM).  All matmuls accumulate in float32.
+
+Modes (must mirror ``repro.kernels.ref``):
+  * ``l0_bidir``     -- level-0 tridiagonal
+  * ``l0_causal``    -- level-0 causal (tril diagonal + sub-diagonal)
+  * ``coarse_bidir`` -- level>=1 bi-diagonal with quadrant exclusions
+  * ``coarse_causal``-- level>=1 sub-diagonal with quadrant exclusion
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -3.0e38
+_MIN_M = -1e30
+
+MODES = ("l0_bidir", "l0_causal", "coarse_bidir", "coarse_causal")
+
+
+def band_mask(qi, ki, nr: int, mode: str, lk: int):
+    """Allowed-mask from *global* row/col indices (broadcastable shapes).
+
+    Single source of truth for the band structure -- used both inside the
+    kernel (with iota-generated indices) and by the jnp reference.
+    """
+    inb = (ki >= 0) & (ki < lk)
+    bq = qi // nr
+    bk = ki // nr
+    diff = bq - bk
+    if mode == "l0_bidir":
+        allow = jnp.abs(diff) <= 1
+    elif mode == "l0_causal":
+        allow = ((diff == 0) & (ki <= qi)) | (diff == 1)
+    else:
+        half = nr // 2
+        base = (diff == 1) if mode == "coarse_causal" else (jnp.abs(diff) == 1)
+        sub_excl = (diff == 1) & ((qi % nr) < half) & ((ki % nr) >= half)
+        sup_excl = (diff == -1) & ((qi % nr) >= half) & ((ki % nr) < half)
+        allow = base & ~sub_excl & ~sup_excl
+    return allow & inb
+
+
+def _fwd_kernel(*refs, nr: int, mode: str, tq: int, lk: int):
+    causal = mode.endswith("causal")
+    if causal:
+        (q_ref, ks_ref, kp_ref, vs_ref, vp_ref, ws_ref, wp_ref,
+         y_ref, dn_ref, m_ref) = refs
+    else:
+        (q_ref, ks_ref, kp_ref, kn_ref, vs_ref, vp_ref, vn_ref,
+         ws_ref, wp_ref, wn_ref, y_ref, dn_ref, m_ref) = refs
+
+    it = pl.program_id(2)
+    f32 = jnp.float32
+
+    q = q_ref[0, 0].astype(f32)                       # (TQ, d)
+    qi = it * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, 1), 0)
+
+    def term(k, v, w, k0):
+        """k: (TK, d), v: (TK, dv), w: (TK,), k0: global col offset."""
+        tk = k.shape[0]
+        ki = k0 + jax.lax.broadcasted_iota(jnp.int32, (1, tk), 1)
+        s = jax.lax.dot_general(
+            q, k.astype(f32), (((1,), (1,)), ((), ())),
+            preferred_element_type=f32)                # (TQ, TK)
+        allow = band_mask(qi, ki, nr, mode, lk) & (w[None, :] > 0)
+        return jnp.where(allow, s, NEG_INF), v.astype(f32), w.astype(f32)
+
+    terms = [
+        term(ks_ref[0], vs_ref[0], ws_ref[0], it * tq),
+        term(kp_ref[0, tq - nr:, :], vp_ref[0, tq - nr:, :],
+             wp_ref[0, tq - nr:], it * tq - nr),
+    ]
+    if not causal:
+        terms.append(
+            term(kn_ref[0, :nr, :], vn_ref[0, :nr, :], wn_ref[0, :nr],
+                 (it + 1) * tq))
+
+    m = jnp.maximum(
+        functools.reduce(jnp.maximum, [s.max(axis=1) for s, _, _ in terms]),
+        _MIN_M)                                        # (TQ,)
+    y = None
+    dn = None
+    for s, v, w in terms:
+        a = jnp.exp(s - m[:, None])
+        yt = jax.lax.dot_general(a, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=f32)
+        dt = jnp.sum(a * w[None, :], axis=1)
+        y = yt if y is None else y + yt
+        dn = dt if dn is None else dn + dt
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    dn_ref[0, 0] = dn.astype(dn_ref.dtype)
+    m_ref[0, 0] = m.astype(m_ref.dtype)
+
+
+def band_attention_fwd(
+    q: jnp.ndarray,   # (B, G, L, d) -- pre-scaled queries
+    k: jnp.ndarray,   # (B, L, d)
+    v: jnp.ndarray,   # (B, L, dv)
+    w: jnp.ndarray,   # (B, L) key weights (>0 == valid)
+    *,
+    nr: int,
+    mode: str,
+    tq: int = 128,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused banded block attention.  Returns float32 (y, dn, m):
+    y (B, G, L, dv), dn (B, G, L), m (B, G, L)."""
+    assert mode in MODES, mode
+    B, G, L, d = q.shape
+    dv = v.shape[-1]
+    assert L % tq == 0 and tq % nr == 0 and tq >= nr, (L, tq, nr)
+    nt = L // tq
+    causal = mode.endswith("causal")
+    f32 = jnp.float32
+
+    self_map = lambda b, g, i: (b, i, 0)
+    prev_map = lambda b, g, i: (b, jnp.maximum(i - 1, 0), 0)
+    next_map = lambda b, g, i: (b, jnp.minimum(i + 1, nt - 1), 0)
+    wself_map = lambda b, g, i: (b, i)
+    wprev_map = lambda b, g, i: (b, jnp.maximum(i - 1, 0))
+    wnext_map = lambda b, g, i: (b, jnp.minimum(i + 1, nt - 1))
+
+    in_specs = [pl.BlockSpec((1, 1, tq, d), lambda b, g, i: (b, g, i, 0))]
+    inputs = [q]
+    kmaps = [self_map, prev_map] + ([] if causal else [next_map])
+    wmaps = [wself_map, wprev_map] + ([] if causal else [wnext_map])
+    for mp in kmaps:
+        in_specs.append(pl.BlockSpec((1, tq, d), mp))
+        inputs.append(k)
+    for mp in kmaps:
+        in_specs.append(pl.BlockSpec((1, tq, dv), mp))
+        inputs.append(v)
+    for mp in wmaps:
+        in_specs.append(pl.BlockSpec((1, tq), mp))
+        inputs.append(w)
+
+    out_shape = (
+        jax.ShapeDtypeStruct((B, G, L, dv), f32),
+        jax.ShapeDtypeStruct((B, G, L), f32),
+        jax.ShapeDtypeStruct((B, G, L), f32),
+    )
+    out_specs = (
+        pl.BlockSpec((1, 1, tq, dv), lambda b, g, i: (b, g, i, 0)),
+        pl.BlockSpec((1, 1, tq), lambda b, g, i: (b, g, i)),
+        pl.BlockSpec((1, 1, tq), lambda b, g, i: (b, g, i)),
+    )
+
+    kernel = functools.partial(_fwd_kernel, nr=nr, mode=mode, tq=tq, lk=L)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, G, nt),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*inputs)

@@ -1,0 +1,123 @@
+"""Jit'd differentiable wrapper around the banded block attention kernel.
+
+``band_attention(q, k, v, w, nr=..., mode=..., impl=...)``:
+
+* ``impl='pallas'``            -- Pallas TPU kernel forward.
+* ``impl='pallas_interpret'``  -- Pallas kernel in interpret mode (CPU
+  validation path; executes the kernel body in Python).
+* ``impl='jnp'``               -- blocked XLA implementation (used for the
+  multi-pod dry-run on host-platform devices and as the backward body).
+
+The custom VJP uses the pure-jnp reference as the differentiable body:
+forward runs the fused kernel, backward is ``jax.vjp`` of the reference
+(numerically identical math), so gradients are exact w.r.t. the kernel
+semantics.  A hand-written Pallas backward is a recorded perf-pass item
+(EXPERIMENTS.md section Perf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import h1d_block
+from . import ref as kref
+
+
+def _blocked_jnp(q, k, v, w, *, nr: int, mode: str):
+    """O(L * nr) blocked XLA implementation (linear-memory reference).
+
+    Mirrors the kernel tiling but with plain jnp ops; this is what the
+    distributed dry-run lowers (Pallas TPU kernels cannot compile for the
+    host platform).
+
+    ``k``/``v`` may be (B, L, d) (shared across the G query groups) or
+    (B, G, L, d) (per-head KV, GSPMD-friendly: the head axis flows
+    through every einsum, so the partitioner never sees size-1 dims or
+    sharded-axis splits).
+    """
+    from repro.core import hierarchy as hc
+
+    B, G, L, d = q.shape
+    kv_g = k.ndim == 4
+    f32 = jnp.float32
+    causal = mode.endswith("causal")
+    qb = hc.block(q.astype(f32), nr)                    # (B,G,NB,nr,d)
+    kb = hc.block(k.astype(f32), nr)
+    vb = hc.block(v.astype(f32), nr)
+    wb = hc.block(w.astype(f32), nr, axis=-1)
+    nb = qb.shape[-3]
+    s_eq = "bgnqd,bgnkd->bgnqk" if kv_g else "bgnqd,bnkd->bgnqk"
+    y_eq = "bgnqk,bgnkv->bgnqv" if kv_g else "bgnqk,bnkv->bgnqv"
+    w_allow = (lambda wt: (wt > 0)[:, None, :, None, :])
+
+    terms = []
+
+    def add(offset):
+        kt = hc.shift_blocks(kb, offset)
+        vt = hc.shift_blocks(vb, offset)
+        wt = hc.shift_blocks(wb, offset, block_axis=-2)
+        qi = jnp.arange(nr)[:, None] + jnp.arange(nb)[:, None, None] * nr
+        ki = qi.transpose(0, 2, 1) + offset * nr
+        allow = h1d_block.band_mask(qi, ki, nr, mode, L)      # (nb, nr, nr)
+        s = jnp.einsum(s_eq, qb, kt, preferred_element_type=f32)
+        allow = allow[None, None] & w_allow(wt)
+        terms.append((jnp.where(allow, s, h1d_block.NEG_INF), vt, wt))
+
+    add(0)
+    add(-1)
+    if not causal:
+        add(1)
+
+    m = jnp.maximum(
+        functools.reduce(jnp.maximum, [t[0].max(-1) for t in terms]),
+        h1d_block._MIN_M)
+    y = dn = None
+    for s, vt, wt in terms:
+        a = jnp.exp(s - m[..., None])
+        yt = jnp.einsum(y_eq, a, vt, preferred_element_type=f32)
+        dt = jnp.einsum("bgnqk,bnk->bgnq", a, wt,
+                        preferred_element_type=f32)
+        y = yt if y is None else y + yt
+        dn = dt if dn is None else dn + dt
+    return (hc.unblock(y, axis=-3), hc.unblock(dn, axis=-2),
+            hc.unblock(m, axis=-2))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _band_attention_kernel(q, k, v, w, nr, mode, tq, interpret):
+    return h1d_block.band_attention_fwd(
+        q, k, v, w, nr=nr, mode=mode, tq=tq, interpret=interpret)
+
+
+def _fwd(q, k, v, w, nr, mode, tq, interpret):
+    out = h1d_block.band_attention_fwd(
+        q, k, v, w, nr=nr, mode=mode, tq=tq, interpret=interpret)
+    return out, (q, k, v, w)
+
+
+def _bwd(nr, mode, tq, interpret, res, cts):
+    q, k, v, w = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_, w_: kref.band_attention_ref(
+            q_, k_, v_, w_, nr=nr, mode=mode), q, k, v, w)
+    return vjp(cts)
+
+
+_band_attention_kernel.defvjp(_fwd, _bwd)
+
+
+def band_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
+    *, nr: int, mode: str, impl: str = "jnp", tq: int = 128,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Banded block attention for one hierarchy level.  See module doc."""
+    L = q.shape[-2]
+    if impl == "jnp" or L < tq:
+        return _blocked_jnp(q, k, v, w, nr=nr, mode=mode)
+    if impl in ("pallas", "pallas_interpret"):
+        return _band_attention_kernel(
+            q, k, v, w, nr, mode, tq, impl == "pallas_interpret")
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the banded block attention kernel.
+
+Dense O(L * L) implementation of exactly the same semantics as
+``h1d_block.band_attention_fwd`` -- used by kernel tests
+(``assert_allclose`` sweeps) and as the differentiable body for the
+custom-VJP backward pass in ``ops.py``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .h1d_block import band_mask, NEG_INF, _MIN_M
+
+
+def band_attention_ref(q, k, v, w, *, nr: int, mode: str):
+    """q: (B, G, L, d) pre-scaled; k: (B, L, d); v: (B, L, dv); w: (B, L).
+    Returns float32 (y, dn, m) identical to the Pallas kernel."""
+    B, G, L, d = q.shape
+    f32 = jnp.float32
+    qi = jnp.arange(L)[:, None]
+    ki = jnp.arange(L)[None, :]
+    allow = band_mask(qi, ki, nr, mode, L)                    # (L, L)
+    s = jnp.einsum("bgqd,bkd->bgqk", q.astype(f32), k.astype(f32),
+                   preferred_element_type=f32)
+    allow = allow[None, None] & (w > 0)[:, None, None, :]
+    s = jnp.where(allow, s, NEG_INF)
+    m = jnp.maximum(s.max(-1), _MIN_M)                        # (B, G, L)
+    a = jnp.exp(s - m[..., None])
+    a = jnp.where(allow, a, 0.0)
+    y = jnp.einsum("bgqk,bkv->bgqv", a, v.astype(f32),
+                   preferred_element_type=f32)
+    dn = jnp.einsum("bgqk,bk->bgq", a, w.astype(f32),
+                    preferred_element_type=f32)
+    return y, dn, m

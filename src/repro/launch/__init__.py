@@ -1,0 +1,6 @@
+"""Launchers: mesh construction, multi-pod dry-run, roofline, train/serve.
+
+NOTE: do NOT import dryrun/roofline from here -- they set XLA_FLAGS on
+import and must be invoked as entry points (python -m repro.launch.dryrun).
+"""
+from .mesh import make_production_mesh, make_mesh, PEAK_FLOPS_BF16, HBM_BW, ICI_BW

@@ -1,0 +1,250 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes and dump memory/cost/collective analyses.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as S
+from repro.models import get_model, set_mesh_axes
+from repro.models.common import ModelConfig
+from repro.parallel import (param_shardings, batch_shardings,
+                            cache_shardings, replicated)
+from repro.train import TrainConfig, make_train_step, TrainState
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "../../../artifacts/dryrun")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_RE2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(txt):
+    """Sum byte sizes of all array shapes in an HLO result-type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(txt):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str):
+    """Per-collective wire-byte estimates from optimized HLO.
+
+    For each op we estimate bytes crossing a link per participating
+    device with ring formulas (documented in EXPERIMENTS.md):
+      all-reduce: 2 (n-1)/n * size ; all-gather: (n-1)/n * size(out)
+      reduce-scatter: (n-1)/n * size(in) ~ (n-1) * size(out)
+      all-to-all / collective-permute: size
+    Returns dict kind -> {count, result_bytes, wire_bytes}.
+    """
+    out = {k: {"count": 0, "result_bytes": 0, "wire_bytes": 0.0}
+           for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (\([^)]*\)|\S+) ([\w\-]+)", ls)
+        if not m:
+            continue
+        kind_raw = m.group(2)
+        kind = next((k for k in COLLECTIVES
+                     if kind_raw == k or kind_raw.startswith(k + ".")), None)
+        if kind is None or "-start" in kind_raw and False:
+            continue
+        size = _shape_bytes(m.group(1))
+        n = 1
+        g = _GROUPS_RE.search(ls)
+        if g:
+            n = len(g.group(1).split(","))
+        else:
+            g2 = _GROUPS_RE2.search(ls)
+            if g2:
+                n = int(g2.group(2))
+        if kind == "all-reduce":
+            wire = 2 * (n - 1) / max(n, 1) * size
+        elif kind == "all-gather":
+            wire = (n - 1) / max(n, 1) * size
+        elif kind == "reduce-scatter":
+            wire = (n - 1) * size
+        else:
+            wire = size
+        out[kind]["count"] += 1
+        out[kind]["result_bytes"] += size
+        out[kind]["wire_bytes"] += wire
+    return out
+
+
+def _shardings_for_tree(mesh, tree, spec_tree=None):
+    if spec_tree is not None:
+        return param_shardings(mesh, spec_tree)
+    return jax.tree.map(lambda _: replicated(mesh), tree)
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, mesh):
+    """Returns (fn, arg_structs, in_shardings[, out_shardings])."""
+    kind, seq, batch = S.cell(cfg, shape_name)
+    fns = get_model(cfg)
+    pstruct = S.param_struct(cfg)
+    pspecs = S.param_specs(cfg)
+    psh = param_shardings(mesh, pspecs)
+
+    if kind == "train":
+        from repro.train import make_optimizer
+        from repro.optim import AdamWState
+        tc = TrainConfig()
+        bstruct = S.train_batch_specs(cfg, seq, batch)
+        bsh = batch_shardings(mesh, bstruct)
+        opt_like = jax.eval_shape(lambda p: make_optimizer(tc).init(p),
+                                  pstruct)
+        state_struct = TrainState(
+            jax.ShapeDtypeStruct((), jnp.int32), pstruct, opt_like, None)
+        # optimizer moments mirror the param sharding; step replicated
+        opt_sh = AdamWState(replicated(mesh), psh, psh)
+        state_sh = TrainState(replicated(mesh), psh, opt_sh, None)
+        step_fn = make_train_step(cfg, tc)
+        return step_fn, (state_struct, bstruct), (state_sh, bsh)
+
+    if kind == "prefill":
+        bstruct = S.prefill_batch_specs(cfg, seq, batch)
+        bsh = batch_shardings(mesh, bstruct)
+        fn = lambda p, b: fns.prefill(p, cfg, b, seq)
+        return fn, (pstruct, bstruct), (psh, bsh)
+
+    # decode
+    caches, tok, t = S.decode_arg_specs(cfg, seq, batch)
+    csh = cache_shardings(mesh, caches, batch=batch,
+                          kv_heads=max(cfg.num_kv_heads, 1),
+                          long_context=batch == 1,
+                          num_layers=cfg.num_layers)
+    toksh = (batch_shardings(mesh, tok) if batch > 1 else replicated(mesh))
+    fn = lambda p, c, token, tt: fns.decode_step(p, cfg, c, token, tt)
+    # pin the OUTPUT cache sharding too: otherwise XLA may pick a
+    # different layout for the updated cache and round-trip it through
+    # an all-to-all every step
+    out_sh = (replicated(mesh), csh)
+    return (fn, (pstruct, caches, tok, t), (psh, csh, toksh, toksh),
+            out_sh)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str = ARTIFACT_DIR, cfg: ModelConfig = None,
+             tag: str = ""):
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    label = f"{arch}__{shape_name}__{mesh_name}{tag}"
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, label + ".json")
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "ok": False}
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        set_mesh_axes(mesh.shape.get("model"))
+        if cfg is None:
+            cfg = get_config(arch)
+        built = build_cell(cfg, shape_name, mesh)
+        fn, args, in_sh = built[:3]
+        out_sh = built[3] if len(built) > 3 else None
+        with jax.set_mesh(mesh):
+            jit_kw = {"in_shardings": in_sh}
+            if out_sh is not None:
+                jit_kw["out_shardings"] = out_sh
+            lowered = jax.jit(fn, **jit_kw).lower(*args)
+            compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        rec["collectives"] = parse_collectives(hlo)
+        rec["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+        rec["cost"] = {k: float(v) for k, v in dict(cost).items()
+                       if isinstance(v, (int, float))}
+        rec["hlo_bytes"] = len(hlo)
+        rec["seconds"] = time.time() - t0
+        rec["num_devices"] = int(mesh.size)
+        rec["ok"] = True
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        rec["seconds"] = time.time() - t0
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = "OK" if rec["ok"] else "FAIL"
+    print(f"[dryrun] {label}: {status} ({rec['seconds']:.1f}s)", flush=True)
+    if not rec["ok"]:
+        print(rec["error"], flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.multi_pod or not args.single_pod:
+        meshes.append(True)
+    if args.single_pod or not args.multi_pod:
+        meshes.append(False)
+    meshes = sorted(set(meshes))   # [False, True] default
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    n_ok = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                path = os.path.join(
+                    ARTIFACT_DIR, f"{arch}__{shape}__{mesh_name}.json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("ok"):
+                            continue
+                rec = run_cell(arch, shape, mp)
+                n_ok += rec["ok"]
+                n_fail += not rec["ok"]
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,249 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Roofline analysis per (arch x shape) on the single-pod 16x16 mesh.
+
+Methodology (documented in EXPERIMENTS.md section Roofline):
+XLA's ``cost_analysis()`` counts while-loop bodies ONCE, so scanned layer
+stacks would be undercounted.  We therefore lower each cell twice with a
+python-loop layer stack at depths (u, 2u) -- u = the arch's cadence unit
+(1 for homogeneous stacks, 6 for gemma3/zamba2) -- and extrapolate:
+
+    total(L) = c(u) + (L/u - 1) * (c(2u) - c(u))
+
+which is exact for homogeneous/periodic stacks.  Collective wire bytes
+come from the optimized per-device HLO of the same unrolled compiles
+(ring formulas; see dryrun.parse_collectives).
+
+Terms (TPU v5e constants in launch/mesh.py):
+    compute   = flops_per_device / PEAK_FLOPS_BF16
+    memory    = bytes_per_device / HBM_BW
+    collective= wire_bytes_per_device / ICI_BW
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.roofline [--arch A] [--shape S]
+Artifacts: artifacts/roofline/<arch>__<shape>.json (+ summary table)
+"""
+import argparse
+import dataclasses
+import json
+import math
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.launch.mesh import (make_production_mesh, PEAK_FLOPS_BF16,
+                               HBM_BW, ICI_BW)
+from repro.launch import specs as S
+from repro.launch.dryrun import build_cell, parse_collectives
+from repro.models import get_model, set_mesh_axes
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "../../../artifacts/roofline")
+CHIPS = 256
+
+
+def cadence_unit(cfg) -> int:
+    if cfg.family == "hybrid":
+        return cfg.hybrid_attn_every
+    if cfg.global_every > 0:
+        return cfg.global_every
+    return 1
+
+
+def _depth_cfg(cfg, layers: int):
+    kw = dict(num_layers=layers, force_loop=True)
+    if cfg.family == "encdec":
+        kw["encoder_layers"] = layers
+    return dataclasses.replace(cfg, **kw)
+
+
+def _measure(cfg, shape_name, mesh):
+    fn, args, in_sh = build_cell(cfg, shape_name, mesh)
+    with jax.set_mesh(mesh):
+        compiled = jax.jit(fn, in_shardings=in_sh).lower(*args).compile()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    wire = sum(v["wire_bytes"] for v in coll.values())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "wire_bytes": wire,
+        "collectives": coll,
+    }
+
+
+def param_count(cfg):
+    struct = S.param_struct(cfg)
+    total = 0
+    active = 0
+    flat = jax.tree_util.tree_flatten_with_path(struct)[0]
+    for path, leaf in flat:
+        n = int(np.prod(leaf.shape))
+        total += n
+        keys = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        if cfg.moe_experts and any(w in keys for w in
+                                   ("/moe/w1", "/moe/w2", "/moe/w3")):
+            active += n * cfg.moe_top_k / cfg.moe_experts
+        else:
+            active += n
+    return total, active
+
+
+def _encdec_split(cfg):
+    """(enc_params, dec_params) from the param tree paths."""
+    struct = S.param_struct(cfg)
+    enc = dec = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(struct)[0]:
+        n = int(np.prod(leaf.shape))
+        keys = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        if keys.startswith("encoder"):
+            enc += n
+        else:
+            dec += n
+    return enc, dec
+
+
+def model_flops(cfg, shape_name):
+    """6*N*D train / 2*N*D per decode token (active params for MoE;
+    enc/dec split by the tokens each stack actually processes)."""
+    seq, batch, kind = SHAPES[shape_name]
+    total, active = param_count(cfg)
+    mult = {"train": 6.0, "prefill": 2.0, "decode": 2.0}[kind]
+    if cfg.family == "encdec":
+        from repro.configs.seamless_m4t_medium import DECODER_LEN
+        enc, dec = _encdec_split(cfg)
+        dec_tokens = batch * (min(DECODER_LEN, seq) if kind != "decode"
+                              else 1)
+        enc_tokens = batch * seq if kind != "decode" else 0
+        enc_mult = 2.0 if kind == "prefill" else (6.0 if kind == "train"
+                                                  else 2.0)
+        return enc_mult * enc * enc_tokens + mult * dec * dec_tokens
+    if kind == "train":
+        return 6.0 * active * batch * seq
+    if kind == "prefill":
+        return 2.0 * active * batch * seq
+    return 2.0 * active * batch          # one token per sequence
+
+
+def analyze_cell(arch: str, shape_name: str, cfg=None, tag=""):
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    mesh = make_production_mesh(multi_pod=False)
+    set_mesh_axes(mesh.shape.get("model"))
+    if cfg is None:
+        cfg = get_config(arch)
+    u = cadence_unit(cfg)
+    L = cfg.num_layers
+    rec = {"arch": arch, "shape": shape_name, "tag": tag, "ok": False,
+           "unit": u, "num_layers": L}
+    t0 = time.time()
+    try:
+        c1 = _measure(_depth_cfg(cfg, u), shape_name, mesh)
+        c2 = _measure(_depth_cfg(cfg, 2 * u), shape_name, mesh)
+        reps = L / u - 1.0
+        tot = {k: c1[k] + reps * (c2[k] - c1[k])
+               for k in ("flops", "bytes", "wire_bytes")}
+        terms = {
+            "compute_s": tot["flops"] / PEAK_FLOPS_BF16,
+            "memory_s": tot["bytes"] / HBM_BW,
+            "collective_s": tot["wire_bytes"] / ICI_BW,
+        }
+        dom = max(terms, key=terms.get)
+        mf = model_flops(cfg, shape_name)
+        hlo_global = tot["flops"] * CHIPS
+        rec.update({
+            "per_device": tot,
+            "per_layer_unit": {k: c2[k] - c1[k]
+                               for k in ("flops", "bytes", "wire_bytes")},
+            "collectives_depth2": c2["collectives"],
+            "terms_s": terms,
+            "dominant": dom,
+            "model_flops_global": mf,
+            "hlo_flops_global": hlo_global,
+            "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+            "roofline_fraction": (max(terms.values()) and
+                                  terms["compute_s"] / max(terms.values())),
+            "seconds": time.time() - t0,
+            "ok": True,
+        })
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        rec["seconds"] = time.time() - t0
+    out = os.path.join(ARTIFACT_DIR, f"{arch}__{shape_name}{tag}.json")
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = "OK" if rec["ok"] else "FAIL"
+    if rec["ok"]:
+        t = rec["terms_s"]
+        print(f"[roofline] {arch}__{shape_name}{tag}: {status} "
+              f"compute={t['compute_s']*1e3:.2f}ms "
+              f"memory={t['memory_s']*1e3:.2f}ms "
+              f"coll={t['collective_s']*1e3:.2f}ms dom={rec['dominant']} "
+              f"useful={rec['useful_ratio']:.2f} ({rec['seconds']:.0f}s)",
+              flush=True)
+    else:
+        print(f"[roofline] {arch}__{shape_name}{tag}: FAIL {rec['error']}",
+              flush=True)
+    return rec
+
+
+def summarize(out_path=None):
+    rows = []
+    for fname in sorted(os.listdir(ARTIFACT_DIR)):
+        if not fname.endswith(".json"):
+            continue
+        with open(os.path.join(ARTIFACT_DIR, fname)) as f:
+            r = json.load(f)
+        if r.get("ok") and not r.get("tag"):
+            t = r["terms_s"]
+            rows.append((r["arch"], r["shape"], t["compute_s"],
+                         t["memory_s"], t["collective_s"], r["dominant"],
+                         r["useful_ratio"]))
+    lines = ["| arch | shape | compute (ms) | memory (ms) | collective (ms)"
+             " | dominant | useful ratio |",
+             "|---|---|---|---|---|---|---|"]
+    for a, s, c, m, co, d, u in rows:
+        lines.append(f"| {a} | {s} | {c*1e3:.2f} | {m*1e3:.2f} | "
+                     f"{co*1e3:.2f} | {d.replace('_s','')} | {u:.2f} |")
+    table = "\n".join(lines)
+    if out_path:
+        with open(out_path, "w") as f:
+            f.write(table + "\n")
+    return table
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--summary", action="store_true")
+    args = ap.parse_args()
+    if args.summary:
+        print(summarize())
+        return
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    for arch in archs:
+        for shape in shapes:
+            path = os.path.join(ARTIFACT_DIR, f"{arch}__{shape}.json")
+            if args.skip_existing and os.path.exists(path):
+                with open(path) as f:
+                    if json.load(f).get("ok"):
+                        continue
+            analyze_cell(arch, shape)
+    print(summarize())
+
+
+if __name__ == "__main__":
+    main()

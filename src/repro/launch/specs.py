@@ -1,0 +1,89 @@
+"""ShapeDtypeStruct input builders for every (arch x shape) dry-run cell.
+
+``input_specs(cfg, shape_name)`` returns ``(kind, args, shardings_fn)``
+where ``args`` are ShapeDtypeStructs (no allocation) for the lowered
+function and ``shardings_fn(mesh)`` produces the matching in_shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct as SDS
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES
+from repro.configs.seamless_m4t_medium import DECODER_LEN
+from repro.models import ModelConfig, get_model
+from repro.parallel import batch_shardings, cache_shardings, replicated
+
+
+def train_batch_specs(cfg: ModelConfig, seq: int, batch: int) -> Dict:
+    i32 = jnp.int32
+    if cfg.family == "encdec":
+        return {"frames": SDS((batch, seq, cfg.d_model), cfg.jdtype),
+                "tokens": SDS((batch, min(DECODER_LEN, seq)), i32)}
+    if cfg.family == "vlm":
+        toks = max(seq - cfg.prefix_len, cfg.nr)
+        return {"tokens": SDS((batch, toks), i32),
+                "patch_embeds": SDS((batch, cfg.prefix_len, cfg.d_model),
+                                    cfg.jdtype)}
+    return {"tokens": SDS((batch, seq), i32)}
+
+
+def prefill_batch_specs(cfg: ModelConfig, seq: int, batch: int) -> Dict:
+    return train_batch_specs(cfg, seq, batch)
+
+
+def decode_arg_specs(cfg: ModelConfig, seq: int, batch: int):
+    """Returns (caches_struct, token_struct, t_struct)."""
+    fns = get_model(cfg)
+    i32 = jnp.int32
+    if cfg.family == "encdec":
+        # caches come from prefill (need encoder memory shapes)
+        batch_specs = {
+            "frames": SDS((batch, seq, cfg.d_model), cfg.jdtype),
+            "tokens": SDS((batch, min(DECODER_LEN, seq)), i32)}
+        _, caches, _ = jax.eval_shape(
+            lambda p, b: fns.prefill(p, cfg, b, min(DECODER_LEN, seq)),
+            param_struct(cfg), batch_specs)
+    else:
+        caches = jax.eval_shape(
+            lambda p: fns.init_caches(p, cfg, batch, seq), param_struct(cfg))
+    return caches, SDS((batch,), i32), SDS((batch,), i32)
+
+
+_PSTRUCT_CACHE: Dict[Tuple, Tuple] = {}
+
+
+def _param_struct_cached(cfg: ModelConfig):
+    import dataclasses
+    key = dataclasses.astuple(cfg)
+    if key not in _PSTRUCT_CACHE:
+        fns = get_model(cfg)
+        captured = {}
+
+        def f(k):
+            p, s = fns.init(k, cfg)
+            captured["specs"] = s
+            return p
+
+        struct = jax.eval_shape(f, jax.random.PRNGKey(0))
+        _PSTRUCT_CACHE[key] = (struct, captured["specs"])
+    return _PSTRUCT_CACHE[key]
+
+
+def param_struct(cfg: ModelConfig):
+    return _param_struct_cached(cfg)[0]
+
+
+def param_specs(cfg: ModelConfig):
+    return _param_struct_cached(cfg)[1]
+
+
+def cell(cfg: ModelConfig, shape_name: str):
+    """Returns (kind, seq, batch)."""
+    seq, batch, kind = SHAPES[shape_name]
+    return kind, seq, batch

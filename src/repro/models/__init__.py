@@ -1,0 +1,3 @@
+"""Model zoo: dense GQA, MoE, encoder-decoder, VLM, SSM (mamba2), hybrid."""
+from .common import ModelConfig, set_mesh_axes
+from .registry import get_model, ModelFns

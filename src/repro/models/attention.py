@@ -1,0 +1,281 @@
+"""Attention layer: H1D (paper), full (baseline), block-local (sliding
+window) -- with train, prefill and single-token decode paths.
+
+Cache layouts (per layer):
+  * h1d     -- ``repro.core.h1d_decode.H1DCache`` with batch*kv_heads
+               folded into the leading dim (hierarchical coarse levels).
+  * full    -- dict(k=(B, L, Hkv, D), v=..., )
+  * local   -- same as full but logically a ring of the last 2*window
+               tokens (stored full-size for simplicity of paging;
+               the serve engine may allocate only 2*window).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import (h1d_attention, h1d_attention_mha, dense_attention,
+                        h1d_decode)
+from repro.core import hierarchy as hc
+from repro.kernels import band_attention
+from .common import (ModelConfig, dense_init, dense_apply, rmsnorm_init,
+                     rmsnorm_apply, apply_rope, logical, shard_if_divisible,
+                     tp_size)
+
+
+def attn_init(key, cfg: ModelConfig, dtype):
+    keys = jax.random.split(key, 4)
+    hq, hkv, hd, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    params, specs = {}, {}
+    # K and V are fused into one projection (the split point hkv*hd is a
+    # multiple of the 2*hkv*hd/TP shard size, so GSPMD splits cleanly);
+    # fusing Q too would break shard alignment under GQA.  One fewer
+    # backward all-reduce per layer.
+    #
+    # Head-aware sharding: project outputs are sharded over "model" only
+    # when the HEAD count divides the TP degree -- otherwise the
+    # (B,S,H,hd) reshape is inexpressible for GSPMD and every layer pays
+    # an all-gather (EXPERIMENTS.md P13).  Replicating the (small) KV
+    # projection is cheaper than gathering (B,S,Hkv,hd) activations.
+    tp = tp_size() or 1
+    p, s = dense_init(keys[0], d, hq * hd, dtype, bias=cfg.qkv_bias,
+                      out_shard=hq % tp == 0)
+    params["wq"], specs["wq"] = p, s
+    p, s = dense_init(keys[1], d, 2 * hkv * hd, dtype, bias=cfg.qkv_bias,
+                      out_shard=hkv % tp == 0)
+    params["wkv"], specs["wkv"] = p, s
+    p, s = dense_init(keys[3], hq * hd, d, dtype, in_shard=True,
+                      out_shard=False, scale=1.0 / math.sqrt(hq * hd))
+    params["wo"], specs["wo"] = p, s
+    if cfg.qk_norm:
+        for n in ("qn", "kn"):
+            p, s = rmsnorm_init(hd, dtype)
+            params[n], specs[n] = p, s
+    return params, specs
+
+
+def _project_qkv(p, cfg: ModelConfig, x, positions):
+    B, S, _ = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = dense_apply(p["wq"], x).reshape(B, S, hq, hd)
+    kv = dense_apply(p["wkv"], x)
+    k, v = jnp.split(kv, 2, axis=-1)
+    k = k.reshape(B, S, hkv, hd)
+    v = v.reshape(B, S, hkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["qn"], q)
+        k = rmsnorm_apply(p["kn"], k)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    tp = tp_size() or 1
+    qax = "model" if hq % tp == 0 else None
+    kax = "model" if hkv % tp == 0 else None
+    q = logical(q, ("pod", "data"), None, qax, None)
+    k = logical(k, ("pod", "data"), None, kax, None)
+    v = logical(v, ("pod", "data"), None, kax, None)
+    return q, k, v
+
+
+def _heads_as_g(q, k, v):
+    """GSPMD-friendly multi-head layout: q (B, L, Hq, D),
+    k/v (B, L, Hkv, D) -> (B, Hq, L, D) for all three (KV repeated to Hq).
+
+    The head axis becomes the core's G dim and flows through every einsum
+    unchanged -- no sharded-dim splits/merges or size-1 batch dims, so
+    the SPMD partitioner never falls back to full rematerialization.
+    On real TPU the Pallas path instead folds GQA into the kernel grid
+    (BlockSpec index maps broadcast KV without repeats).
+    """
+    Hq, Hkv = q.shape[2], k.shape[2]
+    if Hq != Hkv:
+        G = Hq // Hkv
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    perm = (0, 2, 1, 3)
+    return q.transpose(perm), k.transpose(perm), v.transpose(perm)
+
+
+def _local_attention(q, k, v, window: int, causal: bool, kv_weight, impl):
+    """Block-local sliding-window attention via the band kernel with
+    block size = window (the paper's 'Local Attention' baseline)."""
+    B, L, Hq, D = q.shape
+    Lp = ((L + window - 1) // window) * window
+    pad = Lp - L
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    w = jnp.ones((B, Lp), jnp.float32)
+    if kv_weight is not None:
+        w = w * jnp.pad(kv_weight, ((0, 0), (0, pad)))
+    elif pad:
+        w = w.at[:, L:].set(0.0)
+    scale = 1.0 / math.sqrt(D)
+    mode = "l0_causal" if causal else "l0_bidir"
+    qh, kh, vh = _heads_as_g(q, k, v)
+    y, dn, _ = band_attention(qh * scale, kh, vh * w[:, None, :, None], w,
+                              nr=window, mode=mode, impl="jnp")
+    z = (y / jnp.maximum(dn, 1e-9)[..., None]).astype(q.dtype)
+    return z.transpose(0, 2, 1, 3)[:, :L]
+
+
+def attn_apply(p, cfg: ModelConfig, x, positions, *, causal=True,
+               kv_weight=None, layer_global=True):
+    """Training/encoding attention.  x: (B, S, d); positions: (B, S)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    use_local = cfg.sliding_window > 0 and not layer_global
+    if use_local:
+        z = _local_attention(q, k, v, cfg.sliding_window, causal, kv_weight,
+                             cfg.attn_impl)
+    elif cfg.attention == "h1d":
+        if cfg.attn_impl in ("pallas", "pallas_interpret"):
+            # kernel path: heads fold into the pallas grid
+            Lp = hc.padded_length(S, cfg.nr)
+            pad = Lp - S
+            if pad:
+                q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            w = jnp.ones((B, Lp), jnp.float32)
+            if kv_weight is not None:
+                w = w * jnp.pad(kv_weight, ((0, 0), (0, pad)))
+            elif pad:
+                w = w.at[:, S:].set(0.0)
+            z = h1d_attention_mha(q, k, v, nr=cfg.nr, causal=causal,
+                                  causal_mode=cfg.causal_mode, kv_weight=w,
+                                  impl=cfg.attn_impl)[:, :S]
+        else:
+            Lp = hc.padded_length(S, cfg.nr)
+            pad = Lp - S
+            if pad:
+                q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            w = jnp.ones((B, Lp), jnp.float32)
+            if kv_weight is not None:
+                w = w * jnp.pad(kv_weight, ((0, 0), (0, pad)))
+            elif pad:
+                w = w.at[:, S:].set(0.0)
+            qh, kh, vh = _heads_as_g(q, k, v)
+            z = h1d_attention(qh, kh, vh, nr=cfg.nr, causal=causal,
+                              causal_mode=cfg.causal_mode, kv_weight=w,
+                              impl=cfg.attn_impl)
+            z = z.transpose(0, 2, 1, 3)[:, :S]
+    elif cfg.attention == "full":
+        qh, kh, vh = _heads_as_g(q, k, v)
+        z = dense_attention(qh, kh, vh, causal=causal, kv_weight=kv_weight)
+        z = z.transpose(0, 2, 1, 3)
+    else:
+        raise ValueError(cfg.attention)
+    # NOTE: kept "model" even for non-divisible head counts: GSPMD pads
+    # (56->64) and pays backward all-gathers, but replicating instead
+    # doubles the memory term (EXPERIMENTS.md P19, a wash on the max
+    # term and worse on HBM capacity).
+    z = logical(z, ("pod", "data"), None, "model", None)
+    return dense_apply(p["wo"], z.reshape(B, S, -1))
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ModelConfig, B: int, Lmax: int, *, layer_global=True,
+                      dtype=jnp.float32):
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    local = cfg.sliding_window > 0 and not layer_global
+    if cfg.attention == "h1d" and not local:
+        Lmax = hc.padded_length(Lmax, cfg.nr)   # needs nr * 2**k
+        return h1d_decode.init_cache(B * hkv, Lmax, hd, hd, cfg.nr, dtype)
+    Lc = min(Lmax, 2 * cfg.sliding_window) if local else Lmax
+    return {
+        "k": jnp.zeros((B, Lc, hkv, hd), dtype),
+        "v": jnp.zeros((B, Lc, hkv, hd), dtype),
+        "pos": jnp.full((B, Lc), -1, jnp.int32),
+    }
+
+
+def attn_decode(p, cfg: ModelConfig, x, t, cache, *, layer_global=True):
+    """Single-token decode.  x: (B, 1, d); t: (B,) current position.
+    Returns (out (B, 1, d), new_cache)."""
+    B = x.shape[0]
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = hq // hkv
+    q, k, v = _project_qkv(p, cfg, x, t[:, None])
+    q1 = q[:, 0].reshape(B, hkv, G, hd).reshape(B * hkv, G, hd)
+    k1 = k[:, 0].reshape(B * hkv, hd)
+    v1 = v[:, 0].reshape(B * hkv, hd)
+    local = cfg.sliding_window > 0 and not layer_global
+
+    if cfg.attention == "h1d" and not local:
+        if B == 1:
+            # uniform-position fast path: scalar t keeps cache reads as
+            # dynamic-slices on the sharded sequence dim (P21)
+            cache = h1d_decode.update_cache_uniform(cache, k1, v1, t[0])
+            z = h1d_decode.decode_attend_uniform(cache, q1, t[0], nr=cfg.nr)
+        else:
+            tt = jnp.repeat(t, hkv, axis=0)
+            cache = h1d_decode.update_cache(cache, k1, v1, tt)
+            z = h1d_decode.decode_attend(cache, q1, tt, nr=cfg.nr)
+        z = z.reshape(B, hkv, G, hd).reshape(B, 1, hq * hd)
+    else:
+        Lc = cache["k"].shape[1]
+        slot = (t % Lc).astype(jnp.int32)
+        kc = jax.vmap(lambda c, kn, s: jax.lax.dynamic_update_slice(
+            c, kn[None], (s, 0, 0)))(cache["k"], k[:, 0], slot)
+        vc = jax.vmap(lambda c, vn, s: jax.lax.dynamic_update_slice(
+            c, vn[None], (s, 0, 0)))(cache["v"], v[:, 0], slot)
+        pos = jax.vmap(lambda c, tt_, s: jax.lax.dynamic_update_slice(
+            c, tt_[None], (s,)))(cache["pos"], t, slot)
+        cache = {"k": kc, "v": vc, "pos": pos}
+        dist = t[:, None] - pos                      # (B, Lc)
+        valid = (pos >= 0) & (dist >= 0)
+        if local:
+            valid = valid & (dist < cfg.sliding_window)
+        s = jnp.einsum("bhgd,blhd->bhgl",
+                       q1.reshape(B, hkv, G, hd).astype(jnp.float32),
+                       kc.astype(jnp.float32),
+                       preferred_element_type=jnp.float32) / math.sqrt(hd)
+        s = jnp.where(valid[:, None, None, :], s, hc.NEG_INF)
+        m = jnp.maximum(s.max(-1, keepdims=True), -1e30)
+        a = jnp.exp(s - m)
+        z = jnp.einsum("bhgl,blhd->bhgd", a, vc.astype(jnp.float32))
+        z = z / jnp.maximum(a.sum(-1), 1e-9)[..., None]
+        z = z.astype(x.dtype).reshape(B, 1, hq * hd)
+    return dense_apply(p["wo"], z), cache
+
+
+def prefill_into_cache(p, cfg: ModelConfig, x, positions, Lmax,
+                       *, layer_global=True):
+    """Run attention over a prefix AND build the decode cache.
+    Returns (out (B, S, d), cache)."""
+    B, S, _ = x.shape
+    out = attn_apply(p, cfg, x, positions, causal=True,
+                     layer_global=layer_global)
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    local = cfg.sliding_window > 0 and not layer_global
+    if cfg.attention == "h1d" and not local:
+        kf = k.transpose(0, 2, 1, 3).reshape(B * hkv, S, hd)
+        vf = v.transpose(0, 2, 1, 3).reshape(B * hkv, S, hd)
+        cache = h1d_decode.prefill_cache(kf, vf,
+                                         hc.padded_length(Lmax, cfg.nr),
+                                         cfg.nr)
+    else:
+        cache = init_decode_cache(cfg, B, Lmax, layer_global=layer_global,
+                                  dtype=k.dtype)
+        Lc = cache["k"].shape[1]
+        take = min(S, Lc)
+        ksrc = k[:, S - take:]
+        vsrc = v[:, S - take:]
+        psrc = jnp.broadcast_to(jnp.arange(S - take, S)[None], (B, take))
+        slots = psrc[0] % Lc                          # same for all batch rows
+        kc = cache["k"].at[:, slots].set(ksrc)
+        vc = cache["v"].at[:, slots].set(vsrc)
+        posc = cache["pos"].at[:, slots].set(psrc)
+        cache = {"k": kc, "v": vc, "pos": posc}
+    return out, cache

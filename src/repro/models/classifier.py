@@ -1,0 +1,74 @@
+"""Encoder classifier for LRA-style tasks (paper section 8.1).
+
+Bidirectional encoder (H1D / full / local attention per config) + mean
+pooling + linear head -- the configuration the paper uses on the Long
+Range Arena benchmark.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .common import (ModelConfig, dense_init, dense_apply, embed_init,
+                     rmsnorm_init, rmsnorm_apply, logical)
+from .attention import attn_init, attn_apply
+from .ffn import mlp_init, mlp_apply
+
+
+def classifier_init(key, cfg: ModelConfig, num_classes: int):
+    dtype = cfg.jdtype
+    keys = jax.random.split(key, cfg.num_layers + 3)
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    p, s = embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype)
+    params["embed"], specs["embed"] = p, s
+    layers, lspecs = [], []
+    for i in range(cfg.num_layers):
+        k1, k2 = jax.random.split(keys[i + 1])
+        lp, ls = {}, {}
+        lp["ln1"], ls["ln1"] = rmsnorm_init(cfg.d_model, dtype)
+        lp["attn"], ls["attn"] = attn_init(k1, cfg, dtype)
+        lp["ln2"], ls["ln2"] = rmsnorm_init(cfg.d_model, dtype)
+        lp["mlp"], ls["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, dtype)
+        layers.append(lp)
+        lspecs.append(ls)
+    params["layers"], specs["layers"] = layers, lspecs
+    p, s = rmsnorm_init(cfg.d_model, dtype)
+    params["final_norm"], specs["final_norm"] = p, s
+    p, s = dense_init(keys[-1], cfg.d_model, num_classes, dtype,
+                      out_shard=False)
+    params["head"], specs["head"] = p, s
+    return params, specs
+
+
+def classifier_logits(params, cfg: ModelConfig, tokens, mask=None):
+    B, S = tokens.shape
+    h = params["embed"]["w"][tokens].astype(cfg.jdtype)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    kv_weight = mask if mask is not None else None
+    for lp in params["layers"]:
+        a = attn_apply(lp["attn"], cfg, rmsnorm_apply(lp["ln1"], h),
+                       positions, causal=False, kv_weight=kv_weight)
+        h = h + a
+        h = h + mlp_apply(lp["mlp"], rmsnorm_apply(lp["ln2"], h),
+                          cfg.mlp_activation)
+    h = rmsnorm_apply(params["final_norm"], h)
+    if mask is not None:
+        w = mask[..., None].astype(h.dtype)
+        pooled = (h * w).sum(1) / jnp.maximum(w.sum(1), 1.0)
+    else:
+        pooled = h.mean(1)
+    return dense_apply(params["head"], pooled).astype(jnp.float32)
+
+
+def classifier_loss(params, cfg: ModelConfig, batch):
+    logits = classifier_logits(params, cfg, batch["tokens"],
+                               batch.get("mask"))
+    labels = batch["label"]
+    logz = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = (logz - gold).mean()
+    acc = (jnp.argmax(logits, -1) == labels).mean()
+    return loss, {"acc": acc}

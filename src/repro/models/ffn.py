@@ -1,0 +1,211 @@
+"""Feed-forward layers: gated MLP (SwiGLU/GeGLU) and Mixture-of-Experts.
+
+The MoE uses a sort-based, fixed-capacity dispatch (megablocks-style but
+static-shaped, per batch row so the data-parallel sharding of the token
+dim survives routing):
+
+  1. top-k routing per token (softmax gates, renormalized top-k weights);
+  2. per sequence: flatten (S*k) assignments, argsort by expert id,
+     rank-in-expert via bincount prefix sums (O(S*k + E) memory -- no
+     (tokens, E, capacity) one-hot anywhere);
+  3. scatter into an (E, C, d) buffer, batched expert einsum (experts
+     sharded over the ``model`` mesh axis = expert parallelism),
+     weighted scatter-add back.
+
+Variants: shared-expert branch (qwen2-moe) and dense residual branch
+(arctic) in parallel with the routed experts.  Returns the auxiliary
+load-balancing loss alongside the output.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import (ModelConfig, dense_init, dense_apply, activation,
+                     shard_if_divisible, logical)
+
+
+# ---------------------------------------------------------------------------
+# dense gated MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    params, specs = {}, {}
+    # NOTE: gate/up kept as separate dots -- a fused (d, 2*d_ff) variant
+    # measured +53% memory under the dots remat policy (the fused output
+    # AND its two split halves get saved) for no collective win
+    # (EXPERIMENTS.md P11, refuted).
+    for n, k_, din, dout, insh in (("wg", k1, d, d_ff, False),
+                                   ("wu", k2, d, d_ff, False),
+                                   ("wd", k3, d_ff, d, True)):
+        p, s = dense_init(k_, din, dout, dtype, in_shard=insh,
+                          out_shard=not insh)
+        params[n], specs[n] = p, s
+    return params, specs
+
+
+def mlp_apply(p, x, act_name: str):
+    act = activation(act_name)
+    h = act(dense_apply(p["wg"], x)) * dense_apply(p["wu"], x)
+    h = logical(h, ("pod", "data"), None, "model")
+    return dense_apply(p["wd"], h)
+
+
+# ---------------------------------------------------------------------------
+# mixture of experts
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg: ModelConfig, dtype):
+    E, d, ff = cfg.moe_experts, cfg.d_model, cfg.moe_d_ff
+    keys = jax.random.split(key, 6)
+    e_ax = shard_if_divisible(E)
+    sc = 1.0 / math.sqrt(d)
+    params = {
+        "router": jax.random.normal(keys[0], (d, E), jnp.float32) * sc,
+        "w1": jax.random.normal(keys[1], (E, d, ff), dtype) * sc,
+        "w3": jax.random.normal(keys[2], (E, d, ff), dtype) * sc,
+        "w2": jax.random.normal(keys[3], (E, ff, d), dtype)
+              * (1.0 / math.sqrt(ff)),
+    }
+    specs = {
+        "router": P(None, None),
+        "w1": P(e_ax, None, None),
+        "w3": P(e_ax, None, None),
+        "w2": P(e_ax, None, None),
+    }
+    if cfg.moe_shared_d_ff:
+        p, s = mlp_init(keys[4], d, cfg.moe_shared_d_ff, dtype)
+        params["shared"], specs["shared"] = p, s
+        params["shared_gate"] = jnp.zeros((d, 1), dtype)
+        specs["shared_gate"] = P(None, None)
+    if cfg.moe_dense_residual:
+        p, s = mlp_init(keys[5], d, cfg.d_ff, dtype)
+        params["residual"], specs["residual"] = p, s
+    return params, specs
+
+
+def _dispatch_one(x, ids, wts, E: int, C: int):
+    """Per-sequence dispatch.  x: (S, d); ids/wts: (S, k).
+    Returns (buffer (E*C, d), slot (S*k,), tok (S*k,), keepw (S*k,))."""
+    S, k = ids.shape
+    e_flat = ids.reshape(-1)
+    tok = jnp.repeat(jnp.arange(S), k)
+    w_flat = wts.reshape(-1)
+    order = jnp.argsort(e_flat)
+    es, ts, ws = e_flat[order], tok[order], w_flat[order]
+    counts = jnp.bincount(es, length=E)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(S * k) - starts[es]
+    keep = rank < C
+    slot = es * C + jnp.minimum(rank, C - 1)
+    buf = jnp.zeros((E * C, x.shape[-1]), x.dtype)
+    buf = buf.at[slot].add(x[ts] * keep[:, None].astype(x.dtype))
+    return buf, slot, ts, ws * keep
+
+
+def _route(p, cfg: ModelConfig, x):
+    """Shared routing: returns (top_w, top_i, rank, aux, C)."""
+    B, S, d = x.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    C = max(1, int(math.ceil(S * k / E * cfg.moe_capacity_factor)))
+    gates = jax.nn.softmax(
+        (x.astype(jnp.float32) @ p["router"]), axis=-1)      # (B, S, E)
+    top_w, top_i = jax.lax.top_k(gates, k)                   # (B, S, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    # load-balancing aux loss (Switch): E * sum_e f_e * P_e
+    pe = gates.mean(axis=(0, 1))                             # (E,)
+    fe = jnp.zeros((E,), jnp.float32).at[top_i.reshape(-1)].add(
+        1.0 / (B * S * k))
+    aux = cfg.moe_aux_loss * E * jnp.sum(fe * pe)
+
+    def rank_one(ids):
+        """ids: (S, k) -> capacity rank of each assignment (S, k)."""
+        e_flat = ids.reshape(-1)
+        order = jnp.argsort(e_flat)
+        es = e_flat[order]
+        counts = jnp.bincount(es, length=E)
+        starts = jnp.cumsum(counts) - counts
+        rank_sorted = jnp.arange(S * k) - starts[es]
+        rank = jnp.zeros((S * k,), jnp.int32).at[order].set(rank_sorted)
+        return rank.reshape(S, k)
+
+    rank = jax.vmap(rank_one)(top_i)
+    return top_w, top_i, rank, aux, C
+
+
+def moe_apply(p, cfg: ModelConfig, x, act_name: str = "swiglu"
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d).  Returns (out, aux_loss).
+
+    GShard-style one-hot einsum dispatch/combine: the (B,S,E,C) dispatch
+    tensor is built as an outer product of one-hots (no scatter over the
+    expert dim) and every einsum contracts with E sharded over "model"
+    (EP) -- GSPMD never replicates the (B, E*C, d) buffer, unlike the
+    sort/scatter variant kept below as the test oracle (EXPERIMENTS.md
+    P18: 12x collective-byte difference on arctic).
+    """
+    B, S, d = x.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    act = activation(act_name)
+    top_w, top_i, rank, aux, C = _route(p, cfg, x)
+
+    cdt = x.dtype
+    oh_e = jax.nn.one_hot(top_i, E, dtype=cdt)               # (B,S,k,E)
+    oh_c = jax.nn.one_hot(rank, C, dtype=cdt)                # 0-row if dropped
+    dispatch = jnp.einsum("bske,bskc->bsec", oh_e, oh_c)
+    dispatch = logical(dispatch, ("pod", "data"), None, "model", None)
+    combine = jnp.einsum("bsec,bsk,bske->bsec", dispatch,
+                         top_w.astype(cdt), oh_e)
+    combine = logical(combine, ("pod", "data"), None, "model", None)
+
+    buf = jnp.einsum("bsec,bsd->becd", dispatch, x)
+    buf = logical(buf, ("pod", "data"), "model", None, None)
+    h = act(jnp.einsum("becd,edf->becf", buf, p["w1"].astype(buf.dtype)))
+    h = h * jnp.einsum("becd,edf->becf", buf, p["w3"].astype(buf.dtype))
+    y = jnp.einsum("becf,efd->becd", h, p["w2"].astype(buf.dtype))
+    y = logical(y, ("pod", "data"), "model", None, None)
+    out = jnp.einsum("becd,bsec->bsd", y, combine)
+
+    if "shared" in p:
+        g = jax.nn.sigmoid(x @ p["shared_gate"].astype(x.dtype))
+        out = out + g * mlp_apply(p["shared"], x, act_name)
+    if "residual" in p:
+        out = out + mlp_apply(p["residual"], x, act_name)
+    return out.astype(x.dtype), aux
+
+
+def _moe_apply_scatter(p, cfg: ModelConfig, x, act_name: str = "swiglu"
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort/scatter dispatch (memory-lean single-device; GSPMD-hostile --
+    see moe_apply).  Kept as the independent oracle for tests."""
+    B, S, d = x.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    act = activation(act_name)
+    top_w, top_i, rank, aux, C = _route(p, cfg, x)
+
+    buf, slot, ts, ws = jax.vmap(
+        lambda xx, ii, ww: _dispatch_one(xx, ii, ww, E, C))(x, top_i, top_w)
+    buf = buf.reshape(B, E, C, d)
+
+    h = act(jnp.einsum("becd,edf->becf", buf, p["w1"].astype(buf.dtype)))
+    h = h * jnp.einsum("becd,edf->becf", buf, p["w3"].astype(buf.dtype))
+    y = jnp.einsum("becf,efd->becd", h, p["w2"].astype(buf.dtype))
+    y = y.reshape(B, E * C, d)
+
+    def _combine(yb, slot_b, ts_b, ws_b):
+        out = jnp.zeros((S, d), yb.dtype)
+        return out.at[ts_b].add(yb[slot_b] * ws_b[:, None].astype(yb.dtype))
+
+    out = jax.vmap(_combine)(y, slot, ts, ws)
+
+    if "shared" in p:
+        g = jax.nn.sigmoid(x @ p["shared_gate"].astype(x.dtype))
+        out = out + g * mlp_apply(p["shared"], x, act_name)
+    if "residual" in p:
+        out = out + mlp_apply(p["residual"], x, act_name)
+    return out.astype(x.dtype), aux

@@ -1,0 +1,56 @@
+"""Unified model API over the zoo: init / loss / prefill / decode_step.
+
+Every architecture exposes the same four pure functions so the training
+loop, serving engine, dry-run and benchmarks are family-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+from . import transformer as T
+from . import encdec as ED
+
+
+class ModelFns(NamedTuple):
+    init: Callable          # (key, cfg) -> (params, specs)
+    loss: Callable          # (params, cfg, batch) -> (loss, metrics)
+    prefill: Callable       # (params, cfg, batch, Lmax) -> (logits, caches, pos)
+    decode_step: Callable   # (params, cfg, caches, token, t) -> (logits, caches)
+    init_caches: Callable   # (params, cfg, B, Lmax) -> caches
+
+
+def _lm_prefill(params, cfg, batch, Lmax):
+    return T.lm_prefill(params, cfg, batch["tokens"], Lmax,
+                        prefix_embeds=batch.get("patch_embeds"))
+
+
+def _ed_prefill(params, cfg, batch, Lmax):
+    return ED.encdec_prefill(params, cfg, batch["frames"], batch["tokens"],
+                             Lmax)
+
+
+def _ed_init_caches(params, cfg, B, Lmax):
+    raise NotImplementedError(
+        "enc-dec caches are built by prefill (need encoder memory)")
+
+
+def get_model(cfg: ModelConfig) -> ModelFns:
+    if cfg.family == "encdec":
+        return ModelFns(
+            init=ED.encdec_init,
+            loss=ED.encdec_loss,
+            prefill=_ed_prefill,
+            decode_step=ED.encdec_decode_step,
+            init_caches=_ed_init_caches,
+        )
+    return ModelFns(
+        init=T.lm_init,
+        loss=T.lm_loss,
+        prefill=_lm_prefill,
+        decode_step=T.lm_decode_step,
+        init_caches=T.lm_init_decode_caches,
+    )

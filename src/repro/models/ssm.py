@@ -1,0 +1,251 @@
+"""Mamba2 mixer with the SSD (state-space duality) chunked algorithm.
+
+The paper's H1D attention is inapplicable to this attention-free family
+(DESIGN.md section 5); we implement the SSD algorithm faithfully --
+itself block-structured, which composes naturally with the rest of the
+framework.  Shapes follow Dao & Gu (2024):
+
+  x  : (B, S, H, Ph)   -- H heads of head-dim Ph (d_inner = H * Ph)
+  dt : (B, S, H)       -- softplus-activated step sizes
+  A  : (H,)            -- negative decay rates
+  Bm, Cm : (B, S, G, N) -- input/output projections (G groups, state N)
+
+``ssd_chunked`` computes the exact linear recurrence
+``h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T; y_t = C_t h_t + D x_t``
+in chunks: quadratic attention-like intra-chunk term + an inter-chunk
+state scan.  ``ssd_reference`` is the naive per-step oracle for tests.
+``ssd_step`` is the O(1) decode update (used for decode_32k/long_500k).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import ModelConfig, dense_init, dense_apply, rmsnorm_init, \
+    rmsnorm_apply, shard_if_divisible, logical
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def _segsum(x):
+    """x: (..., Q).  Returns (..., Q, Q) with out[i, j] = sum_{j<t<=i} x_t
+    for i >= j, -inf otherwise (log of the decay matrix)."""
+    Q = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    diff = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, *, chunk: int, h0=None):
+    """Returns (y, h_final).  See module docstring for shapes.
+    h0: optional initial state (B, H, N, Ph)."""
+    Bsz, S, H, Ph = x.shape
+    G, N = Bm.shape[-2:]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    rep = H // G
+    f32 = jnp.float32
+
+    xc = x.reshape(Bsz, nc, chunk, H, Ph).astype(f32)
+    dtc = dt.reshape(Bsz, nc, chunk, H).astype(f32)
+    Bc = jnp.repeat(Bm.reshape(Bsz, nc, chunk, G, N), rep, axis=3).astype(f32)
+    Cc = jnp.repeat(Cm.reshape(Bsz, nc, chunk, G, N), rep, axis=3).astype(f32)
+
+    dA = dtc * A.astype(f32)                          # (B, nc, Q, H) (<= 0)
+    dA_cs = jnp.cumsum(dA, axis=2)                    # within-chunk cumsum
+
+    # ---- intra-chunk (diagonal) term -------------------------------------
+    Ldec = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))  # (B, nc, H, Q, Q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Cc, Bc)  # (B, nc, H, Q, Q)
+    y_diag = jnp.einsum("bchqk,bckh,bckhp->bcqhp",
+                        scores * Ldec, dtc, xc)
+
+    # ---- chunk states ------------------------------------------------------
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)   # (B, nc, Q, H)
+    states = jnp.einsum("bcqhn,bcqh,bcqh,bcqhp->bchnp",
+                        Bc, decay_states, dtc, xc)        # (B, nc, H, N, Ph)
+
+    # ---- inter-chunk scan --------------------------------------------------
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])             # (B, nc, H)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, N, Ph), f32)
+
+    def scan_fn(h, inp):
+        st, dec = inp                                      # (B,H,N,P), (B,H)
+        h_prev = h
+        h = h * dec[..., None, None] + st
+        return h, h_prev
+
+    hs, h_prevs = jax.lax.scan(
+        scan_fn, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)             # (B, nc, H, N, Ph)
+
+    # ---- inter-chunk (off-diagonal) output ---------------------------------
+    state_decay_out = jnp.exp(dA_cs)                       # (B, nc, Q, H)
+    y_off = jnp.einsum("bcqhn,bchnp,bcqh->bcqhp",
+                       Cc, h_prevs, state_decay_out)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, Ph)
+    return y.astype(x.dtype), hs
+
+
+def ssd_reference(x, dt, A, Bm, Cm, *, h0=None):
+    """Naive per-step recurrence (oracle)."""
+    Bsz, S, H, Ph = x.shape
+    G, N = Bm.shape[-2:]
+    rep = H // G
+    f32 = jnp.float32
+    Bf = jnp.repeat(Bm, rep, axis=2).astype(f32)
+    Cf = jnp.repeat(Cm, rep, axis=2).astype(f32)
+    h = (jnp.zeros((Bsz, H, N, Ph), f32) if h0 is None else h0)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp
+        dec = jnp.exp(dtt * A.astype(f32))                  # (B, H)
+        h = h * dec[..., None, None] + jnp.einsum(
+            "bhn,bh,bhp->bhnp", Bt, dtt, xt)
+        y = jnp.einsum("bhn,bhnp->bhp", Ct, h)
+        return h, y
+
+    h, ys = jax.lax.scan(
+        step, h,
+        (x.transpose(1, 0, 2, 3).astype(f32), dt.transpose(1, 0, 2).astype(f32),
+         Bf.transpose(1, 0, 2, 3), Cf.transpose(1, 0, 2, 3)))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h
+
+
+def ssd_step(h, xt, dtt, A, Bt, Ct):
+    """Single decode step.  h: (B, H, N, Ph); xt: (B, H, Ph);
+    dtt: (B, H); Bt/Ct: (B, G, N).  Returns (y (B, H, Ph), h)."""
+    H = xt.shape[1]
+    rep = H // Bt.shape[1]
+    f32 = jnp.float32
+    Bf = jnp.repeat(Bt, rep, axis=1).astype(f32)
+    Cf = jnp.repeat(Ct, rep, axis=1).astype(f32)
+    dec = jnp.exp(dtt.astype(f32) * A.astype(f32))
+    h = h * dec[..., None, None] + jnp.einsum(
+        "bhn,bh,bhp->bhnp", Bf, dtt.astype(f32), xt.astype(f32))
+    y = jnp.einsum("bhn,bhnp->bhp", Cf, h)
+    return y.astype(xt.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 mixer layer
+# ---------------------------------------------------------------------------
+
+def mamba2_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    G = 1
+    N = cfg.ssm_state
+    conv_dim = d_inner + 2 * G * N
+    return d_inner, H, G, N, conv_dim
+
+
+def mamba2_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_inner, H, G, N, conv_dim = mamba2_dims(cfg)
+    keys = jax.random.split(key, 4)
+    d_in_proj = 2 * d_inner + 2 * G * N + H
+    p_in, s_in = dense_init(keys[0], d, d_in_proj, dtype)
+    p_out, s_out = dense_init(keys[1], d_inner, d, dtype, in_shard=True,
+                              out_shard=False)
+    nrm, nrm_s = rmsnorm_init(d_inner, dtype)
+    params = {
+        "in_proj": p_in,
+        "out_proj": p_out,
+        "conv_w": jax.random.normal(keys[2], (cfg.ssm_conv_width, conv_dim),
+                                    dtype) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, float(H), H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": nrm,
+    }
+    specs = {
+        "in_proj": s_in,
+        "out_proj": s_out,
+        "conv_w": P(None, shard_if_divisible(conv_dim)),
+        "conv_b": P(shard_if_divisible(conv_dim)),
+        "A_log": P(None),
+        "D": P(None),
+        "dt_bias": P(None),
+        "norm": nrm_s,
+    }
+    return params, specs
+
+
+def _split_in_proj(cfg, zxbcdt):
+    d_inner, H, G, N, _ = mamba2_dims(cfg)
+    z, xin, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + G * N,
+                 2 * d_inner + 2 * G * N], axis=-1)
+    return z, xin, Bm, Cm, dt
+
+
+def _causal_conv(u, w, b, prev=None):
+    """Depthwise causal conv.  u: (B, S, C); w: (W, C); prev: (B, W-1, C)."""
+    W = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((u.shape[0], W - 1, u.shape[-1]), u.dtype)
+    up = jnp.concatenate([prev, u], axis=1)
+    out = sum(up[:, i:i + u.shape[1]] * w[i][None, None] for i in range(W))
+    return jax.nn.silu(out + b[None, None]), up[:, -(W - 1):]
+
+
+def mamba2_apply(p, cfg: ModelConfig, x, *, h0=None, conv0=None,
+                 return_state=False):
+    """x: (B, S, d).  Returns out or (out, (h, conv_state))."""
+    B, S, d = x.shape
+    d_inner, H, G, N, conv_dim = mamba2_dims(cfg)
+    zxbcdt = dense_apply(p["in_proj"], x)
+    z, xin, Bm, Cm, dt = _split_in_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"].astype(x.dtype),
+                                   p["conv_b"].astype(x.dtype), conv0)
+    xin, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + G * N], axis=-1)
+    xh = xin.reshape(B, S, H, cfg.ssm_head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    chunk = min(cfg.ssm_chunk, S)
+    if S % chunk:
+        chunk = math.gcd(S, chunk) or 1
+    y, h = ssd_chunked(xh, dt, A, Bm, Cm, chunk=chunk, h0=h0)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm_apply(p["norm"], y * jax.nn.silu(z))
+    out = dense_apply(p["out_proj"], y)
+    if return_state:
+        return out, (h, conv_state)
+    return out
+
+
+def mamba2_decode(p, cfg: ModelConfig, x, state):
+    """Single-token decode.  x: (B, 1, d); state: (h, conv_state)."""
+    B = x.shape[0]
+    d_inner, H, G, N, conv_dim = mamba2_dims(cfg)
+    h, conv_prev = state
+    zxbcdt = dense_apply(p["in_proj"], x)
+    z, xin, Bm, Cm, dt = _split_in_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"].astype(x.dtype),
+                                   p["conv_b"].astype(x.dtype), conv_prev)
+    xin, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + G * N], axis=-1)
+    xh = xin.reshape(B, H, cfg.ssm_head_dim)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"][None])
+    A = -jnp.exp(p["A_log"])
+    y, h = ssd_step(h, xh, dt, A, Bm.reshape(B, G, N), Cm.reshape(B, G, N))
+    y = y + p["D"].astype(y.dtype)[None, :, None] * xh
+    y = y.reshape(B, 1, d_inner)
+    y = rmsnorm_apply(p["norm"], y * jax.nn.silu(z))
+    return dense_apply(p["out_proj"], y), (h, conv_state)

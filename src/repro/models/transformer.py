@@ -1,0 +1,445 @@
+"""Decoder-only transformer LM covering the dense / MoE / VLM / local-global
+(gemma3) / hybrid (zamba2) families, with train, prefill and decode paths.
+
+Layer stacks are ``lax.scan``-ned over stacked params whenever all layers
+are structurally identical (dense, moe, ssm uniform stacks) -- this keeps
+compile time and HLO size flat in depth for the big assigned archs
+(llava-next 60L, arctic 35L, mamba2 48L).  Heterogeneous cadences
+(gemma3 local:global, zamba2 shared-attention) use a python loop.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import (ModelConfig, dense_init, dense_apply, embed_init,
+                     rmsnorm_init, rmsnorm_apply, logical,
+                     grad_dtype_boundary)
+
+
+def _remat(cfg, fn):
+    if not cfg.remat or cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+from .attention import (attn_init, attn_apply, attn_decode, init_decode_cache,
+                        prefill_into_cache)
+from .ffn import mlp_init, mlp_apply, moe_init, moe_apply
+from .ssm import mamba2_init, mamba2_apply, mamba2_decode, mamba2_dims
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def block_kind(cfg: ModelConfig, i: int) -> str:
+    if cfg.family in ("ssm",):
+        return "ssm"
+    if cfg.family == "hybrid":
+        return "ssm"          # attention is the *shared* block, applied extra
+    if cfg.moe_experts > 0:
+        return "moe"
+    return "dense"
+
+
+def block_init(key, cfg: ModelConfig, kind: str):
+    dtype = cfg.jdtype
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    if kind == "ssm":
+        k1, = jax.random.split(key, 1)
+        p, s = rmsnorm_init(cfg.d_model, dtype)
+        params["ln"], specs["ln"] = p, s
+        p, s = mamba2_init(k1, cfg, dtype)
+        params["mixer"], specs["mixer"] = p, s
+        return params, specs
+    k1, k2 = jax.random.split(key)
+    p, s = rmsnorm_init(cfg.d_model, dtype)
+    params["ln1"], specs["ln1"] = p, s
+    p, s = attn_init(k1, cfg, dtype)
+    params["attn"], specs["attn"] = p, s
+    p, s = rmsnorm_init(cfg.d_model, dtype)
+    params["ln2"], specs["ln2"] = p, s
+    if kind == "moe":
+        p, s = moe_init(k2, cfg, dtype)
+        params["moe"], specs["moe"] = p, s
+    else:
+        p, s = mlp_init(k2, cfg.d_model, cfg.d_ff, dtype)
+        params["mlp"], specs["mlp"] = p, s
+    return params, specs
+
+
+def block_apply(p, cfg: ModelConfig, kind: str, h, positions, *,
+                layer_global=True, kv_weight=None, causal=True):
+    """Returns (h, aux_loss)."""
+    # Re-anchor the residual sharding every layer: GSPMD propagation is
+    # weak across while-loop (scan) bodies without explicit constraints.
+    # With seq_parallel_residual the sequence axis shards over "model"
+    # (Megatron-style SP): the per-layer saved residual stack shrinks by
+    # the TP degree, paying per-layer gathers at attention/MLP entry.
+    h = logical(h, ("pod", "data"),
+                "model" if cfg.seq_parallel_residual else None, None)
+    if kind == "ssm":
+        return h + mamba2_apply(p["mixer"], cfg, rmsnorm_apply(p["ln"], h)), 0.0
+    a = attn_apply(p["attn"], cfg, rmsnorm_apply(p["ln1"], h), positions,
+                   causal=causal, kv_weight=kv_weight,
+                   layer_global=layer_global)
+    h = h + a
+    if kind == "moe":
+        m, aux = moe_apply(p["moe"], cfg, rmsnorm_apply(p["ln2"], h),
+                           cfg.mlp_activation)
+    else:
+        m = mlp_apply(p["mlp"], rmsnorm_apply(p["ln2"], h),
+                      cfg.mlp_activation)
+        aux = 0.0
+    return h + m, aux
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+def _uses_scan(cfg: ModelConfig) -> bool:
+    """Layer params are stacked and the train forward scans over them.
+    True for every uniform-structure stack (incl. gemma3's local:global
+    cadence, handled with a lax.cond inside the scan body)."""
+    return (cfg.family in ("dense", "moe", "vlm", "ssm")
+            and not cfg.force_loop)
+
+
+def _stacked_caches(cfg: ModelConfig) -> bool:
+    """Decode caches are a stacked pytree (scan over layers at decode).
+    Requires structurally identical caches per layer -- false for the
+    local:global cadence (ring caches vs hierarchical caches)."""
+    return _uses_scan(cfg) and cfg.global_every <= 0
+
+
+def lm_init(key, cfg: ModelConfig):
+    dtype = cfg.jdtype
+    keys = jax.random.split(key, 6)
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    p, s = embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype)
+    params["embed"], specs["embed"] = p, s
+    p, s = rmsnorm_init(cfg.d_model, dtype)
+    params["final_norm"], specs["final_norm"] = p, s
+    if not cfg.tie_embeddings:
+        p, s = dense_init(keys[1], cfg.d_model, cfg.vocab_size, dtype,
+                          scale=0.02)
+        params["lm_head"], specs["lm_head"] = p, s
+
+    kinds = [block_kind(cfg, i) for i in range(cfg.num_layers)]
+    lkeys = jax.random.split(keys[2], cfg.num_layers)
+    if _uses_scan(cfg):
+        kind = kinds[0]
+        _, spec1 = block_init(lkeys[0], cfg, kind)
+        stacked = jax.vmap(lambda k: block_init(k, cfg, kind)[0])(lkeys)
+        params["layers"] = stacked
+        specs["layers"] = jax.tree.map(
+            lambda sp: P(None, *sp), spec1,
+            is_leaf=lambda x: isinstance(x, P))
+    else:
+        ps, ss = [], []
+        for i in range(cfg.num_layers):
+            p, s = block_init(lkeys[i], cfg, kinds[i])
+            ps.append(p)
+            ss.append(s)
+        params["layers"] = ps
+        specs["layers"] = ss
+
+    if cfg.family == "hybrid":
+        # zamba2: one shared attention+MLP block, re-invoked on a cadence,
+        # each invocation with its own (h, embed0)->d input projection.
+        p, s = block_init(keys[3], cfg, "dense")
+        params["shared"], specs["shared"] = p, s
+        n_inv = sum(1 for i in range(cfg.num_layers) if cfg.layer_is_attn(i))
+        pkeys = jax.random.split(keys[4], max(n_inv, 1))
+        projs, pspecs = [], []
+        for i in range(n_inv):
+            p, s = dense_init(pkeys[i], 2 * cfg.d_model, cfg.d_model, dtype)
+            projs.append(p)
+            pspecs.append(s)
+        params["shared_proj"], specs["shared_proj"] = projs, pspecs
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _embed_tokens(params, cfg, tokens):
+    e = params["embed"]["w"]
+    h = e[tokens]                                      # gather (B, S, d)
+    return h.astype(cfg.jdtype)
+
+
+def _logits(params, cfg, h):
+    h = grad_dtype_boundary(h)   # backward ARs in bf16, loss in f32
+    h = rmsnorm_apply(params["final_norm"], h)
+    if cfg.tie_embeddings:
+        w = params["embed"]["w"].astype(h.dtype)
+        logits = jnp.einsum("bsd,vd->bsv", h, w)
+    else:
+        logits = dense_apply(params["lm_head"], h)
+    return logical(logits.astype(jnp.float32),
+                   ("pod", "data"), None, "model")
+
+
+def lm_forward(params, cfg: ModelConfig, tokens, *, prefix_embeds=None,
+               kv_weight=None):
+    """Returns (logits (B, St, V) over token positions only, aux_loss)."""
+    B, S = tokens.shape
+    h = _embed_tokens(params, cfg, tokens)
+    pfx = 0
+    if prefix_embeds is not None:
+        pfx = prefix_embeds.shape[1]
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    L = h.shape[1]
+    h = logical(h, ("pod", "data"), None, None)
+    positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+
+    aux_total = 0.0
+    if _uses_scan(cfg):
+        kind = block_kind(cfg, 0)
+        if cfg.global_every > 0:
+            # local:global cadence (gemma3): one scan body with a
+            # lax.cond on a per-layer flag -- compile cost stays flat in
+            # depth instead of unrolling 34 layers.
+            flags = jnp.array([cfg.layer_uses_global_attn(i)
+                               for i in range(cfg.num_layers)])
+
+            def body(carry, xs):
+                hh, aux = carry
+                lp, flag = xs
+
+                def branch(glob):
+                    def f(h_):
+                        h2, a = block_apply(lp, cfg, kind, h_, positions,
+                                            kv_weight=kv_weight,
+                                            layer_global=glob)
+                        return h2, jnp.asarray(a, jnp.float32)
+                    return f
+
+                hh, a = jax.lax.cond(flag, branch(True), branch(False), hh)
+                return (hh, aux + a), None
+
+            xs = (params["layers"], flags)
+        else:
+            def body(carry, lp):
+                hh, aux = carry
+                hh, a = block_apply(lp, cfg, kind, hh, positions,
+                                    kv_weight=kv_weight)
+                return (hh, aux + a), None
+
+            xs = params["layers"]
+
+        body_fn = _remat(cfg, body) if cfg.remat else body
+        (h, aux_total), _ = jax.lax.scan(body_fn, (h, 0.0), xs)
+    else:
+        inv = 0
+        e0 = h
+        for i, lp in enumerate(params["layers"]):
+            kind = block_kind(cfg, i)
+
+            def body(hh):
+                return block_apply(lp, cfg, kind, hh, positions,
+                                   kv_weight=kv_weight,
+                                   layer_global=cfg.layer_uses_global_attn(i))
+
+            if cfg.remat:
+                h2, aux = _remat(cfg, body)(h)
+            else:
+                h2, aux = body(h)
+            h = h2
+            aux_total = aux_total + aux
+            if cfg.family == "hybrid" and cfg.layer_is_attn(i):
+                xin = dense_apply(params["shared_proj"][inv],
+                                  jnp.concatenate([h, e0], axis=-1))
+                h2, _ = block_apply(params["shared"], cfg, "dense", xin,
+                                    positions, kv_weight=kv_weight)
+                h = h + (h2 - xin)   # residual of the shared block only
+                inv += 1
+    logits = _logits(params, cfg, h)
+    if pfx:
+        logits = logits[:, pfx:]
+    return logits, aux_total
+
+
+def lm_loss(params, cfg: ModelConfig, batch):
+    """batch: tokens (B, S) [+ patch_embeds / frames, loss_mask].
+    Next-token CE; returns (loss, metrics)."""
+    tokens = batch["tokens"]
+    logits, aux = lm_forward(params, cfg, tokens,
+                             prefix_embeds=batch.get("patch_embeds"))
+    tgt = tokens[:, 1:]
+    lgt = logits[:, :-1]
+    mask = batch.get("loss_mask")
+    mask = (jnp.ones_like(tgt, jnp.float32) if mask is None
+            else mask[:, 1:].astype(jnp.float32))
+    logz = jax.nn.logsumexp(lgt, axis=-1)
+    # gold logit via one-hot contraction: shards cleanly over the
+    # model-parallel vocab axis (take_along_axis would gather the full
+    # unsharded logits)
+    onehot = jax.nn.one_hot(tgt, lgt.shape[-1], dtype=lgt.dtype)
+    onehot = logical(onehot, ("pod", "data"), None, "model")
+    gold = jnp.einsum("bsv,bsv->bs", lgt, onehot)
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / denom + aux
+    return loss, {"nll": nll.sum() / denom, "aux": aux,
+                  "ntok": mask.sum()}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode
+# ---------------------------------------------------------------------------
+
+def _block_prefill(p, cfg, kind, h, positions, Lmax, *, layer_global=True):
+    if kind == "ssm":
+        out, st = mamba2_apply(p["mixer"], cfg, rmsnorm_apply(p["ln"], h),
+                               return_state=True)
+        return h + out, st
+    a, cache = prefill_into_cache(p["attn"], cfg, rmsnorm_apply(p["ln1"], h),
+                                  positions, Lmax, layer_global=layer_global)
+    h = h + a
+    if kind == "moe":
+        m, _ = moe_apply(p["moe"], cfg, rmsnorm_apply(p["ln2"], h),
+                         cfg.mlp_activation)
+    else:
+        m = mlp_apply(p["mlp"], rmsnorm_apply(p["ln2"], h),
+                      cfg.mlp_activation)
+    return h + m, cache
+
+
+def _block_decode(p, cfg, kind, h, t, cache, *, layer_global=True):
+    if kind == "ssm":
+        out, st = mamba2_decode(p["mixer"], cfg, rmsnorm_apply(p["ln"], h),
+                                cache)
+        return h + out, st
+    a, cache = attn_decode(p["attn"], cfg, rmsnorm_apply(p["ln1"], h), t,
+                           cache, layer_global=layer_global)
+    h = h + a
+    if kind == "moe":
+        m, _ = moe_apply(p["moe"], cfg, rmsnorm_apply(p["ln2"], h),
+                         cfg.mlp_activation)
+    else:
+        m = mlp_apply(p["mlp"], rmsnorm_apply(p["ln2"], h),
+                      cfg.mlp_activation)
+    return h + m, cache
+
+
+def lm_prefill(params, cfg: ModelConfig, tokens, Lmax: int, *,
+               prefix_embeds=None):
+    """Teacher-forced pass over the prompt building decode caches.
+    Returns (last_logits (B, V), caches, next_pos (B,))."""
+    B, S = tokens.shape
+    h = _embed_tokens(params, cfg, tokens)
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    L = h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+
+    if _stacked_caches(cfg):
+        kind = block_kind(cfg, 0)
+
+        def body(hh, lp):
+            hh, cache = _block_prefill(lp, cfg, kind, hh, positions, Lmax)
+            return hh, cache
+
+        h, caches = jax.lax.scan(body, h, params["layers"])
+    else:
+        caches = []
+        inv = 0
+        e0 = h
+        stacked = _uses_scan(cfg)
+        for i in range(cfg.num_layers):
+            lp = (jax.tree.map(lambda x: x[i], params["layers"])
+                  if stacked else params["layers"][i])
+            kind = block_kind(cfg, i)
+            h, cache = _block_prefill(lp, cfg, kind, h, positions, Lmax,
+                                      layer_global=cfg.layer_uses_global_attn(i))
+            caches.append(cache)
+            if cfg.family == "hybrid" and cfg.layer_is_attn(i):
+                xin = dense_apply(params["shared_proj"][inv],
+                                  jnp.concatenate([h, e0], axis=-1))
+                h2, shared_cache = _block_prefill(
+                    params["shared"], cfg, "dense", xin, positions, Lmax)
+                h = h + (h2 - xin)
+                caches.append(shared_cache)
+                inv += 1
+        caches = list(caches)
+    logits = _logits(params, cfg, h[:, -1:])[:, 0]
+    next_pos = jnp.full((B,), L, jnp.int32)
+    return logits, caches, next_pos
+
+
+def lm_decode_step(params, cfg: ModelConfig, caches, token, t):
+    """One decode step.  token: (B,) int32; t: (B,) positions.
+    Returns (logits (B, V), new_caches)."""
+    B = token.shape[0]
+    h = _embed_tokens(params, cfg, token[:, None])
+
+    if _stacked_caches(cfg):
+        kind = block_kind(cfg, 0)
+
+        def body(hh, xs):
+            lp, cache = xs
+            hh, cache = _block_decode(lp, cfg, kind, hh, t, cache)
+            return hh, cache
+
+        h, caches = jax.lax.scan(body, h, (params["layers"], caches))
+    else:
+        new_caches = []
+        ci = 0
+        inv = 0
+        e0 = h
+        stacked = _uses_scan(cfg)
+        for i in range(cfg.num_layers):
+            lp = (jax.tree.map(lambda x: x[i], params["layers"])
+                  if stacked else params["layers"][i])
+            kind = block_kind(cfg, i)
+            h, cache = _block_decode(lp, cfg, kind, h, t, caches[ci],
+                                     layer_global=cfg.layer_uses_global_attn(i))
+            new_caches.append(cache)
+            ci += 1
+            if cfg.family == "hybrid" and cfg.layer_is_attn(i):
+                xin = dense_apply(params["shared_proj"][inv],
+                                  jnp.concatenate([h, e0], axis=-1))
+                h2, cache = _block_decode(params["shared"], cfg, "dense",
+                                          xin, t, caches[ci])
+                h = h + (h2 - xin)
+                new_caches.append(cache)
+                ci += 1
+                inv += 1
+        caches = new_caches
+    logits = _logits(params, cfg, h)[:, 0]
+    return logits, caches
+
+
+def lm_init_decode_caches(params, cfg: ModelConfig, B: int, Lmax: int):
+    """Fresh (empty) decode caches matching lm_decode_step's structure."""
+    caches = []
+    d_inner, H, G, N, conv_dim = (mamba2_dims(cfg) if cfg.family in
+                                  ("ssm", "hybrid") else (0,) * 5)
+    for i in range(cfg.num_layers):
+        kind = block_kind(cfg, i)
+        if kind == "ssm":
+            caches.append((
+                jnp.zeros((B, H, N, cfg.ssm_head_dim), jnp.float32),
+                jnp.zeros((B, cfg.ssm_conv_width - 1, conv_dim), cfg.jdtype),
+            ))
+        else:
+            caches.append(init_decode_cache(
+                cfg, B, Lmax, layer_global=cfg.layer_uses_global_attn(i),
+                dtype=cfg.jdtype))
+        if cfg.family == "hybrid" and cfg.layer_is_attn(i):
+            caches.append(init_decode_cache(cfg, B, Lmax, dtype=cfg.jdtype))
+    if _stacked_caches(cfg):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    return caches

@@ -1,0 +1,6 @@
+"""Pure-JAX optimizers, schedules, and gradient compression."""
+from .adamw import (adamw, adafactor, apply_updates, cosine_schedule,
+                    linear_schedule, clip_by_global_norm, global_norm,
+                    Optimizer, AdamWState, AdafactorState)
+from .compression import (init_error_feedback, int8_compress, topk_compress,
+                          EFState)

@@ -1,0 +1,181 @@
+"""Pure-JAX optimizers (optax is unavailable offline): AdamW and
+Adafactor, with global-norm clipping and LR schedules.
+
+API mirrors the (init, update) gradient-transformation convention:
+
+    opt = adamw(lr_schedule, weight_decay=0.1)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5
+                         * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def linear_schedule(peak_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        dec = peak_lr * jnp.clip(1.0 - (step - warmup)
+                                 / max(total - warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, warm, dec)
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw(lr: Callable, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          clip_norm: Optional[float] = 1.0) -> Optimizer:
+    def init(params):
+        f32 = lambda p: jnp.zeros_like(p, jnp.float32)
+        return AdamWState(jnp.zeros((), jnp.int32),
+                          jax.tree.map(f32, params),
+                          jax.tree.map(f32, params))
+
+    def update(grads, state, params):
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        stepf = step.astype(jnp.float32)
+        lr_t = lr(step)
+        bc1 = 1 - b1 ** stepf
+        bc2 = 1 - b2 ** stepf
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = -(lr_t * ((m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                          + weight_decay * p.astype(jnp.float32)))
+            return u, m, v
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_m = tdef.flatten_up_to(state.mu)
+        flat_v = tdef.flatten_up_to(state.nu)
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p
+               in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = tdef.unflatten([o[0] for o in out])
+        mu = tdef.unflatten([o[1] for o in out])
+        nu = tdef.unflatten([o[2] for o in out])
+        return updates, AdamWState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; memory-lean for 10B+ params)
+# ---------------------------------------------------------------------------
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Any     # row factors (or full v for <2D)
+    vc: Any     # col factors
+
+
+def adafactor(lr: Callable, decay=0.8, eps=1e-30,
+              clip_threshold=1.0) -> Optimizer:
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def vr_init(p):
+            if _factored(p):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros_like(p, jnp.float32)
+
+        def vc_init(p):
+            if _factored(p):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((1,), jnp.float32)
+
+        return AdafactorState(jnp.zeros((), jnp.int32),
+                              jax.tree.map(vr_init, params),
+                              jax.tree.map(vc_init, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        stepf = step.astype(jnp.float32)
+        beta = 1.0 - stepf ** (-decay)
+        lr_t = lr(step)
+
+        def upd(g, vr, vc, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * vr + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * vc + (1 - beta) * g2.mean(axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+                )[..., None]
+                cfac = jax.lax.rsqrt(vc)[..., None, :]
+                u = g * rfac * cfac
+            else:
+                vr = beta * vr + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(vr)
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return -lr_t * u, vr, vc
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_r = tdef.flatten_up_to(state.vr)
+        flat_c = tdef.flatten_up_to(state.vc)
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, r, c, p) for g, r, c, p
+               in zip(flat_g, flat_r, flat_c, flat_p)]
+        updates = tdef.unflatten([o[0] for o in out])
+        vr = tdef.unflatten([o[1] for o in out])
+        vc = tdef.unflatten([o[2] for o in out])
+        return updates, AdafactorState(step, vr, vc)
+
+    return Optimizer(init, update)

@@ -1,0 +1,81 @@
+"""Gradient compression with error feedback for cross-pod all-reduce.
+
+At 2+ pods the data-center interconnect (DCI) between pods is the
+scarcest bandwidth; compressing the *cross-pod* gradient reduction is the
+standard distributed-optimization trick.  We implement:
+
+* ``int8_compress`` -- per-tensor scale int8 quantization (4x for f32,
+  2x for bf16) with error-feedback residual accumulation, and
+* ``topk_compress`` -- magnitude top-k sparsification (k as a fraction)
+  with error feedback.
+
+Both are *reduction-compatible*: the compressed representation is
+all-reduced (psum of dequantized values inside shard_map over the
+``pod`` axis), and the quantization error is carried to the next step, so
+SGD-style convergence is preserved (Karimireddy et al., 2019).
+
+Usage (see ``repro.train.loop``): wrap the gradient tree between the
+in-pod reduction (done by pjit's sharding of the batch over ``data``)
+and the optimizer update.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any
+
+
+def init_error_feedback(params) -> EFState:
+    return EFState(jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _quantize_int8(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def int8_compress(grads, ef: EFState) -> Tuple[Any, EFState]:
+    """Returns (compressed-then-decompressed grads, new error feedback).
+    The int8 payload is what would cross the pod link; the caller
+    all-reduces the dequantized values (numerically identical, and lets
+    XLA fuse; the wire format is documented for a real deployment)."""
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s = _quantize_int8(x)
+        deq = _dequantize_int8(q, s)
+        return deq.astype(g.dtype), x - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(ef.residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (tdef.unflatten([o[0] for o in out]),
+            EFState(tdef.unflatten([o[1] for o in out])))
+
+
+def topk_compress(grads, ef: EFState, frac: float = 0.05
+                  ) -> Tuple[Any, EFState]:
+    """Keep the top ``frac`` fraction of entries by magnitude."""
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        flat = x.reshape(-1)
+        k = max(1, int(flat.shape[0] * frac))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        kept = jnp.where(jnp.abs(x) >= thresh, x, 0.0)
+        return kept.astype(g.dtype), x - kept
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(ef.residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (tdef.unflatten([o[0] for o in out]),
+            EFState(tdef.unflatten([o[1] for o in out])))

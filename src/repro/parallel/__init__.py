@@ -1,0 +1,4 @@
+"""Distribution: sharding rules, pipeline parallelism."""
+from .sharding import (param_shardings, batch_shardings, cache_shardings,
+                       replicated, dp_axes, dp_size, tp_axis, tp_size)
+from .pipeline import pipeline_apply

@@ -1,0 +1,2 @@
+"""Batched serving engine with hierarchical KV caches."""
+from .engine import ServeEngine, Request

@@ -1,0 +1,128 @@
+"""Batched serving engine: fixed-slot continuous batching over the
+unified model API (prefill + single-token decode with hierarchical KV
+caches).
+
+Design points for scale (DESIGN.md):
+* decode state is a pure pytree -- slots join/leave by writing rows, the
+  jit'd step never retraces;
+* the hierarchical H1D cache gives O(nr log L) attention per token, so
+  long-context decode cost is flat in practice;
+* the engine is deployment-shaped (request queue, slot map, step loop)
+  while staying single-host here; the multi-pod serve driver shards the
+  slot dim over DP axes (launch/serve.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ModelConfig, get_model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray           # (S,) int32
+    max_new_tokens: int = 32
+    out_tokens: Optional[List[int]] = None
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 8,
+                 max_len: int = 512, greedy: bool = True, seed: int = 0):
+        if cfg.family == "encdec":
+            raise NotImplementedError(
+                "ServeEngine targets decoder-only families; enc-dec serving "
+                "goes through launch/serve.py with per-request encoder runs")
+        from repro.models.transformer import _stacked_caches
+        self.cfg = cfg
+        self.params = params
+        self.fns = get_model(cfg)
+        self.slots = slots
+        self.max_len = max_len
+        self.greedy = greedy
+        self.key = jax.random.PRNGKey(seed)
+        self._slot_axis = 1 if _stacked_caches(cfg) else 0
+
+        self.caches = self.fns.init_caches(params, cfg, slots, max_len)
+        self.tokens = jnp.zeros((slots,), jnp.int32)
+        self.pos = jnp.zeros((slots,), jnp.int32)
+        self.active = np.zeros((slots,), bool)
+        self.req: List[Optional[Request]] = [None] * slots
+        self.queue: List[Request] = []
+
+        self._decode = jax.jit(
+            lambda p, c, tok, t: self.fns.decode_step(p, cfg, c, tok, t))
+        self._prefill1 = jax.jit(
+            lambda p, batch: self.fns.prefill(p, cfg, batch, max_len))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        req.out_tokens = []
+        self.queue.append(req)
+
+    def _admit(self):
+        """Prefill queued requests into free slots (one at a time keeps
+        the prefill shape static; batched prefill is a trivial extension
+        when prompts are length-bucketed)."""
+        for s in range(self.slots):
+            if self.active[s] or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            batch = {"tokens": jnp.asarray(req.prompt)[None]}
+            logits, caches, pos = self._prefill1(self.params, batch)
+            nxt = int(jnp.argmax(logits[0]))
+            # Write slot s.  The slot dim (0, or 1 for scanned layer
+            # stacks) may fold kv-heads into the batch (h1d caches:
+            # B*Hkv rows), so slot s spans rows [s*r, (s+1)*r) with
+            # r = full_rows // slots == rows of the B=1 prefill cache.
+            ax = self._slot_axis
+
+            def write(full, one):
+                r = full.shape[ax] // self.slots
+                idx = [slice(None)] * full.ndim
+                idx[ax] = slice(s * r, (s + 1) * r)
+                return full.at[tuple(idx)].set(one)
+
+            self.caches = jax.tree.map(write, self.caches, caches)
+            self.tokens = self.tokens.at[s].set(nxt)
+            self.pos = self.pos.at[s].set(int(pos[0]))
+            self.active[s] = True
+            self.req[s] = req
+            req.out_tokens.append(nxt)
+
+    def step(self) -> int:
+        """One engine tick: admit + one decode step for all active slots.
+        Returns number of active slots."""
+        self._admit()
+        if not self.active.any():
+            return 0
+        logits, self.caches = self._decode(self.params, self.caches,
+                                           self.tokens, self.pos)
+        if self.greedy:
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        else:
+            self.key, k = jax.random.split(self.key)
+            nxt = jax.random.categorical(k, logits).astype(jnp.int32)
+        self.tokens = nxt
+        self.pos = self.pos + 1
+        nxt_host = np.asarray(nxt)
+        for s in range(self.slots):
+            if not self.active[s]:
+                continue
+            req = self.req[s]
+            req.out_tokens.append(int(nxt_host[s]))
+            done = (len(req.out_tokens) >= req.max_new_tokens
+                    or int(self.pos[s]) >= self.max_len - 1)
+            if done:
+                self.active[s] = False
+                self.req[s] = None
+        return int(self.active.sum())
+
+    def run(self) -> None:
+        while self.queue or self.active.any():
+            self.step()

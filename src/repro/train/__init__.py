@@ -1,0 +1,4 @@
+"""Training loop, checkpointing, fault tolerance."""
+from .loop import (TrainState, TrainConfig, make_train_step, init_state,
+                   train, Watchdog, make_optimizer)
+from . import checkpoint

@@ -1,0 +1,130 @@
+"""Core hierarchical attention vs dense oracles, exactness, causality."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (h1d_attention, h1d_attention_mha, dense_attention,
+                        h1d_dense_oracle)
+
+MODES = [(False, "coarse-q"), (True, "coarse-q"), (True, "fine-q")]
+
+
+def rand(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def keys(n, seed=0):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+@pytest.mark.parametrize("causal,mode", MODES)
+@pytest.mark.parametrize("L,nr", [(64, 8), (128, 16), (256, 4), (32, 32)])
+def test_matches_dense_oracle(L, nr, causal, mode):
+    k1, k2, k3 = keys(3)
+    q, k, v = rand(k1, 2, 2, L, 16), rand(k2, 2, L, 16), rand(k3, 2, L, 8)
+    z1 = h1d_attention(q, k, v, nr=nr, causal=causal, causal_mode=mode)
+    z2 = h1d_dense_oracle(q, k, v, nr=nr, causal=causal, causal_mode=mode)
+    np.testing.assert_allclose(z1, z2, atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("L,nr", [(16, 8), (32, 16), (8, 8)])
+def test_exact_when_no_approximation(L, nr, causal):
+    """With <= 2 level-0 blocks the tridiagonal covers all pairs: H1D
+    must equal standard softmax attention exactly."""
+    k1, k2, k3 = keys(3, seed=1)
+    q, k, v = rand(k1, 1, 1, L, 8), rand(k2, 1, L, 8), rand(k3, 1, L, 8)
+    z1 = h1d_attention(q, k, v, nr=nr, causal=causal)
+    z2 = dense_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(z1, z2, atol=2e-5, rtol=1e-4)
+
+
+def test_fine_q_causality_no_future_leak():
+    k1, k2, k3, k4 = keys(4, seed=2)
+    L, nr, cut = 128, 8, 77
+    q, k, v = rand(k1, 1, 1, L, 8), rand(k2, 1, L, 8), rand(k3, 1, L, 8)
+    z1 = h1d_attention(q, k, v, nr=nr, causal=True, causal_mode="fine-q")
+    q2 = q.at[:, :, cut:].add(rand(k4, 1, 1, L - cut, 8))
+    k2_ = k.at[:, cut:].add(1.7)
+    v2 = v.at[:, cut:].add(-2.3)
+    z2 = h1d_attention(q2, k2_, v2, nr=nr, causal=True, causal_mode="fine-q")
+    np.testing.assert_array_equal(np.asarray(z1[:, :, :cut]),
+                                  np.asarray(z2[:, :, :cut]))
+
+
+def test_coarse_q_is_paper_faithful_but_leaks():
+    """Documents the coarse-query variant's future-information leak
+    through attention *weights* (DESIGN.md 1.2): perturbing future tokens
+    changes past outputs.  This is why fine-q is the serving default."""
+    k1, k2, k3, k4 = keys(4, seed=3)
+    L, nr, cut = 128, 8, 65
+    q, k, v = rand(k1, 1, 1, L, 8), rand(k2, 1, L, 8), rand(k3, 1, L, 8)
+    z1 = h1d_attention(q, k, v, nr=nr, causal=True, causal_mode="coarse-q")
+    q2 = q.at[:, :, cut:].add(rand(k4, 1, 1, L - cut, 8))
+    z2 = h1d_attention(q2, k, v, nr=nr, causal=True, causal_mode="coarse-q")
+    assert float(jnp.abs(z1[:, :, :cut] - z2[:, :, :cut]).max()) > 1e-6
+
+
+def test_rows_sum_to_one():
+    """Applying attention to constant ones values must return ones
+    (D-normalization correctness, Algorithm 1)."""
+    k1, k2 = keys(2, seed=4)
+    L, nr = 256, 16
+    q, k = rand(k1, 2, 1, L, 8), rand(k2, 2, L, 8)
+    v = jnp.ones((2, L, 4))
+    for causal, mode in MODES:
+        z = h1d_attention(q, k, v, nr=nr, causal=causal, causal_mode=mode)
+        np.testing.assert_allclose(z, 1.0, atol=1e-5)
+
+
+def test_numerically_stable_large_logits():
+    k1, k2, k3 = keys(3, seed=5)
+    L, nr = 128, 8
+    q = rand(k1, 1, 1, L, 8) * 200.0
+    k = rand(k2, 1, L, 8) * 200.0
+    v = rand(k3, 1, L, 4)
+    for causal, mode in MODES:
+        z = h1d_attention(q, k, v, nr=nr, causal=causal, causal_mode=mode)
+        assert np.isfinite(np.asarray(z)).all()
+
+
+def test_kv_weight_pad_invariance():
+    k1, k2, k3 = keys(3, seed=6)
+    L, valid, nr = 128, 90, 8
+    q, k, v = rand(k1, 1, 1, L, 8), rand(k2, 1, L, 8), rand(k3, 1, L, 8)
+    w = (jnp.arange(L) < valid).astype(jnp.float32)[None]
+    z1 = h1d_attention(q, k, v, nr=nr, kv_weight=w)
+    z2 = h1d_attention(q, k.at[:, valid:].set(99.0),
+                       v.at[:, valid:].set(-99.0), nr=nr, kv_weight=w)
+    np.testing.assert_array_equal(np.asarray(z1[:, :, :valid]),
+                                  np.asarray(z2[:, :, :valid]))
+
+
+def test_mha_gqa_wrapper_matches_manual():
+    k1, k2, k3 = keys(3, seed=7)
+    B, L, Hq, Hkv, D, nr = 2, 64, 4, 2, 8, 8
+    q = rand(k1, B, L, Hq, D)
+    k = rand(k2, B, L, Hkv, D)
+    v = rand(k3, B, L, Hkv, D)
+    z = h1d_attention_mha(q, k, v, nr=nr, causal=True)
+    for h in range(Hq):
+        kv = h // (Hq // Hkv)
+        zh = h1d_attention(q[:, :, h][:, None], k[:, :, kv], v[:, :, kv],
+                           nr=nr, causal=True)[:, 0]
+        np.testing.assert_allclose(z[:, :, h], zh, atol=2e-5, rtol=1e-4)
+
+
+@given(st.sampled_from([4, 8, 16]), st.sampled_from([4, 8]),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_property_oracle_agreement(nb, nr, seed):
+    L = nb * nr
+    k1, k2, k3 = keys(3, seed=seed % 1000)
+    q, k, v = rand(k1, 1, 1, L, 4), rand(k2, 1, L, 4), rand(k3, 1, L, 4)
+    for causal, mode in MODES:
+        z1 = h1d_attention(q, k, v, nr=nr, causal=causal, causal_mode=mode)
+        z2 = h1d_dense_oracle(q, k, v, nr=nr, causal=causal,
+                              causal_mode=mode)
+        np.testing.assert_allclose(z1, z2, atol=3e-5, rtol=1e-3)

@@ -1,0 +1,102 @@
+"""Pallas kernel sweeps vs the pure-jnp oracle (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import band_attention, band_attention_ref, MODES
+
+
+def keys(n, seed=0):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+def make(B, G, L, d, dv, dtype, seed=0):
+    k1, k2, k3 = keys(3, seed)
+    q = jax.random.normal(k1, (B, G, L, d), dtype)
+    k = jax.random.normal(k2, (B, L, d), dtype)
+    v = jax.random.normal(k3, (B, L, dv), dtype)
+    w = jnp.ones((B, L), jnp.float32)
+    return q, k, v, w
+
+
+SHAPES = [
+    (1, 1, 128, 16, 16, 16),
+    (2, 2, 256, 32, 32, 16),
+    (1, 4, 256, 64, 64, 8),
+    (2, 1, 384, 16, 8, 32),     # L not a power of two (tq must divide)
+    (1, 1, 256, 128, 128, 16),
+]
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("B,G,L,d,dv,nr", SHAPES)
+def test_kernel_matches_ref_f32(B, G, L, d, dv, nr, mode):
+    if L % 128:
+        pytest.skip("tile size must divide L")
+    q, k, v, w = make(B, G, L, d, dv, jnp.float32)
+    yr, dr, mr = band_attention_ref(q, k, v, w, nr=nr, mode=mode)
+    yk, dk, mk = band_attention(q, k, v, w, nr=nr, mode=mode,
+                                impl="pallas_interpret")
+    np.testing.assert_allclose(yk, yr, atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(dk, dr, atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(mk, mr, atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_kernel_matches_ref_bf16(mode):
+    q, k, v, w = make(1, 2, 256, 32, 32, jnp.bfloat16, seed=1)
+    yr, dr, mr = band_attention_ref(q, k, v, w, nr=16, mode=mode)
+    yk, dk, mk = band_attention(q, k, v, w, nr=16, mode=mode,
+                                impl="pallas_interpret")
+    np.testing.assert_allclose(yk, yr, atol=3e-2, rtol=3e-2)
+    np.testing.assert_allclose(dk, dr, atol=3e-2, rtol=3e-2)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_jnp_blocked_matches_ref(mode):
+    q, k, v, w = make(2, 2, 192, 16, 16, jnp.float32, seed=2)
+    yr, dr, mr = band_attention_ref(q, k, v, w, nr=16, mode=mode)
+    yj, dj, mj = band_attention(q, k, v, w, nr=16, mode=mode, impl="jnp")
+    np.testing.assert_allclose(yj, yr, atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(dj, dr, atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(mj, mr, atol=2e-5, rtol=1e-4)
+
+
+def test_kernel_ragged_weights():
+    q, k, v, w = make(1, 1, 256, 16, 16, jnp.float32, seed=3)
+    w = (jnp.arange(256) < 201).astype(jnp.float32)[None]
+    for mode in MODES:
+        yr, dr, mr = band_attention_ref(q, k, v, w, nr=16, mode=mode)
+        yk, dk, mk = band_attention(q, k, v, w, nr=16, mode=mode,
+                                    impl="pallas_interpret")
+        np.testing.assert_allclose(yk, yr, atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_kernel_custom_vjp_grads(mode):
+    q, k, v, w = make(1, 1, 256, 16, 16, jnp.float32, seed=4)
+
+    def loss(fn):
+        def f(q, k, v, w):
+            y, dn, m = fn(q, k, v, w)
+            z = y / jnp.maximum(dn, 1e-9)[..., None]
+            return jnp.sum(z ** 2) + jnp.sum(jnp.tanh(m)) + 1e-3 * dn.sum()
+        return f
+
+    fk = loss(lambda *a: band_attention(*a, nr=16, mode=mode,
+                                        impl="pallas_interpret"))
+    fr = loss(lambda *a: band_attention_ref(*a, nr=16, mode=mode))
+    gk = jax.grad(fk, argnums=(0, 1, 2, 3))(q, k, v, w)
+    gr = jax.grad(fr, argnums=(0, 1, 2, 3))(q, k, v, w)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-3)
+
+
+def test_kernel_tq_tiling_variants():
+    q, k, v, w = make(1, 1, 512, 32, 32, jnp.float32, seed=5)
+    yr, dr, mr = band_attention_ref(q, k, v, w, nr=16, mode="l0_causal")
+    for tq in (128, 256, 512):
+        yk, dk, mk = band_attention(q, k, v, w, nr=16, mode="l0_causal",
+                                    impl="pallas_interpret", tq=tq)
+        np.testing.assert_allclose(yk, yr, atol=2e-5, rtol=1e-4)

@@ -1,0 +1,130 @@
+"""Per-architecture smoke tests: one forward/train step on CPU with the
+reduced same-family config; output shapes + finiteness + decode path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, PAPER_IDS, get_smoke_config, get_config
+from repro.models import get_model
+
+
+def make_batch(cfg, key, B=2, S=64):
+    tok = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tok}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = 0.1 * jnp.ones(
+            (B, cfg.prefix_len, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = 0.1 * jnp.ones((B, S, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_arch_smoke_train_step(name):
+    cfg = get_smoke_config(name)
+    fns = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params, specs = fns.init(key, cfg)
+    # twin trees must match
+    assert (jax.tree_util.tree_structure(params)
+            == jax.tree_util.tree_structure(
+                jax.tree.map(lambda s: 0, specs,
+                             is_leaf=lambda x: hasattr(x, "_normalized_spec")
+                             or type(x).__name__ == "PartitionSpec")))
+    batch = make_batch(cfg, key)
+    loss, metrics = fns.loss(params, cfg, batch)
+    assert np.isfinite(float(loss))
+    grads = jax.grad(lambda p: fns.loss(p, cfg, batch)[0])(params)
+    leaves = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g)).all() for g in leaves)
+    assert sum(float(jnp.sum(jnp.abs(g))) for g in leaves) > 0
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_arch_smoke_prefill_decode(name):
+    cfg = get_smoke_config(name)
+    fns = get_model(cfg)
+    key = jax.random.PRNGKey(1)
+    params, _ = fns.init(key, cfg)
+    B = 2
+    batch = make_batch(cfg, key, B=B, S=32)
+    logits, caches, pos = fns.prefill(params, cfg, batch, 64)
+    assert logits.shape == (B, cfg.vocab_size)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(3):
+        logits, caches = fns.decode_step(params, cfg, caches, tok, pos)
+        assert logits.shape == (B, cfg.vocab_size)
+        assert np.isfinite(np.asarray(logits)).all()
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        pos = pos + 1
+
+
+@pytest.mark.parametrize("name", PAPER_IDS)
+def test_paper_configs_instantiate(name):
+    cfg = get_config(name)
+    fns = get_model(cfg)
+    params, _ = fns.init(jax.random.PRNGKey(0), cfg)
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    if name == "h1d-lm-53m":
+        assert 40e6 < n < 70e6, n   # paper: 53M
+    if name == "h1d-lm-144m":
+        assert 110e6 < n < 180e6, n  # paper: 144M
+
+
+def test_full_configs_match_assignment():
+    """The exact numbers from the assigned pool."""
+    expect = {
+        "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+        "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+        "llama3.2-1b": (16, 2048, 32, 8, 8192, 128256),
+        "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+        "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 5632, 151936),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    }
+    for name, (L, d, hq, hkv, ff, vocab) in expect.items():
+        cfg = get_config(name)
+        assert cfg.num_layers == L and cfg.d_model == d, name
+        assert cfg.num_heads == hq and cfg.num_kv_heads == hkv, name
+        assert cfg.d_ff == ff and cfg.vocab_size == vocab, name
+    m = get_config("mamba2-1.3b")
+    assert (m.num_layers, m.d_model, m.vocab_size, m.ssm_state) == \
+        (48, 2048, 50280, 128)
+    q = get_config("qwen2-moe-a2.7b")
+    assert (q.moe_experts, q.moe_top_k, q.moe_d_ff) == (60, 4, 1408)
+    a = get_config("arctic-480b")
+    assert (a.moe_experts, a.moe_top_k, a.moe_dense_residual) == \
+        (128, 2, True)
+    z = get_config("zamba2-1.2b")
+    assert z.ssm_state == 64 and z.family == "hybrid"
+    g = get_config("gemma3-4b")
+    assert g.sliding_window > 0 and g.global_every == 6
+
+
+def test_gemma3_local_global_cadence():
+    cfg = get_config("gemma3-4b")
+    globals_ = [i for i in range(cfg.num_layers)
+                if cfg.layer_uses_global_attn(i)]
+    assert globals_ == [5, 11, 17, 23, 29]      # 5:1 local:global
+
+
+def test_vlm_loss_ignores_prefix_positions():
+    cfg = get_smoke_config("llava-next-34b")
+    fns = get_model(cfg)
+    key = jax.random.PRNGKey(2)
+    params, _ = fns.init(key, cfg)
+    batch = make_batch(cfg, key, B=1, S=32)
+    l1, _ = fns.loss(params, cfg, batch)
+    batch2 = dict(batch)
+    batch2["patch_embeds"] = batch["patch_embeds"] * 2.0
+    l2, _ = fns.loss(params, cfg, batch2)
+    # prefix embeddings influence the loss (through attention)...
+    assert np.isfinite(float(l1)) and np.isfinite(float(l2))
+    # ...but logits are only scored on token positions (shape check)
+    from repro.models.transformer import lm_forward
+    logits, _ = lm_forward(params, cfg, batch["tokens"],
+                           prefix_embeds=batch["patch_embeds"])
+    assert logits.shape[1] == batch["tokens"].shape[1]

@@ -1,0 +1,109 @@
+"""Optimizers, schedules, gradient compression with error feedback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (adamw, adafactor, apply_updates, cosine_schedule,
+                         linear_schedule, clip_by_global_norm, global_norm,
+                         init_error_feedback, int8_compress, topk_compress)
+
+
+def quad_problem(seed=0, dim=8):
+    key = jax.random.PRNGKey(seed)
+    A = jax.random.normal(key, (dim, dim))
+    A = A @ A.T / dim + jnp.eye(dim)
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (dim,))
+
+    def loss(p):
+        x = p["x"]
+        return 0.5 * x @ A @ x - b @ x
+
+    return loss, {"x": jnp.zeros((dim,))}
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: adamw(lambda s: 0.05, weight_decay=0.0),
+    lambda: adafactor(lambda s: 0.5),
+])
+def test_optimizer_converges_on_quadratic(make_opt):
+    loss, params = quad_problem()
+    opt = make_opt()
+    state = opt.init(params)
+    l0 = float(loss(params))
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    assert float(loss(params)) < l0 - 0.5
+
+
+def test_adamw_weight_decay_shrinks_weights():
+    opt = adamw(lambda s: 0.01, weight_decay=0.5)
+    params = {"w": jnp.ones((4,))}
+    state = opt.init(params)
+    zeros = {"w": jnp.zeros((4,))}
+    for _ in range(50):
+        upd, state = opt.update(zeros, state, params)
+        params = apply_updates(params, upd)
+    assert float(jnp.abs(params["w"]).max()) < 1.0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((3,), 10.0), "b": jnp.full((4,), -10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) > 1.0
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    small = {"a": jnp.full((3,), 1e-3), "b": jnp.full((4,), 1e-3)}
+    same, _ = clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(same["a"], small["a"])
+
+
+def test_schedules():
+    cos = cosine_schedule(1.0, warmup=10, total=100)
+    lin = linear_schedule(1.0, warmup=10, total=100)
+    assert float(cos(0)) == 0.0
+    assert abs(float(cos(10)) - 1.0) < 1e-6
+    assert float(cos(100)) < float(cos(50)) < float(cos(10))
+    assert abs(float(lin(100))) < 1e-6
+
+
+def test_int8_compression_error_feedback_unbiased_over_time():
+    """Error feedback: sum of compressed grads converges to sum of true
+    grads (residual stays bounded)."""
+    key = jax.random.PRNGKey(0)
+    g_true = {"w": jax.random.normal(key, (256,))}
+    ef = init_error_feedback(g_true)
+    total_c = jnp.zeros((256,))
+    for i in range(50):
+        gc, ef = int8_compress(g_true, ef)
+        total_c = total_c + gc["w"]
+    total_t = 50 * g_true["w"]
+    # relative error of the accumulated signal is tiny
+    rel = float(jnp.linalg.norm(total_c - total_t)
+                / jnp.linalg.norm(total_t))
+    assert rel < 0.02
+    assert float(jnp.abs(ef.residual["w"]).max()) < 0.1
+
+
+def test_topk_compression_sparsity_and_feedback():
+    key = jax.random.PRNGKey(1)
+    g = {"w": jax.random.normal(key, (1000,))}
+    ef = init_error_feedback(g)
+    gc, ef = topk_compress(g, ef, frac=0.05)
+    nz = int((gc["w"] != 0).sum())
+    assert nz <= 55
+    # residual holds exactly what was dropped
+    np.testing.assert_allclose(np.asarray(gc["w"] + ef.residual["w"]),
+                               np.asarray(g["w"]), atol=1e-6)
+
+
+def test_compressed_sgd_still_converges():
+    loss, params = quad_problem(seed=3)
+    ef = init_error_feedback(params)
+    for _ in range(400):
+        g = jax.grad(loss)(params)
+        gc, ef = int8_compress(g, ef)
+        params = jax.tree.map(lambda p, gg: p - 0.05 * gg, params, gc)
+    g_final = jax.grad(loss)(params)
+    assert float(global_norm(g_final)) < 0.05

@@ -1,0 +1,101 @@
+"""Property tests: the hierarchical partition covers every token pair
+exactly once at the right level (DESIGN.md section 1.1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hierarchy as hc
+from repro.core.ref_attention import _level_mask_coarse, _level_mask_fine_q
+from repro.kernels import band_mask
+
+
+@st.composite
+def shapes(draw):
+    nr = draw(st.sampled_from([2, 4, 8, 16]))
+    nb = draw(st.sampled_from([1, 2, 4, 8, 16]))
+    return nr * nb, nr
+
+
+@given(shapes(), st.booleans())
+@settings(max_examples=30, deadline=None)
+def test_level_assignment_complete_and_disjoint(shape, causal):
+    L, nr = shape
+    lam = hc.level_assignment_map(L, nr, causal=causal)
+    i = np.arange(L)[:, None]
+    j = np.arange(L)[None, :]
+    if causal:
+        assert (lam[j > i] == -1).all()
+        assert (lam[j <= i] >= 0).all()
+    else:
+        assert (lam >= 0).all()
+    # level = smallest l with block distance <= 1
+    M = max(hc.num_levels(L, nr), 1)
+    expect = np.full((L, L), -1)
+    for l in range(M - 1, -1, -1):
+        span = nr * (1 << l)
+        near = np.abs(i // span - j // span) <= 1
+        expect[near] = l
+    if causal:
+        expect[j > i] = -1
+    assert (lam == expect).all()
+
+
+@given(shapes())
+@settings(max_examples=20, deadline=None)
+def test_coarse_masks_partition_exactly(shape):
+    """Union of per-level expanded masks == all pairs, disjointly."""
+    L, nr = shape
+    M = hc.num_levels(L, nr)
+    if M == 0:
+        pytest.skip("single block")
+    total = np.zeros((L, L), np.int64)
+    for l in range(M):
+        Lc = L >> l
+        m = _level_mask_coarse(Lc, nr, l, causal=False)
+        total += np.kron(m, np.ones((1 << l, 1 << l), np.int64))
+    assert total.min() == 1 and total.max() == 1
+
+
+@given(shapes())
+@settings(max_examples=20, deadline=None)
+def test_fine_q_masks_partition_causal(shape):
+    L, nr = shape
+    M = hc.num_levels(L, nr)
+    if M == 0:
+        pytest.skip("single block")
+    i = np.arange(L)[:, None]
+    j = np.arange(L)[None, :]
+    total = np.asarray(_level_mask_coarse(L, nr, 0, causal=True),
+                       np.int64)
+    for l in range(1, M):
+        m = np.asarray(_level_mask_fine_q(L, L >> l, nr, l), np.int64)
+        total += np.repeat(m, 1 << l, axis=1)
+    lower = (j <= i)
+    assert (total[lower] == 1).all()
+    assert (total[~lower] == 0).all()
+
+
+@given(shapes())
+@settings(max_examples=15, deadline=None)
+def test_band_mask_matches_level0_reference(shape):
+    L, nr = shape
+    qi = np.arange(L)[:, None]
+    ki = np.arange(L)[None, :]
+    for mode, causal in (("l0_bidir", False), ("l0_causal", True)):
+        got = np.asarray(band_mask(qi, ki, nr, mode, L))
+        ref = np.asarray(_level_mask_coarse(L, nr, 0, causal=causal))
+        assert (got == ref).all(), mode
+
+
+@given(shapes())
+@settings(max_examples=15, deadline=None)
+def test_band_mask_matches_coarse_reference(shape):
+    Lc, nr = shape
+    if Lc // nr < 2:
+        pytest.skip("needs >= 2 blocks")
+    qi = np.arange(Lc)[:, None]
+    ki = np.arange(Lc)[None, :]
+    for mode, causal in (("coarse_bidir", False), ("coarse_causal", True)):
+        got = np.asarray(band_mask(qi, ki, nr, mode, Lc))
+        ref = np.asarray(_level_mask_coarse(Lc, nr, 1, causal=causal))
+        assert (got == ref).all(), mode

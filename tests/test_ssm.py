@@ -1,0 +1,83 @@
+"""Mamba2 SSD: chunked algorithm vs naive recurrence oracle + decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.common import ModelConfig
+from repro.models.ssm import (ssd_chunked, ssd_reference, ssd_step,
+                              mamba2_init, mamba2_apply, mamba2_decode)
+
+
+def make(B, S, H, P, G, N, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = 0.3 * jax.random.normal(ks[3], (B, S, G, N))
+    Cm = 0.3 * jax.random.normal(ks[4], (B, S, G, N))
+    return x, dt, A, Bm, Cm
+
+
+@pytest.mark.parametrize("chunk", [4, 16, 64])
+def test_ssd_chunked_matches_reference(chunk):
+    x, dt, A, Bm, Cm = make(2, 64, 4, 8, 2, 16)
+    y1, h1 = ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+    y2, h2 = ssd_reference(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(y1, y2, atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(h1, h2, atol=2e-4, rtol=1e-3)
+
+
+@given(st.sampled_from([1, 2]), st.sampled_from([16, 32]),
+       st.sampled_from([2, 4]), st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_ssd_property_chunk_invariance(B, S, H, seed):
+    x, dt, A, Bm, Cm = make(B, S, H, 4, 1, 8, seed=seed)
+    y8, _ = ssd_chunked(x, dt, A, Bm, Cm, chunk=8)
+    yS, _ = ssd_chunked(x, dt, A, Bm, Cm, chunk=S)
+    np.testing.assert_allclose(y8, yS, atol=3e-4, rtol=1e-3)
+
+
+def test_ssd_step_chain_matches_reference():
+    x, dt, A, Bm, Cm = make(1, 32, 2, 4, 1, 8, seed=1)
+    yref, _ = ssd_reference(x, dt, A, Bm, Cm)
+    h = jnp.zeros((1, 2, 8, 4))
+    ys = []
+    for t in range(32):
+        y, h = ssd_step(h, x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t])
+        ys.append(y)
+    np.testing.assert_allclose(jnp.stack(ys, 1), yref, atol=1e-4, rtol=1e-3)
+
+
+def test_mamba2_layer_decode_consistency():
+    cfg = ModelConfig(d_model=32, ssm_state=8, ssm_head_dim=8,
+                      ssm_expand=2, ssm_chunk=8)
+    key = jax.random.PRNGKey(2)
+    p, _ = mamba2_init(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (2, 24, 32))
+    y_full, (h, conv) = mamba2_apply(p, cfg, x, return_state=True)
+    # step-by-step decode must reproduce the full pass
+    import repro.models.ssm as ssm_mod
+    d_inner, H, G, N, conv_dim = ssm_mod.mamba2_dims(cfg)
+    state = (jnp.zeros((2, H, N, cfg.ssm_head_dim)),
+             jnp.zeros((2, cfg.ssm_conv_width - 1, conv_dim)))
+    outs = []
+    for t in range(24):
+        y, state = mamba2_decode(p, cfg, x[:, t:t + 1], state)
+        outs.append(y[:, 0])
+    ydec = jnp.stack(outs, 1)
+    np.testing.assert_allclose(ydec, y_full, atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(state[0], h, atol=2e-4, rtol=1e-3)
+
+
+def test_ssd_state_carry_composes():
+    x, dt, A, Bm, Cm = make(1, 64, 2, 4, 1, 8, seed=3)
+    yf, hf = ssd_chunked(x, dt, A, Bm, Cm, chunk=16)
+    y1, h1 = ssd_chunked(x[:, :32], dt[:, :32], A, Bm[:, :32], Cm[:, :32],
+                         chunk=16)
+    y2, h2 = ssd_chunked(x[:, 32:], dt[:, 32:], A, Bm[:, 32:], Cm[:, 32:],
+                         chunk=16, h0=h1)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), yf,
+                               atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(h2, hf, atol=2e-4, rtol=1e-3)
