@@ -1,7 +1,11 @@
-"""Kernel microbenchmarks: banded block attention (the compute hot-spot)
--- jnp blocked path timing on CPU + allclose check of the Pallas kernel
-in interpret mode.  On-TPU wall-clock is the perf pass's job; here the
-derived column verifies semantics and reports achieved arithmetic.
+"""Kernel microbenchmarks: banded block attention (the compute hot-spot).
+
+Per mode this reports BOTH passes -- ``fwd`` and ``fwd+bwd`` wall-clock
+of the blocked-jnp path on the host backend, plus the fused Pallas
+kernels (forward and the hand-written backward, EXPERIMENTS.md P23) when
+a TPU backend is available.  Interpret-mode allclose checks verify the
+kernel semantics (forward AND gradients) at bench shapes; on-TPU
+wall-clock for the perf ledger is the perf pass's job.
 """
 import jax
 import jax.numpy as jnp
@@ -12,6 +16,14 @@ from repro.kernels import band_attention, band_attention_ref
 from .common import time_fn, emit
 
 
+def _loss(fn):
+    def f(q, k, v, w):
+        y, dn, m = fn(q, k, v, w)
+        z = y / jnp.maximum(dn, 1e-9)[..., None]
+        return jnp.sum(z ** 2) + jnp.sum(jnp.tanh(m))
+    return f
+
+
 def run():
     B, G, L, d, nr = 1, 4, 2048, 64, 16
     key = jax.random.PRNGKey(0)
@@ -20,23 +32,50 @@ def run():
     k = jax.random.normal(k2, (B, L, d))
     v = jax.random.normal(k3, (B, L, d))
     w = jnp.ones((B, L))
+    impls = ["jnp"]
+    if jax.default_backend() == "tpu":
+        impls.append("pallas")
     for mode in ("l0_bidir", "l0_causal", "coarse_bidir", "coarse_causal"):
-        fn = jax.jit(lambda q, k, v, w, m=mode: band_attention(
-            q, k, v, w, nr=nr, mode=m, impl="jnp"))
-        us = time_fn(fn, q, k, v, w, iters=3, warmup=1)
         nbands = 2 if mode.endswith("causal") else 3
         flops = 2 * B * G * L * nr * nbands * d * 2   # S and Y matmuls
-        emit(f"kernel_band_{mode}", us,
-             f"gflops_at_cpu={flops / us / 1e3:.2f}")
-    # interpret-mode correctness at bench shapes
-    ys = band_attention(q[:, :1, :256], k[:, :256], v[:, :256], w[:, :256],
-                        nr=nr, mode="l0_causal", impl="pallas_interpret")
-    yr = band_attention_ref(q[:, :1, :256], k[:, :256], v[:, :256],
-                            w[:, :256], nr=nr, mode="l0_causal")
-    err = max(float(jnp.abs(a - b).max()) for a, b in zip(ys, yr))
-    emit("kernel_pallas_interpret_allclose", 0.0, f"max_err={err:.2e}")
-    assert err < 1e-4
-    return {"err": err}
+        for impl in impls:
+            fwd = jax.jit(lambda q, k, v, w, m=mode, i=impl: band_attention(
+                q, k, v, w, nr=nr, mode=m, impl=i))
+            us = time_fn(fwd, q, k, v, w, iters=3, warmup=1)
+            emit(f"kernel_band_{mode}_{impl}_fwd", us,
+                 f"gflops={flops / us / 1e3:.2f}")
+            fwdbwd = jax.jit(jax.grad(
+                _loss(lambda *a, m=mode, i=impl: band_attention(
+                    *a, nr=nr, mode=m, impl=i)), argnums=(0, 1, 2, 3)))
+            us = time_fn(fwdbwd, q, k, v, w, iters=3, warmup=1)
+            # bwd recomputes S and runs dS@K, dS^T@Q, A^T@GY: ~2.5x fwd
+            emit(f"kernel_band_{mode}_{impl}_fwdbwd", us,
+                 f"gflops={3.5 * flops / us / 1e3:.2f}")
+
+    # interpret-mode correctness at reduced shapes: forward and backward
+    # of the Pallas kernels vs the dense oracle.
+    qs, ks, vs, ws = q[:, :1, :256], k[:, :256], v[:, :256], w[:, :256]
+    err_f = err_b = 0.0
+    for mode in ("l0_causal", "coarse_bidir"):
+        ys = band_attention(qs, ks, vs, ws, nr=nr, mode=mode,
+                            impl="pallas_interpret")
+        yr = band_attention_ref(qs, ks, vs, ws, nr=nr, mode=mode)
+        err_f = max(err_f, max(float(jnp.abs(a - b).max())
+                               for a, b in zip(ys, yr)))
+        gk = jax.grad(_loss(lambda *a, m=mode: band_attention(
+            *a, nr=nr, mode=m, impl="pallas_interpret")),
+            argnums=(0, 1, 2, 3))(qs, ks, vs, ws)
+        gr = jax.grad(_loss(lambda *a, m=mode: band_attention_ref(
+            *a, nr=nr, mode=m)), argnums=(0, 1, 2, 3))(qs, ks, vs, ws)
+        # scale-aware: bench gradients reach O(500), so normalize by the
+        # reference magnitude (f32 accumulation-order noise is ~1e-7 rel)
+        err_b = max(err_b, max(
+            float(jnp.abs(a - b).max() / (1.0 + jnp.abs(b).max()))
+            for a, b in zip(gk, gr)))
+    emit("kernel_pallas_interpret_fwd_allclose", 0.0, f"max_err={err_f:.2e}")
+    emit("kernel_pallas_interpret_bwd_allclose", 0.0, f"max_err={err_b:.2e}")
+    assert err_f < 1e-4 and err_b < 1e-4
+    return {"err_fwd": err_f, "err_bwd": err_b}
 
 
 if __name__ == "__main__":

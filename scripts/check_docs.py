@@ -1,0 +1,58 @@
+"""Fail if any file under src/ cites a repo-root markdown file that does
+not exist (e.g. a docstring pointing at DESIGN.md section 2).
+
+Run directly::
+
+    python scripts/check_docs.py
+
+or via the default pytest run (tests/test_docs.py wires it in), so a PR
+that adds a ``SOMETHING.md`` reference without the file fails CI.
+"""
+import os
+import re
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+SRC = os.path.join(ROOT, "src")
+
+# bare repo-root markdown names: FOO.md / foo_bar.md, but not paths like
+# docs/foo.md (those are checked relative to the repo root anyway).
+_MD_REF = re.compile(r"(?<![\w/.-])([A-Za-z][\w.-]*\.md)\b")
+
+
+def md_references(path):
+    """Yield (lineno, name) for every repo-root *.md cited in ``path``."""
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            for name in _MD_REF.findall(line):
+                yield lineno, name
+
+
+def missing_references(src_dir=SRC, root=ROOT):
+    """Return [(file, lineno, name)] for cited-but-absent markdown files."""
+    missing = []
+    for dirpath, _, files in os.walk(src_dir):
+        for fn in sorted(files):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            for lineno, name in md_references(path):
+                if not os.path.exists(os.path.join(root, name)):
+                    missing.append((os.path.relpath(path, root), lineno, name))
+    return missing
+
+
+def main():
+    missing = missing_references()
+    for path, lineno, name in missing:
+        print(f"{path}:{lineno}: references {name}, which does not exist "
+              f"at the repo root")
+    if missing:
+        print(f"{len(missing)} dangling doc reference(s)")
+        return 1
+    print("all repo-root markdown references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

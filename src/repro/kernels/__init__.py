@@ -1,7 +1,8 @@
 """Pallas TPU kernels for the H-Transformer-1D compute hot-spots."""
 from .ops import band_attention
 from .h1d_block import band_attention_fwd, band_mask, MODES
+from .h1d_block_bwd import band_attention_bwd
 from .ref import band_attention_ref
 
-__all__ = ["band_attention", "band_attention_fwd", "band_mask",
-           "band_attention_ref", "MODES"]
+__all__ = ["band_attention", "band_attention_fwd", "band_attention_bwd",
+           "band_mask", "band_attention_ref", "MODES"]

@@ -1,0 +1,334 @@
+"""Hand-written Pallas TPU backward for the banded block attention.
+
+Flash-style recompute backward (DESIGN.md section 3): the forward saves
+only its inputs and its three outputs ``(y, dn, m)`` -- no (L x 3*nr)
+score or probability tensor ever hits HBM.  Both backward kernels
+re-materialize the banded scores per tile in VMEM from ``(q, k, w, m)``
+using the shared :func:`~repro.kernels.h1d_block.band_mask` helper, so
+the band semantics cannot drift between passes.
+
+Math.  Forward (per level, per query row ``i``):
+
+    s_ij = q_i . k_j         (NEG_INF off-band / where w_j == 0)
+    m_i  = max(max_j s_ij, _MIN_M)
+    a_ij = exp(s_ij - m_i)
+    y_i  = sum_j a_ij v_j,   dn_i = sum_j a_ij w_j
+
+Given output cotangents ``(gy, gdn, gm)``:
+
+    delta_i  = gy_i . y_i + gdn_i * dn_i     (= sum_j a_ij * da_ij)
+    gmh_i    = gm_i - delta_i                (cotangent reaching m)
+    da_ij    = gy_i . v_j + gdn_i * w_j
+    ds_ij    = a_ij * da_ij + (gmh_i / c_i) * 1[s_ij == m_i]
+    dq_i     = sum_j ds_ij k_j
+    dk_j     = sum_{g,i} ds_ij q_i
+    dv_j     = sum_{g,i} a_ij  gy_i
+    dw_j     = sum_{g,i} a_ij  gdn_i
+
+``c_i`` counts the argmax ties of row ``i`` (JAX's ``reduce_max`` VJP
+splits the cotangent equally among ties); ``delta`` needs only the saved
+outputs, which is why ``(y, dn, m)`` are the whole residual.
+
+Two kernels (mirroring the FlashAttention-2 split):
+
+* ``_dq_kernel``   -- query-tile grid ``(B, G, L//TQ)``.  Each tile sees
+  its full band (self tile + nr-wide halo edges of both neighbours), so
+  it also computes the row tie-count and emits the per-row max-gradient
+  scale ``gmn = gmh / c`` consumed by the key-grid pass.
+* ``_dkvw_kernel`` -- key-tile grid ``(B, L//TQ, G)`` with ``g``
+  innermost: dK/dV/dW blocks accumulate across the GQA group axis in
+  VMEM (output index maps ignore ``g``), so shared-KV gradients never
+  materialize a per-group copy in HBM.  Halo contributions come from the
+  first ``nr`` query rows of tile ``t+1`` (which read this tile's last
+  ``nr`` keys as their 'prev' band) and -- bidirectional modes only --
+  the last ``nr`` query rows of tile ``t-1``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .h1d_block import band_mask, NEG_INF, _MIN_M, MODES
+
+
+def _recompute(q, k, w, m, qi, ki, *, nr: int, mode: str, lk: int):
+    """Re-materialize one band: masked scores -> (a, ind).
+
+    q: (nq, d) f32; k: (nk, d) f32; w: (nk,) f32; m: (nq,) f32 saved
+    row-max; qi: (nq, 1) / ki: (1, nk) global indices.  Returns
+    ``a = exp(s - m)`` (exactly 0 off-band via the NEG_INF mask) and the
+    argmax indicator ``ind = (s == m)`` as f32.  Query rows outside
+    [0, lk) (clamped neighbour tiles at the sequence edges) are masked
+    here -- ``band_mask`` itself only bounds-checks keys.
+    """
+    f32 = jnp.float32
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=f32)
+    allow = band_mask(qi, ki, nr, mode, lk) & (w[None, :] > 0)
+    allow = allow & (qi >= 0) & (qi < lk)
+    s = jnp.where(allow, s, NEG_INF)
+    a = jnp.exp(s - m[:, None])
+    ind = (s == m[:, None]).astype(f32)
+    return a, ind
+
+
+def _dq_kernel(*refs, nr: int, mode: str, tq: int, lk: int):
+    causal = mode.endswith("causal")
+    if causal:
+        (q_ref, ks_ref, kp_ref, vs_ref, vp_ref, ws_ref, wp_ref,
+         m_ref, gy_ref, gdn_ref, gmh_ref, dq_ref, gmn_ref) = refs
+    else:
+        (q_ref, ks_ref, kp_ref, kn_ref, vs_ref, vp_ref, vn_ref,
+         ws_ref, wp_ref, wn_ref,
+         m_ref, gy_ref, gdn_ref, gmh_ref, dq_ref, gmn_ref) = refs
+
+    it = pl.program_id(2)
+    f32 = jnp.float32
+    q = q_ref[0, 0].astype(f32)                        # (TQ, d)
+    m = m_ref[0, 0].astype(f32)                        # (TQ,)
+    gy = gy_ref[0, 0].astype(f32)                      # (TQ, dv)
+    gdn = gdn_ref[0, 0].astype(f32)                    # (TQ,)
+    gmh = gmh_ref[0, 0].astype(f32)                    # (TQ,)
+    qi = it * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, 1), 0)
+
+    def band(k, v, w, k0):
+        k, v, w = k.astype(f32), v.astype(f32), w.astype(f32)
+        tk = k.shape[0]
+        ki = k0 + jax.lax.broadcasted_iota(jnp.int32, (1, tk), 1)
+        a, ind = _recompute(q, k, w, m, qi, ki, nr=nr, mode=mode, lk=lk)
+        da = jax.lax.dot_general(gy, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=f32)
+        da = da + gdn[:, None] * w[None, :]
+        return a * da, ind, k
+
+    bands = [
+        band(ks_ref[0], vs_ref[0], ws_ref[0], it * tq),
+        band(kp_ref[0, tq - nr:, :], vp_ref[0, tq - nr:, :],
+             wp_ref[0, tq - nr:], it * tq - nr),
+    ]
+    if not causal:
+        bands.append(band(kn_ref[0, :nr, :], vn_ref[0, :nr, :],
+                          wn_ref[0, :nr], (it + 1) * tq))
+
+    count = functools.reduce(
+        jnp.add, [ind.sum(axis=1) for _, ind, _ in bands])   # (TQ,)
+    gmn = jnp.where(count > 0, gmh / jnp.maximum(count, 1.0), 0.0)
+
+    dq = None
+    for ds0, ind, k in bands:
+        ds = ds0 + gmn[:, None] * ind
+        dqt = jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=f32)
+        dq = dqt if dq is None else dq + dqt
+
+    dq_ref[0, 0] = dq.astype(dq_ref.dtype)
+    gmn_ref[0, 0] = gmn.astype(gmn_ref.dtype)
+
+
+def _dkvw_kernel(*refs, nr: int, mode: str, tq: int, lk: int):
+    causal = mode.endswith("causal")
+    if causal:
+        (k_ref, v_ref, w_ref,
+         qs_ref, qn_ref, gys_ref, gyn_ref, gdns_ref, gdnn_ref,
+         ms_ref, mn_ref, gmns_ref, gmnn_ref,
+         dk_ref, dv_ref, dw_ref) = refs
+    else:
+        (k_ref, v_ref, w_ref,
+         qs_ref, qn_ref, qp_ref, gys_ref, gyn_ref, gyp_ref,
+         gdns_ref, gdnn_ref, gdnp_ref, ms_ref, mn_ref, mp_ref,
+         gmns_ref, gmnn_ref, gmnp_ref,
+         dk_ref, dv_ref, dw_ref) = refs
+
+    it = pl.program_id(1)
+    g = pl.program_id(2)
+    f32 = jnp.float32
+    k = k_ref[0].astype(f32)                           # (TK, d)
+    v = v_ref[0].astype(f32)                           # (TK, dv)
+    w = w_ref[0].astype(f32)                           # (TK,)
+
+    def band(qrows, gyrows, gdnrows, mrows, gmnrows, q0,
+             krows, vrows, wrows, k0):
+        """One (query-rows x key-rows) band; returns its dK/dV/dW."""
+        nq = qrows.shape[0]
+        nk = krows.shape[0]
+        qi = q0 + jax.lax.broadcasted_iota(jnp.int32, (nq, 1), 0)
+        ki = k0 + jax.lax.broadcasted_iota(jnp.int32, (1, nk), 1)
+        a, ind = _recompute(qrows, krows, wrows, mrows, qi, ki,
+                            nr=nr, mode=mode, lk=lk)
+        da = jax.lax.dot_general(gyrows, vrows, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=f32)
+        da = da + gdnrows[:, None] * wrows[None, :]
+        ds = a * da + gmnrows[:, None] * ind
+        dk_b = jax.lax.dot_general(ds, qrows, (((0,), (0,)), ((), ())),
+                                   preferred_element_type=f32)   # (nk, d)
+        dv_b = jax.lax.dot_general(a, gyrows, (((0,), (0,)), ((), ())),
+                                   preferred_element_type=f32)   # (nk, dv)
+        dw_b = jnp.sum(a * gdnrows[:, None], axis=0)             # (nk,)
+        return dk_b, dv_b, dw_b
+
+    # self band: query tile `it` against this whole key tile.
+    dk, dvv, dw = band(
+        qs_ref[0, 0].astype(f32), gys_ref[0, 0].astype(f32),
+        gdns_ref[0, 0].astype(f32), ms_ref[0, 0].astype(f32),
+        gmns_ref[0, 0].astype(f32), it * tq, k, v, w, it * tq)
+
+    # prev-halo: the first nr query rows of tile it+1 read this tile's
+    # last nr keys as their 'prev' band.
+    dk_h, dv_h, dw_h = band(
+        qn_ref[0, 0, :nr, :].astype(f32), gyn_ref[0, 0, :nr, :].astype(f32),
+        gdnn_ref[0, 0, :nr].astype(f32), mn_ref[0, 0, :nr].astype(f32),
+        gmnn_ref[0, 0, :nr].astype(f32), (it + 1) * tq,
+        k[tq - nr:], v[tq - nr:], w[tq - nr:], it * tq + tq - nr)
+    dk = dk + jnp.pad(dk_h, ((tq - nr, 0), (0, 0)))
+    dvv = dvv + jnp.pad(dv_h, ((tq - nr, 0), (0, 0)))
+    dw = dw + jnp.pad(dw_h, ((tq - nr, 0),))
+
+    if not causal:
+        # next-halo: the last nr query rows of tile it-1 read this
+        # tile's first nr keys as their 'next' band.
+        dk_h, dv_h, dw_h = band(
+            qp_ref[0, 0, tq - nr:, :].astype(f32),
+            gyp_ref[0, 0, tq - nr:, :].astype(f32),
+            gdnp_ref[0, 0, tq - nr:].astype(f32),
+            mp_ref[0, 0, tq - nr:].astype(f32),
+            gmnp_ref[0, 0, tq - nr:].astype(f32), it * tq - nr,
+            k[:nr], v[:nr], w[:nr], it * tq)
+        dk = dk + jnp.pad(dk_h, ((0, tq - nr), (0, 0)))
+        dvv = dvv + jnp.pad(dv_h, ((0, tq - nr), (0, 0)))
+        dw = dw + jnp.pad(dw_h, ((0, tq - nr),))
+
+    # accumulate across the (innermost) GQA group axis: the output
+    # blocks' index maps ignore g, so the block stays resident in VMEM.
+    @pl.when(g == 0)
+    def _init():
+        dk_ref[0] = dk.astype(dk_ref.dtype)
+        dv_ref[0] = dvv.astype(dv_ref.dtype)
+        dw_ref[0] = dw.astype(dw_ref.dtype)
+
+    @pl.when(g > 0)
+    def _acc():
+        dk_ref[0] += dk.astype(dk_ref.dtype)
+        dv_ref[0] += dvv.astype(dv_ref.dtype)
+        dw_ref[0] += dw.astype(dw_ref.dtype)
+
+
+def band_attention_bwd(
+    q: jnp.ndarray,    # (B, G, L, d) -- pre-scaled queries (fwd input)
+    k: jnp.ndarray,    # (B, L, d)
+    v: jnp.ndarray,    # (B, L, dv)
+    w: jnp.ndarray,    # (B, L)
+    y: jnp.ndarray,    # (B, G, L, dv) f32 -- saved fwd outputs
+    dn: jnp.ndarray,   # (B, G, L) f32
+    m: jnp.ndarray,    # (B, G, L) f32
+    gy: jnp.ndarray,   # cotangents of (y, dn, m)
+    gdn: jnp.ndarray,
+    gm: jnp.ndarray,
+    *,
+    nr: int,
+    mode: str,
+    tq: int = 128,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused backward.  Returns (dq, dk, dv, dw) in the input dtypes."""
+    assert mode in MODES, mode
+    B, G, L, d = q.shape
+    dv = v.shape[-1]
+    assert L % tq == 0 and tq % nr == 0 and tq >= nr, (L, tq, nr)
+    nt = L // tq
+    causal = mode.endswith("causal")
+    f32 = jnp.float32
+
+    gy = gy.astype(f32)
+    gdn = gdn.astype(f32)
+    gm = gm.astype(f32)
+    # delta_i = sum_j a_ij da_ij, from saved outputs alone.
+    delta = jnp.sum(gy * y, axis=-1) + gdn * dn
+    gmh = gm - delta                                    # (B, G, L)
+
+    self_map = lambda b, g_, i: (b, i, 0)
+    prev_map = lambda b, g_, i: (b, jnp.maximum(i - 1, 0), 0)
+    next_map = lambda b, g_, i: (b, jnp.minimum(i + 1, nt - 1), 0)
+    wself_map = lambda b, g_, i: (b, i)
+    wprev_map = lambda b, g_, i: (b, jnp.maximum(i - 1, 0))
+    wnext_map = lambda b, g_, i: (b, jnp.minimum(i + 1, nt - 1))
+    qtile_map = lambda b, g_, i: (b, g_, i, 0)
+    rtile_map = lambda b, g_, i: (b, g_, i)
+
+    # ---- pass 1: dQ (query-tile grid) + per-row max-grad scale ------------
+    in_specs = [pl.BlockSpec((1, 1, tq, d), qtile_map)]
+    inputs = [q]
+    kmaps = [self_map, prev_map] + ([] if causal else [next_map])
+    wmaps = [wself_map, wprev_map] + ([] if causal else [wnext_map])
+    for mp in kmaps:
+        in_specs.append(pl.BlockSpec((1, tq, d), mp))
+        inputs.append(k)
+    for mp in kmaps:
+        in_specs.append(pl.BlockSpec((1, tq, dv), mp))
+        inputs.append(v)
+    for mp in wmaps:
+        in_specs.append(pl.BlockSpec((1, tq), mp))
+        inputs.append(w)
+    in_specs += [pl.BlockSpec((1, 1, tq), rtile_map),
+                 pl.BlockSpec((1, 1, tq, dv), qtile_map),
+                 pl.BlockSpec((1, 1, tq), rtile_map),
+                 pl.BlockSpec((1, 1, tq), rtile_map)]
+    inputs += [m, gy, gdn, gmh]
+
+    dq, gmn = pl.pallas_call(
+        functools.partial(_dq_kernel, nr=nr, mode=mode, tq=tq, lk=L),
+        grid=(B, G, nt),
+        in_specs=in_specs,
+        out_specs=(pl.BlockSpec((1, 1, tq, d), qtile_map),
+                   pl.BlockSpec((1, 1, tq), rtile_map)),
+        out_shape=(jax.ShapeDtypeStruct((B, G, L, d), f32),
+                   jax.ShapeDtypeStruct((B, G, L), f32)),
+        interpret=interpret,
+    )(*inputs)
+
+    # ---- pass 2: dK/dV/dW (key-tile grid, g innermost accumulates) --------
+    kv_self = lambda b, i, g_: (b, i, 0)
+    w_self = lambda b, i, g_: (b, i)
+    q_self = lambda b, i, g_: (b, g_, i, 0)
+    q_next = lambda b, i, g_: (b, g_, jnp.minimum(i + 1, nt - 1), 0)
+    q_prev = lambda b, i, g_: (b, g_, jnp.maximum(i - 1, 0), 0)
+    r_self = lambda b, i, g_: (b, g_, i)
+    r_next = lambda b, i, g_: (b, g_, jnp.minimum(i + 1, nt - 1))
+    r_prev = lambda b, i, g_: (b, g_, jnp.maximum(i - 1, 0))
+
+    qmaps = [q_self, q_next] + ([] if causal else [q_prev])
+    rmaps = [r_self, r_next] + ([] if causal else [r_prev])
+
+    in_specs = [pl.BlockSpec((1, tq, d), kv_self),
+                pl.BlockSpec((1, tq, dv), kv_self),
+                pl.BlockSpec((1, tq), w_self)]
+    inputs = [k, v, w]
+    for mp in qmaps:
+        in_specs.append(pl.BlockSpec((1, 1, tq, d), mp))
+        inputs.append(q)
+    for mp in qmaps:
+        in_specs.append(pl.BlockSpec((1, 1, tq, dv), mp))
+        inputs.append(gy)
+    for tensor in (gdn, m, gmn):
+        for mp in rmaps:
+            in_specs.append(pl.BlockSpec((1, 1, tq), mp))
+            inputs.append(tensor)
+
+    dk, dvv, dw = pl.pallas_call(
+        functools.partial(_dkvw_kernel, nr=nr, mode=mode, tq=tq, lk=L),
+        grid=(B, nt, G),
+        in_specs=in_specs,
+        out_specs=(pl.BlockSpec((1, tq, d), kv_self),
+                   pl.BlockSpec((1, tq, dv), kv_self),
+                   pl.BlockSpec((1, tq), w_self)),
+        out_shape=(jax.ShapeDtypeStruct((B, L, d), f32),
+                   jax.ShapeDtypeStruct((B, L, dv), f32),
+                   jax.ShapeDtypeStruct((B, L), f32)),
+        interpret=interpret,
+    )(*inputs)
+
+    return (dq.astype(q.dtype), dk.astype(k.dtype),
+            dvv.astype(v.dtype), dw.astype(w.dtype))

@@ -8,11 +8,13 @@
 * ``impl='jnp'``               -- blocked XLA implementation (used for the
   multi-pod dry-run on host-platform devices and as the backward body).
 
-The custom VJP uses the pure-jnp reference as the differentiable body:
-forward runs the fused kernel, backward is ``jax.vjp`` of the reference
-(numerically identical math), so gradients are exact w.r.t. the kernel
-semantics.  A hand-written Pallas backward is a recorded perf-pass item
-(EXPERIMENTS.md section Perf).
+The custom VJP runs hand-written fused Pallas kernels in BOTH passes
+(EXPERIMENTS.md P23): forward saves only its inputs plus its ``(y, dn,
+m)`` outputs, and the backward in ``h1d_block_bwd`` recomputes the
+banded scores per tile in VMEM -- no per-level band tensor is ever
+re-materialized in HBM.  The ``impl='jnp'`` path stays a plain
+differentiable XLA program (``jax.vjp`` of :func:`_blocked_jnp`) and is
+the gradient oracle the kernel backward is tested against.
 """
 from __future__ import annotations
 
@@ -23,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from . import h1d_block
-from . import ref as kref
+from . import h1d_block_bwd
 
 
 def _blocked_jnp(q, k, v, w, *, nr: int, mode: str):
@@ -95,15 +97,19 @@ def _band_attention_kernel(q, k, v, w, nr, mode, tq, interpret):
 def _fwd(q, k, v, w, nr, mode, tq, interpret):
     out = h1d_block.band_attention_fwd(
         q, k, v, w, nr=nr, mode=mode, tq=tq, interpret=interpret)
-    return out, (q, k, v, w)
+    y, dn, m = out
+    # (y, dn, m) are the whole softmax residual: the backward recomputes
+    # scores from (q, k, w, m) and needs y/dn only for the row-wise
+    # delta term -- nothing tile-shaped is saved.
+    return out, (q, k, v, w, y, dn, m)
 
 
 def _bwd(nr, mode, tq, interpret, res, cts):
-    q, k, v, w = res
-    _, vjp = jax.vjp(
-        lambda q_, k_, v_, w_: kref.band_attention_ref(
-            q_, k_, v_, w_, nr=nr, mode=mode), q, k, v, w)
-    return vjp(cts)
+    q, k, v, w, y, dn, m = res
+    gy, gdn, gm = cts
+    return h1d_block_bwd.band_attention_bwd(
+        q, k, v, w, y, dn, m, gy, gdn, gm,
+        nr=nr, mode=mode, tq=tq, interpret=interpret)
 
 
 _band_attention_kernel.defvjp(_fwd, _bwd)

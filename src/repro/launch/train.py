@@ -42,6 +42,12 @@ def main(argv=None):
     ap.add_argument("--compress", default="none", choices=["none", "int8"])
     ap.add_argument("--data", default="zipf", choices=["zipf", "hier"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--attn-impl", default=None,
+                    choices=["jnp", "pallas", "pallas_interpret"],
+                    help="banded-attention backend override (both passes "
+                         "run on the fused kernels for 'pallas')")
+    ap.add_argument("--attn-tq", type=int, default=None,
+                    help="Pallas query-tile rows (multiple of nr)")
     args = ap.parse_args(argv)
 
     dshape = tuple(int(x) for x in args.mesh.split("x"))
@@ -54,7 +60,8 @@ def main(argv=None):
                      warmup=max(10, args.steps // 20),
                      ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
                      grad_accum=args.grad_accum,
-                     compress_grads=args.compress, seed=args.seed)
+                     compress_grads=args.compress, seed=args.seed,
+                     attn_impl=args.attn_impl, attn_tq=args.attn_tq)
 
     src_cls = ZipfLM if args.data == "zipf" else HierarchicalLM
     data = src_cls(vocab_size=cfg.vocab_size, seq_len=args.seq,

@@ -99,11 +99,17 @@ def _heads_as_g(q, k, v):
     return q.transpose(perm), k.transpose(perm), v.transpose(perm)
 
 
-def _local_attention(q, k, v, window: int, causal: bool, kv_weight, impl):
+def _local_attention(q, k, v, window: int, causal: bool, kv_weight, impl,
+                     tq: int = 128):
     """Block-local sliding-window attention via the band kernel with
     block size = window (the paper's 'Local Attention' baseline)."""
     B, L, Hq, D = q.shape
-    Lp = ((L + window - 1) // window) * window
+    if impl != "jnp" and tq % window:
+        impl = "jnp"   # kernel tiling needs tq % nr == 0; window is nr here
+    # kernel tiling also needs L % tq == 0; tq is a multiple of window
+    # here, so padding to the tile unit keeps the block structure intact
+    unit = window if impl == "jnp" else tq
+    Lp = ((L + unit - 1) // unit) * unit
     pad = Lp - L
     if pad:
         q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
@@ -116,11 +122,27 @@ def _local_attention(q, k, v, window: int, causal: bool, kv_weight, impl):
         w = w.at[:, L:].set(0.0)
     scale = 1.0 / math.sqrt(D)
     mode = "l0_causal" if causal else "l0_bidir"
-    qh, kh, vh = _heads_as_g(q, k, v)
-    y, dn, _ = band_attention(qh * scale, kh, vh * w[:, None, :, None], w,
-                              nr=window, mode=mode, impl="jnp")
+    if impl == "jnp":
+        # GSPMD-friendly layout: heads as the core G dim, per-head 4-D KV.
+        qh, kh, vh = _heads_as_g(q, k, v)
+        y, dn, _ = band_attention(qh * scale, kh, vh * w[:, None, :, None],
+                                  w, nr=window, mode=mode, impl="jnp")
+        z = (y / jnp.maximum(dn, 1e-9)[..., None]).astype(q.dtype)
+        return z.transpose(0, 2, 1, 3)[:, :L]
+    # kernel path: fold kv-heads into batch, GQA group into G (3-D KV --
+    # the Pallas grid broadcasts KV across G without replication).
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qh = q.reshape(B, Lp, Hkv, G, D).transpose(0, 2, 3, 1, 4)
+    qh = qh.reshape(B * Hkv, G, Lp, D)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Lp, D)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Lp, v.shape[-1])
+    wr = jnp.repeat(w, Hkv, axis=0)
+    y, dn, _ = band_attention(qh * scale, kh, vh * wr[..., None], wr,
+                              nr=window, mode=mode, impl=impl, tq=tq)
     z = (y / jnp.maximum(dn, 1e-9)[..., None]).astype(q.dtype)
-    return z.transpose(0, 2, 1, 3)[:, :L]
+    z = z.reshape(B, Hkv, G, Lp, -1).transpose(0, 3, 1, 2, 4)
+    return z.reshape(B, Lp, Hq, -1)[:, :L]
 
 
 def attn_apply(p, cfg: ModelConfig, x, positions, *, causal=True,
@@ -131,7 +153,7 @@ def attn_apply(p, cfg: ModelConfig, x, positions, *, causal=True,
     use_local = cfg.sliding_window > 0 and not layer_global
     if use_local:
         z = _local_attention(q, k, v, cfg.sliding_window, causal, kv_weight,
-                             cfg.attn_impl)
+                             cfg.attn_impl, tq=cfg.attn_tq)
     elif cfg.attention == "h1d":
         if cfg.attn_impl in ("pallas", "pallas_interpret"):
             # kernel path: heads fold into the pallas grid
@@ -148,7 +170,7 @@ def attn_apply(p, cfg: ModelConfig, x, positions, *, causal=True,
                 w = w.at[:, S:].set(0.0)
             z = h1d_attention_mha(q, k, v, nr=cfg.nr, causal=causal,
                                   causal_mode=cfg.causal_mode, kv_weight=w,
-                                  impl=cfg.attn_impl)[:, :S]
+                                  impl=cfg.attn_impl, tq=cfg.attn_tq)[:, :S]
         else:
             Lp = hc.padded_length(S, cfg.nr)
             pad = Lp - S
@@ -164,7 +186,7 @@ def attn_apply(p, cfg: ModelConfig, x, positions, *, causal=True,
             qh, kh, vh = _heads_as_g(q, k, v)
             z = h1d_attention(qh, kh, vh, nr=cfg.nr, causal=causal,
                               causal_mode=cfg.causal_mode, kv_weight=w,
-                              impl=cfg.attn_impl)
+                              impl=cfg.attn_impl, tq=cfg.attn_tq)
             z = z.transpose(0, 2, 1, 3)[:, :S]
     elif cfg.attention == "full":
         qh, kh, vh = _heads_as_g(q, k, v)

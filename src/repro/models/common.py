@@ -40,6 +40,7 @@ class ModelConfig:
     nr: int = 16                 # N_r, the paper's single hyper-parameter
     causal_mode: str = "fine-q"  # fine-q (leak-free) | coarse-q (paper-faithful)
     attn_impl: str = "jnp"       # jnp | pallas | pallas_interpret
+    attn_tq: int = 128           # Pallas query-tile rows (multiple of nr)
     qkv_bias: bool = False       # qwen2.x
     qk_norm: bool = False        # gemma3
     sliding_window: int = 0      # >0: local layers use block-local attention

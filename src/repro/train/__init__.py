@@ -1,4 +1,4 @@
 """Training loop, checkpointing, fault tolerance."""
 from .loop import (TrainState, TrainConfig, make_train_step, init_state,
-                   train, Watchdog, make_optimizer)
+                   train, Watchdog, make_optimizer, resolve_model_config)
 from . import checkpoint

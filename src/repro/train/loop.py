@@ -43,6 +43,21 @@ class TrainConfig:
     log_every: int = 10
     seed: int = 0
     watchdog_factor: float = 3.0      # straggler alarm threshold
+    # attention backend overrides (None = keep the ModelConfig value);
+    # setting attn_impl='pallas' runs BOTH passes of every banded level
+    # on the fused kernels (forward + hand-written backward).
+    attn_impl: Optional[str] = None   # jnp | pallas | pallas_interpret
+    attn_tq: Optional[int] = None     # Pallas query-tile rows
+
+
+def resolve_model_config(cfg: ModelConfig, tc: "TrainConfig") -> ModelConfig:
+    """Apply the TrainConfig attention-backend overrides to ``cfg``."""
+    updates = {}
+    if tc.attn_impl is not None:
+        updates["attn_impl"] = tc.attn_impl
+    if tc.attn_tq is not None:
+        updates["attn_tq"] = tc.attn_tq
+    return dataclasses.replace(cfg, **updates) if updates else cfg
 
 
 def make_optimizer(tc: TrainConfig) -> Optimizer:
@@ -54,6 +69,7 @@ def make_optimizer(tc: TrainConfig) -> Optimizer:
 
 
 def init_state(key, cfg: ModelConfig, tc: TrainConfig):
+    cfg = resolve_model_config(cfg, tc)
     fns = get_model(cfg)
     params, specs = fns.init(key, cfg)
     opt = make_optimizer(tc)
@@ -71,6 +87,7 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig) -> Callable:
     gradient psums is XLA's latency-hiding scheduler's job, enabled via
     mesh flags in launch/mesh.py.
     """
+    cfg = resolve_model_config(cfg, tc)
     fns = get_model(cfg)
     opt = make_optimizer(tc)
 

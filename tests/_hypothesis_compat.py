@@ -1,0 +1,35 @@
+"""Fallback for test modules that mix hypothesis property tests with
+plain pytest tests: when ``hypothesis`` is not installed, ``@given``
+tests skip cleanly while the rest of the module still runs.
+
+Usage (at module top, after ``import pytest``)::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, st
+"""
+import pytest
+
+
+class _Strategies:
+    """Stub of ``hypothesis.strategies``: every strategy constructor
+    returns an opaque dummy; ``@st.composite`` keeps the name callable so
+    module-level ``shapes()``-style calls still evaluate."""
+
+    def composite(self, fn):
+        return lambda *a, **k: None
+
+    def __getattr__(self, name):
+        return lambda *a, **k: None
+
+
+st = _Strategies()
+
+
+def given(*args, **kwargs):
+    return pytest.mark.skip(reason="hypothesis not installed")
+
+
+def settings(*args, **kwargs):
+    return lambda fn: fn

@@ -1,0 +1,25 @@
+"""Docs-layer invariant: every repo-root markdown file cited anywhere in
+src/ (docstrings, comments) must exist -- README/DESIGN/EXPERIMENTS are
+load-bearing references, not aspirations.  Logic lives in
+scripts/check_docs.py so CI shells and the test share one scanner."""
+import os
+import sys
+
+import pytest
+
+_SCRIPTS = os.path.join(os.path.dirname(__file__), "..", "scripts")
+sys.path.insert(0, os.path.abspath(_SCRIPTS))
+
+import check_docs  # noqa: E402
+
+
+def test_no_dangling_markdown_references():
+    missing = check_docs.missing_references()
+    assert not missing, (
+        "dangling repo-root markdown references:\n" + "\n".join(
+            f"  {path}:{lineno}: {name}" for path, lineno, name in missing))
+
+
+def test_core_docs_exist():
+    for name in ("README.md", "DESIGN.md", "EXPERIMENTS.md", "ROADMAP.md"):
+        assert os.path.exists(os.path.join(check_docs.ROOT, name)), name

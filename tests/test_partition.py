@@ -2,6 +2,7 @@
 exactly once at the right level (DESIGN.md section 1.1)."""
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import hierarchy as hc
