@@ -3,10 +3,19 @@
 Per mode this reports BOTH passes -- ``fwd`` and ``fwd+bwd`` wall-clock
 of the blocked-jnp path on the host backend, plus the fused Pallas
 kernels (forward and the hand-written backward, EXPERIMENTS.md P23) when
-a TPU backend is available.  Interpret-mode allclose checks verify the
-kernel semantics (forward AND gradients) at bench shapes; on-TPU
-wall-clock for the perf ledger is the perf pass's job.
+a TPU backend is available.  The fine-q causal coarse levels are
+benchmarked as ``mode='sub'`` at a shallow and a deep ratio
+(EXPERIMENTS.md P24).  Interpret-mode allclose checks verify the kernel
+semantics (forward AND gradients) at bench shapes; on-TPU wall-clock for
+the perf ledger is the perf pass's job.
+
+``--json out.json`` (default name BENCH_kernels.json via ``--json``
+alone) additionally writes every row as machine-readable JSON so the
+perf trajectory across PRs can be diffed by tooling.
 """
+import argparse
+import json
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -24,7 +33,7 @@ def _loss(fn):
     return f
 
 
-def run():
+def run(json_path=None):
     B, G, L, d, nr = 1, 4, 2048, 64, 16
     key = jax.random.PRNGKey(0)
     k1, k2, k3 = jax.random.split(key, 3)
@@ -35,48 +44,89 @@ def run():
     impls = ["jnp"]
     if jax.default_backend() == "tpu":
         impls.append("pallas")
-    for mode in ("l0_bidir", "l0_causal", "coarse_bidir", "coarse_causal"):
-        nbands = 2 if mode.endswith("causal") else 3
+
+    rows = []
+
+    def record(name, us, derived):
+        emit(name, us, derived)
+        rows.append({"name": name, "us_per_call": round(us, 1),
+                     "derived": derived})
+
+    # mode=None entries are the symmetric same-length-KV levels; the
+    # ('sub', ratio) entries are fine-q causal coarse levels with
+    # ratio-x coarser K/V/W (shallow level 1 and a deep level).
+    cases = [("l0_bidir", 1), ("l0_causal", 1),
+             ("coarse_bidir", 1), ("coarse_causal", 1),
+             ("sub", 2), ("sub", 16)]
+    for mode, ratio in cases:
+        if mode == "sub":
+            Lk = L // ratio
+            kk, vv, ww = k[:, :Lk], v[:, :Lk], w[:, :Lk]
+            nbands = 1
+            tag = f"sub_r{ratio}"
+        else:
+            kk, vv, ww = k, v, w
+            nbands = 2 if mode.endswith("causal") else 3
+            tag = mode
         flops = 2 * B * G * L * nr * nbands * d * 2   # S and Y matmuls
         for impl in impls:
-            fwd = jax.jit(lambda q, k, v, w, m=mode, i=impl: band_attention(
-                q, k, v, w, nr=nr, mode=m, impl=i))
-            us = time_fn(fwd, q, k, v, w, iters=3, warmup=1)
-            emit(f"kernel_band_{mode}_{impl}_fwd", us,
-                 f"gflops={flops / us / 1e3:.2f}")
+            fwd = jax.jit(
+                lambda q, k, v, w, m=mode, r=ratio, i=impl: band_attention(
+                    q, k, v, w, nr=nr, mode=m, ratio=r, impl=i))
+            us = time_fn(fwd, q, kk, vv, ww, iters=3, warmup=1)
+            record(f"kernel_band_{tag}_{impl}_fwd", us,
+                   f"gflops={flops / us / 1e3:.2f}")
             fwdbwd = jax.jit(jax.grad(
-                _loss(lambda *a, m=mode, i=impl: band_attention(
-                    *a, nr=nr, mode=m, impl=i)), argnums=(0, 1, 2, 3)))
-            us = time_fn(fwdbwd, q, k, v, w, iters=3, warmup=1)
+                _loss(lambda *a, m=mode, r=ratio, i=impl: band_attention(
+                    *a, nr=nr, mode=m, ratio=r, impl=i)),
+                argnums=(0, 1, 2, 3)))
+            us = time_fn(fwdbwd, q, kk, vv, ww, iters=3, warmup=1)
             # bwd recomputes S and runs dS@K, dS^T@Q, A^T@GY: ~2.5x fwd
-            emit(f"kernel_band_{mode}_{impl}_fwdbwd", us,
-                 f"gflops={3.5 * flops / us / 1e3:.2f}")
+            record(f"kernel_band_{tag}_{impl}_fwdbwd", us,
+                   f"gflops={3.5 * flops / us / 1e3:.2f}")
 
     # interpret-mode correctness at reduced shapes: forward and backward
     # of the Pallas kernels vs the dense oracle.
     qs, ks, vs, ws = q[:, :1, :256], k[:, :256], v[:, :256], w[:, :256]
     err_f = err_b = 0.0
-    for mode in ("l0_causal", "coarse_bidir"):
-        ys = band_attention(qs, ks, vs, ws, nr=nr, mode=mode,
+    for mode, ratio in (("l0_causal", 1), ("coarse_bidir", 1), ("sub", 4)):
+        kk, vv, ww = (x[:, :256 // ratio] for x in (ks, vs, ws))
+        ys = band_attention(qs, kk, vv, ww, nr=nr, mode=mode, ratio=ratio,
                             impl="pallas_interpret")
-        yr = band_attention_ref(qs, ks, vs, ws, nr=nr, mode=mode)
+        yr = band_attention_ref(qs, kk, vv, ww, nr=nr, mode=mode,
+                                ratio=ratio)
         err_f = max(err_f, max(float(jnp.abs(a - b).max())
                                for a, b in zip(ys, yr)))
-        gk = jax.grad(_loss(lambda *a, m=mode: band_attention(
-            *a, nr=nr, mode=m, impl="pallas_interpret")),
-            argnums=(0, 1, 2, 3))(qs, ks, vs, ws)
-        gr = jax.grad(_loss(lambda *a, m=mode: band_attention_ref(
-            *a, nr=nr, mode=m)), argnums=(0, 1, 2, 3))(qs, ks, vs, ws)
+        gk = jax.grad(_loss(lambda *a, m=mode, r=ratio: band_attention(
+            *a, nr=nr, mode=m, ratio=r, impl="pallas_interpret")),
+            argnums=(0, 1, 2, 3))(qs, kk, vv, ww)
+        gr = jax.grad(_loss(lambda *a, m=mode, r=ratio: band_attention_ref(
+            *a, nr=nr, mode=m, ratio=r)), argnums=(0, 1, 2, 3))(qs, kk, vv, ww)
         # scale-aware: bench gradients reach O(500), so normalize by the
         # reference magnitude (f32 accumulation-order noise is ~1e-7 rel)
         err_b = max(err_b, max(
             float(jnp.abs(a - b).max() / (1.0 + jnp.abs(b).max()))
             for a, b in zip(gk, gr)))
-    emit("kernel_pallas_interpret_fwd_allclose", 0.0, f"max_err={err_f:.2e}")
-    emit("kernel_pallas_interpret_bwd_allclose", 0.0, f"max_err={err_b:.2e}")
+    record("kernel_pallas_interpret_fwd_allclose", 0.0, f"max_err={err_f:.2e}")
+    record("kernel_pallas_interpret_bwd_allclose", 0.0, f"max_err={err_b:.2e}")
     assert err_f < 1e-4 and err_b < 1e-4
+
+    if json_path:
+        payload = {"bench": "kernels",
+                   "shape": {"B": B, "G": G, "L": L, "d": d, "nr": nr},
+                   "backend": jax.default_backend(),
+                   "rows": rows}
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {json_path} ({len(rows)} rows)")
     return {"err_fwd": err_f, "err_bwd": err_b}
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", nargs="?", const="BENCH_kernels.json",
+                    default=None, metavar="PATH",
+                    help="also write rows as JSON (default name "
+                         "BENCH_kernels.json)")
+    args = ap.parse_args()
+    run(json_path=args.json)

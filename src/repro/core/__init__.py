@@ -1,5 +1,6 @@
 """Core H-Transformer-1D hierarchical attention (the paper's contribution)."""
-from .h1d_attention import h1d_attention, h1d_attention_mha
+from .h1d_attention import (h1d_attention, h1d_attention_mha,
+                            fold_kv_heads, unfold_kv_heads)
 from .ref_attention import dense_attention, h1d_dense_oracle
 from .h1d_decode import (
     H1DCache,
@@ -13,6 +14,8 @@ from . import hierarchy
 __all__ = [
     "h1d_attention",
     "h1d_attention_mha",
+    "fold_kv_heads",
+    "unfold_kv_heads",
     "dense_attention",
     "h1d_dense_oracle",
     "H1DCache",

@@ -22,8 +22,13 @@ Modes
   queries attend coarse keys/values.  Exactly consistent with the
   hierarchical KV-cache incremental decode in ``h1d_decode.py``.
 
-All softmax arithmetic runs in float32 with a cross-level stable max
-(log-sum-exp combination of the per-level band contributions).
+All softmax arithmetic runs in float32 with a cross-level stable max:
+each level's band contribution is folded into ONE running fine-resolution
+``(y, dn, m)`` accumulator as soon as it is computed (streaming
+log-sum-exp combine, ``_stream_combine``) -- no per-level tensors are
+kept live.  With ``impl='pallas*'`` every level runs a fused kernel:
+level 0 via the symmetric band modes and each coarse fine-q level via
+``mode='sub'`` (fine queries x shifted coarse KV blocks).
 """
 from __future__ import annotations
 
@@ -103,21 +108,22 @@ def _level_fine_q(qb, kb, vb, wb):
 # full operator
 # ---------------------------------------------------------------------------
 
-def _combine_levels(ys, dns, ms, out_dtype, eps=1e-9):
-    """Log-sum-exp combination of per-level (Y, D, m) at fine resolution."""
-    m_star = ms[0]
-    for m in ms[1:]:
-        m_star = jnp.maximum(m_star, m)
-    y = None
-    d = None
-    for yl, dl, ml in zip(ys, dns, ms):
-        w = jnp.exp(ml - m_star)
-        yl = yl * w[..., None]
-        dl = dl * w
-        y = yl if y is None else y + yl
-        d = dl if d is None else d + dl
-    z = y / jnp.maximum(d, eps)[..., None]
-    return z.astype(out_dtype)
+def _stream_combine(acc, yl, dl, ml):
+    """Fold one level's (Y, D, m) into the running fine-resolution
+    accumulator with a log-sum-exp shift.
+
+    Streaming replacement for the old list-based ``_combine_levels``:
+    each level is merged as soon as its band kernel returns, so the
+    operator keeps ONE (y, dn, m) triple live instead of materializing
+    all M per-level tensors in HBM and merging at the end (DESIGN.md
+    section 1.3; EXPERIMENTS.md P24 has the traffic accounting).
+    """
+    y, d, m = acc
+    m_new = jnp.maximum(m, ml)
+    e_acc = jnp.exp(m - m_new)
+    e_l = jnp.exp(ml - m_new)
+    return (y * e_acc[..., None] + yl * e_l[..., None],
+            d * e_acc + dl * e_l, m_new)
 
 
 def h1d_attention(
@@ -180,11 +186,10 @@ def h1d_attention(
             jnp.einsum("bgqk,bk->bgq", a, w), 1e-9)[..., None]
         return z.astype(out_dtype)
 
-    # ---- level 0 ----------------------------------------------------------
-    y0, d0, m0 = band_attention(
+    # ---- level 0 seeds the streaming accumulator --------------------------
+    acc = band_attention(
         q, k, v, w, nr=nr, mode="l0_causal" if causal else "l0_bidir",
         impl=impl, tq=tq)
-    ys, dns, ms = [y0], [d0], [m0]
 
     fine_q = causal and causal_mode == "fine-q"
     kc, vc, wc = k, v, w
@@ -194,15 +199,22 @@ def h1d_attention(
         vc = hc.coarsen_sum(vc, axis=-2)
         wc = hc.coarsen_sum(wc, axis=-1)
         if fine_q:
-            # fine queries grouped per coarse key block (jnp path; the
-            # deep-level einsums are already MXU-shaped)
-            qbl = hc.block(q, nr * (1 << l))
-            yl, dl, ml = _level_fine_q(
-                qbl, hc.block(kc, nr), hc.block(vc, nr),
-                hc.block(wc, nr, axis=-1))
-            ys.append(hc.unblock(yl, axis=-3))
-            dns.append(hc.unblock(dl, axis=-2))
-            ms.append(hc.unblock(ml, axis=-2))
+            if impl in ("pallas", "pallas_interpret"):
+                # fused fine-q level: fine query tiles x shifted coarse
+                # KV blocks, one kernel launch per level
+                yl, dl, ml = band_attention(
+                    q, kc, vc, wc, nr=nr, mode="sub", ratio=1 << l,
+                    impl=impl, tq=tq)
+            else:
+                # fine queries grouped per coarse key block (jnp oracle;
+                # the deep-level einsums are already MXU-shaped)
+                qbl = hc.block(q, nr * (1 << l))
+                ylb, dlb, mlb = _level_fine_q(
+                    qbl, hc.block(kc, nr), hc.block(vc, nr),
+                    hc.block(wc, nr, axis=-1))
+                yl = hc.unblock(ylb, axis=-3)
+                dl = hc.unblock(dlb, axis=-2)
+                ml = hc.unblock(mlb, axis=-2)
         else:
             # paper-faithful: coarsen queries too (weighted mean)
             qc, _ = hc.coarsen_weighted_mean(qc, wq)
@@ -212,11 +224,41 @@ def h1d_attention(
                 mode="coarse_causal" if causal else "coarse_bidir",
                 impl=impl, tq=tq)
             rep = 1 << l
-            ys.append(hc.interp_repeat(yl, rep, axis=-2))
-            dns.append(hc.interp_repeat(dl, rep, axis=-1))
-            ms.append(hc.interp_repeat(ml, rep, axis=-1))
+            yl = hc.interp_repeat(yl, rep, axis=-2)
+            dl = hc.interp_repeat(dl, rep, axis=-1)
+            ml = hc.interp_repeat(ml, rep, axis=-1)
+        acc = _stream_combine(acc, yl, dl, ml)
 
-    return _combine_levels(ys, dns, ms, out_dtype)
+    y, d, _ = acc
+    z = y / jnp.maximum(d, 1e-9)[..., None]
+    return z.astype(out_dtype)
+
+
+def fold_kv_heads(q, k, v):
+    """(B, L, Hq, D) / (B, L, Hkv, Dk) -> the core (B*Hkv, G, L, *)
+    layout: kv-heads fold into the batch dim and the GQA group size
+    into G (kv_head = h // G).  Shared by every kernel-path caller so
+    the head-ordering convention cannot drift.  Returns
+    (qh, kh, vh, (B, Hkv, G))."""
+    B, L, Hq, D = q.shape
+    Hkv = k.shape[2]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    # (B, L, Hq, D) -> (B, Hkv, G, L, D) -> (B*Hkv, G, L, D)
+    qh = q.reshape(B, L, Hkv, G, D).transpose(0, 2, 3, 1, 4)
+    qh = qh.reshape(B * Hkv, G, L, D)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * Hkv, L, k.shape[-1])
+    vh = v.transpose(0, 2, 1, 3).reshape(B * Hkv, L, v.shape[-1])
+    return qh, kh, vh, (B, Hkv, G)
+
+
+def unfold_kv_heads(z, fold):
+    """Inverse of :func:`fold_kv_heads` for the (B*Hkv, G, L, Dv)
+    output: returns (B, L, Hq, Dv)."""
+    B, Hkv, G = fold
+    L = z.shape[-2]
+    z = z.reshape(B, Hkv, G, L, -1).transpose(0, 3, 1, 2, 4)
+    return z.reshape(B, L, Hkv * G, -1)
 
 
 def h1d_attention_mha(
@@ -227,18 +269,11 @@ def h1d_attention_mha(
 ) -> jnp.ndarray:
     """GQA-aware multi-head wrapper: folds (B, Hkv) into the core batch dim
     and the Hq/Hkv group size into G.  Returns (B, L, Hq, Dv)."""
-    B, L, Hq, D = q.shape
-    Hkv = k.shape[2]
-    assert Hq % Hkv == 0, (Hq, Hkv)
-    G = Hq // Hkv
-    # (B, L, Hq, D) -> (B, Hkv, G, L, D) -> (B*Hkv, G, L, D)
-    qh = q.reshape(B, L, Hkv, G, D).transpose(0, 2, 3, 1, 4)
-    qh = qh.reshape(B * Hkv, G, L, D)
-    kh = k.transpose(0, 2, 1, 3).reshape(B * Hkv, L, D)
-    vh = v.transpose(0, 2, 1, 3).reshape(B * Hkv, L, v.shape[-1])
+    B, L = q.shape[:2]
+    qh, kh, vh, fold = fold_kv_heads(q, k, v)
+    Hkv = fold[1]
     kw = kwargs.pop("kv_weight", None)
     if kw is not None:
         kw = jnp.repeat(jnp.broadcast_to(kw, (B, L)), Hkv, axis=0)
     z = h1d_attention(qh, kh, vh, kv_weight=kw, **kwargs)
-    z = z.reshape(B, Hkv, G, L, -1).transpose(0, 3, 1, 2, 4)
-    return z.reshape(B, L, Hq, -1)
+    return unfold_kv_heads(z, fold)

@@ -1,8 +1,11 @@
 """Pallas TPU kernels for the H-Transformer-1D compute hot-spots."""
-from .ops import band_attention
-from .h1d_block import band_attention_fwd, band_mask, MODES
-from .h1d_block_bwd import band_attention_bwd
+from .ops import band_attention, resolve_tq
+from .h1d_block import (band_attention_fwd, band_attention_sub_fwd,
+                        band_mask, MODES, SUB_MODE)
+from .h1d_block_bwd import band_attention_bwd, band_attention_sub_bwd
 from .ref import band_attention_ref
 
 __all__ = ["band_attention", "band_attention_fwd", "band_attention_bwd",
-           "band_mask", "band_attention_ref", "MODES"]
+           "band_attention_sub_fwd", "band_attention_sub_bwd",
+           "band_mask", "band_attention_ref", "resolve_tq",
+           "MODES", "SUB_MODE"]

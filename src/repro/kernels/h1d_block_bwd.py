@@ -52,24 +52,29 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .h1d_block import band_mask, NEG_INF, _MIN_M, MODES
+from .h1d_block import (band_mask, sub_kv_specs, NEG_INF, _MIN_M, MODES,
+                        SUB_MODE)
 
 
-def _recompute(q, k, w, m, qi, ki, *, nr: int, mode: str, lk: int):
+def _recompute(q, k, w, m, qi, ki, *, nr: int, mode: str, lk: int,
+               ratio: int = 1, lq: int = None):
     """Re-materialize one band: masked scores -> (a, ind).
 
     q: (nq, d) f32; k: (nk, d) f32; w: (nk,) f32; m: (nq,) f32 saved
     row-max; qi: (nq, 1) / ki: (1, nk) global indices.  Returns
     ``a = exp(s - m)`` (exactly 0 off-band via the NEG_INF mask) and the
     argmax indicator ``ind = (s == m)`` as f32.  Query rows outside
-    [0, lk) (clamped neighbour tiles at the sequence edges) are masked
-    here -- ``band_mask`` itself only bounds-checks keys.
+    [0, lq) (clamped neighbour tiles at the sequence edges) are masked
+    here -- ``band_mask`` itself only bounds-checks keys.  ``lq``
+    defaults to ``lk``; the ``sub`` mode passes the fine query length
+    (= lk * ratio) since its key axis is coarse.
     """
     f32 = jnp.float32
+    lq = lk if lq is None else lq
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=f32)
-    allow = band_mask(qi, ki, nr, mode, lk) & (w[None, :] > 0)
-    allow = allow & (qi >= 0) & (qi < lk)
+    allow = band_mask(qi, ki, nr, mode, lk, ratio) & (w[None, :] > 0)
+    allow = allow & (qi >= 0) & (qi < lq)
     s = jnp.where(allow, s, NEG_INF)
     a = jnp.exp(s - m[:, None])
     ind = (s == m[:, None]).astype(f32)
@@ -105,14 +110,13 @@ def _dq_kernel(*refs, nr: int, mode: str, tq: int, lk: int):
         da = da + gdn[:, None] * w[None, :]
         return a * da, ind, k
 
+    # halo refs are exact nr-row blocks (see band_attention_fwd's specs)
     bands = [
         band(ks_ref[0], vs_ref[0], ws_ref[0], it * tq),
-        band(kp_ref[0, tq - nr:, :], vp_ref[0, tq - nr:, :],
-             wp_ref[0, tq - nr:], it * tq - nr),
+        band(kp_ref[0], vp_ref[0], wp_ref[0], it * tq - nr),
     ]
     if not causal:
-        bands.append(band(kn_ref[0, :nr, :], vn_ref[0, :nr, :],
-                          wn_ref[0, :nr], (it + 1) * tq))
+        bands.append(band(kn_ref[0], vn_ref[0], wn_ref[0], (it + 1) * tq))
 
     count = functools.reduce(
         jnp.add, [ind.sum(axis=1) for _, ind, _ in bands])   # (TQ,)
@@ -177,11 +181,11 @@ def _dkvw_kernel(*refs, nr: int, mode: str, tq: int, lk: int):
         gmns_ref[0, 0].astype(f32), it * tq, k, v, w, it * tq)
 
     # prev-halo: the first nr query rows of tile it+1 read this tile's
-    # last nr keys as their 'prev' band.
+    # last nr keys as their 'prev' band (refs are exact nr-row blocks).
     dk_h, dv_h, dw_h = band(
-        qn_ref[0, 0, :nr, :].astype(f32), gyn_ref[0, 0, :nr, :].astype(f32),
-        gdnn_ref[0, 0, :nr].astype(f32), mn_ref[0, 0, :nr].astype(f32),
-        gmnn_ref[0, 0, :nr].astype(f32), (it + 1) * tq,
+        qn_ref[0, 0].astype(f32), gyn_ref[0, 0].astype(f32),
+        gdnn_ref[0, 0].astype(f32), mn_ref[0, 0].astype(f32),
+        gmnn_ref[0, 0].astype(f32), (it + 1) * tq,
         k[tq - nr:], v[tq - nr:], w[tq - nr:], it * tq + tq - nr)
     dk = dk + jnp.pad(dk_h, ((tq - nr, 0), (0, 0)))
     dvv = dvv + jnp.pad(dv_h, ((tq - nr, 0), (0, 0)))
@@ -191,11 +195,11 @@ def _dkvw_kernel(*refs, nr: int, mode: str, tq: int, lk: int):
         # next-halo: the last nr query rows of tile it-1 read this
         # tile's first nr keys as their 'next' band.
         dk_h, dv_h, dw_h = band(
-            qp_ref[0, 0, tq - nr:, :].astype(f32),
-            gyp_ref[0, 0, tq - nr:, :].astype(f32),
-            gdnp_ref[0, 0, tq - nr:].astype(f32),
-            mp_ref[0, 0, tq - nr:].astype(f32),
-            gmnp_ref[0, 0, tq - nr:].astype(f32), it * tq - nr,
+            qp_ref[0, 0].astype(f32),
+            gyp_ref[0, 0].astype(f32),
+            gdnp_ref[0, 0].astype(f32),
+            mp_ref[0, 0].astype(f32),
+            gmnp_ref[0, 0].astype(f32), it * tq - nr,
             k[:nr], v[:nr], w[:nr], it * tq)
         dk = dk + jnp.pad(dk_h, ((0, tq - nr), (0, 0)))
         dvv = dvv + jnp.pad(dv_h, ((0, tq - nr), (0, 0)))
@@ -216,6 +220,310 @@ def _dkvw_kernel(*refs, nr: int, mode: str, tq: int, lk: int):
         dw_ref[0] += dw.astype(dw_ref.dtype)
 
 
+def _dq_sub_kernel(*refs, nr: int, ratio: int, tq: int, lk: int):
+    """Fine-q causal dQ pass: mirrors ``_fwd_sub_kernel``'s band layout
+    (wide: prev-tail + self-head coarse window; deep: single coarse
+    block I-1) and emits the per-row max-gradient scale ``gmn``."""
+    nq = nr * ratio
+    if nq <= tq:
+        (q_ref, ks_ref, kp_ref, vs_ref, vp_ref, ws_ref, wp_ref,
+         m_ref, gy_ref, gdn_ref, gmh_ref, dq_ref, gmn_ref) = refs
+    else:
+        (q_ref, kb_ref, vb_ref, wb_ref,
+         m_ref, gy_ref, gdn_ref, gmh_ref, dq_ref, gmn_ref) = refs
+
+    it = pl.program_id(2)
+    f32 = jnp.float32
+    q = q_ref[0, 0].astype(f32)                        # (TQ, d)
+    m = m_ref[0, 0].astype(f32)
+    gy = gy_ref[0, 0].astype(f32)
+    gdn = gdn_ref[0, 0].astype(f32)
+    gmh = gmh_ref[0, 0].astype(f32)
+    qi = it * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, 1), 0)
+
+    def band(k, v, w, k0):
+        k, v, w = k.astype(f32), v.astype(f32), w.astype(f32)
+        tk = k.shape[0]
+        ki = k0 + jax.lax.broadcasted_iota(jnp.int32, (1, tk), 1)
+        a, ind = _recompute(q, k, w, m, qi, ki, nr=nr, mode=SUB_MODE,
+                            lk=lk, ratio=ratio, lq=lk * ratio)
+        da = jax.lax.dot_general(gy, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=f32)
+        da = da + gdn[:, None] * w[None, :]
+        return a * da, ind, k
+
+    if nq <= tq:
+        tqc = tq // ratio
+        # prev-halo refs are exact nr-row coarse blocks (sub_kv_specs)
+        bands = [band(kp_ref[0], vp_ref[0], wp_ref[0], it * tqc - nr)]
+        if tqc > nr:
+            bands.append(band(ks_ref[0, :tqc - nr, :], vs_ref[0, :tqc - nr, :],
+                              ws_ref[0, :tqc - nr], it * tqc))
+    else:
+        s_blk = nq // tq
+        bands = [band(kb_ref[0], vb_ref[0], wb_ref[0],
+                      (it // s_blk - 1) * nr)]
+
+    count = functools.reduce(
+        jnp.add, [ind.sum(axis=1) for _, ind, _ in bands])   # (TQ,)
+    gmn = jnp.where(count > 0, gmh / jnp.maximum(count, 1.0), 0.0)
+
+    dq = None
+    for ds0, ind, k in bands:
+        ds = ds0 + gmn[:, None] * ind
+        dqt = jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=f32)
+        dq = dqt if dq is None else dq + dqt
+
+    dq_ref[0, 0] = dq.astype(dq_ref.dtype)
+    gmn_ref[0, 0] = gmn.astype(gmn_ref.dtype)
+
+
+def _sub_band_dkvw(qrows, gyrows, gdnrows, mrows, gmnrows, q0,
+                   krows, vrows, wrows, k0, *, nr, ratio, lk):
+    """One fine-query x coarse-key band of the sub dK/dV/dW pass."""
+    f32 = jnp.float32
+    nq_rows = qrows.shape[0]
+    nk = krows.shape[0]
+    qi = q0 + jax.lax.broadcasted_iota(jnp.int32, (nq_rows, 1), 0)
+    ki = k0 + jax.lax.broadcasted_iota(jnp.int32, (1, nk), 1)
+    a, ind = _recompute(qrows, krows, wrows, mrows, qi, ki, nr=nr,
+                        mode=SUB_MODE, lk=lk, ratio=ratio, lq=lk * ratio)
+    da = jax.lax.dot_general(gyrows, vrows, (((1,), (1,)), ((), ())),
+                             preferred_element_type=f32)
+    da = da + gdnrows[:, None] * wrows[None, :]
+    ds = a * da + gmnrows[:, None] * ind
+    dk_b = jax.lax.dot_general(ds, qrows, (((0,), (0,)), ((), ())),
+                               preferred_element_type=f32)    # (nk, d)
+    dv_b = jax.lax.dot_general(a, gyrows, (((0,), (0,)), ((), ())),
+                               preferred_element_type=f32)    # (nk, dv)
+    dw_b = jnp.sum(a * gdnrows[:, None], axis=0)              # (nk,)
+    return dk_b, dv_b, dw_b
+
+
+def _dkvw_sub_wide_kernel(*refs, nr: int, ratio: int, tq: int, lk: int):
+    """sub dK/dV/dW, wide layout (nq <= tq): key-tile grid (B, NT, G)
+    over coarse tiles of ``tqc = tq // ratio`` rows, aligned with the
+    fine query tiles.  The queries reading coarse tile ``it`` are the
+    fine window [it*tq + nq, (it+1)*tq + nq): the tail of the SELF fine
+    tile plus the first ``nq`` rows of the NEXT fine tile (the exact
+    transpose of the forward's prev-tail/self-head key window)."""
+    (k_ref, v_ref, w_ref,
+     qs_ref, qn_ref, gys_ref, gyn_ref, gdns_ref, gdnn_ref,
+     ms_ref, mn_ref, gmns_ref, gmnn_ref,
+     dk_ref, dv_ref, dw_ref) = refs
+
+    it = pl.program_id(1)
+    g = pl.program_id(2)
+    f32 = jnp.float32
+    nq = nr * ratio
+    tqc = tq // ratio
+    k = k_ref[0].astype(f32)                           # (tqc, d)
+    v = v_ref[0].astype(f32)
+    w = w_ref[0].astype(f32)
+
+    # next-halo: first nq query rows of tile it+1 x this tile's last nr
+    # keys (the query refs are exact nq-row blocks, see the wide specs)
+    dk_h, dv_h, dw_h = _sub_band_dkvw(
+        qn_ref[0, 0].astype(f32), gyn_ref[0, 0].astype(f32),
+        gdnn_ref[0, 0].astype(f32), mn_ref[0, 0].astype(f32),
+        gmnn_ref[0, 0].astype(f32), (it + 1) * tq,
+        k[tqc - nr:], v[tqc - nr:], w[tqc - nr:], (it + 1) * tqc - nr,
+        nr=nr, ratio=ratio, lk=lk)
+    dk = jnp.pad(dk_h, ((tqc - nr, 0), (0, 0)))
+    dvv = jnp.pad(dv_h, ((tqc - nr, 0), (0, 0)))
+    dw = jnp.pad(dw_h, ((tqc - nr, 0),))
+
+    if nq < tq:
+        # self band: query rows [nq:] of tile it x this tile's head keys
+        dk_s, dv_s, dw_s = _sub_band_dkvw(
+            qs_ref[0, 0, nq:, :].astype(f32), gys_ref[0, 0, nq:, :].astype(f32),
+            gdns_ref[0, 0, nq:].astype(f32), ms_ref[0, 0, nq:].astype(f32),
+            gmns_ref[0, 0, nq:].astype(f32), it * tq + nq,
+            k[:tqc - nr], v[:tqc - nr], w[:tqc - nr], it * tqc,
+            nr=nr, ratio=ratio, lk=lk)
+        dk = dk + jnp.pad(dk_s, ((0, nr), (0, 0)))
+        dvv = dvv + jnp.pad(dv_s, ((0, nr), (0, 0)))
+        dw = dw + jnp.pad(dw_s, ((0, nr),))
+
+    @pl.when(g == 0)
+    def _init():
+        dk_ref[0] = dk.astype(dk_ref.dtype)
+        dv_ref[0] = dvv.astype(dv_ref.dtype)
+        dw_ref[0] = dw.astype(dw_ref.dtype)
+
+    @pl.when(g > 0)
+    def _acc():
+        dk_ref[0] += dk.astype(dk_ref.dtype)
+        dv_ref[0] += dvv.astype(dv_ref.dtype)
+        dw_ref[0] += dw.astype(dw_ref.dtype)
+
+
+def _dkvw_sub_deep_kernel(*refs, nr: int, ratio: int, tq: int, lk: int):
+    """sub dK/dV/dW, deep layout (nq > tq): grid (B, NKB, S, G) -- one
+    coarse key BLOCK per ``j`` step, its nq = S*tq reading query rows
+    split over the S innermost-but-one grid steps.  The (1, nr, *)
+    output blocks' index maps ignore (s, g), so the accumulation over
+    query sub-tiles AND the GQA group happens in VMEM."""
+    (k_ref, v_ref, w_ref, q_ref, gy_ref, gdn_ref, m_ref, gmn_ref,
+     dk_ref, dv_ref, dw_ref) = refs
+
+    jt = pl.program_id(1)
+    s = pl.program_id(2)
+    g = pl.program_id(3)
+    f32 = jnp.float32
+    s_blk = (nr * ratio) // tq
+    q0 = ((jt + 1) * s_blk + s) * tq
+    dk, dvv, dw = _sub_band_dkvw(
+        q_ref[0, 0].astype(f32), gy_ref[0, 0].astype(f32),
+        gdn_ref[0, 0].astype(f32), m_ref[0, 0].astype(f32),
+        gmn_ref[0, 0].astype(f32), q0,
+        k_ref[0].astype(f32), v_ref[0].astype(f32), w_ref[0].astype(f32),
+        jt * nr, nr=nr, ratio=ratio, lk=lk)
+
+    @pl.when((s == 0) & (g == 0))
+    def _init():
+        dk_ref[0] = dk.astype(dk_ref.dtype)
+        dv_ref[0] = dvv.astype(dv_ref.dtype)
+        dw_ref[0] = dw.astype(dw_ref.dtype)
+
+    @pl.when((s > 0) | (g > 0))
+    def _acc():
+        dk_ref[0] += dk.astype(dk_ref.dtype)
+        dv_ref[0] += dvv.astype(dv_ref.dtype)
+        dw_ref[0] += dw.astype(dw_ref.dtype)
+
+
+def band_attention_sub_bwd(q, k, v, w, y, dn, m, gy, gdn, gm, *,
+                           nr: int, ratio: int, tq: int = 128,
+                           interpret: bool = False):
+    """Fused backward of the ``sub`` (fine-q causal) level.  Same
+    recompute strategy as the symmetric modes: only ``(q, k, v, w)`` and
+    the saved outputs ``(y, dn, m)`` are read; the banded scores are
+    re-materialized per tile in VMEM.  Returns (dq, dk, dv, dw)."""
+    B, G, Lq, d = q.shape
+    Lk = k.shape[1]
+    dv = v.shape[-1]
+    nq = nr * ratio
+    assert ratio >= 2 and Lq == Lk * ratio, (Lq, Lk, ratio)
+    assert Lq % tq == 0 and tq % nr == 0, (Lq, tq, nr)
+    assert (tq % nq == 0) or (nq % tq == 0), (tq, nq)
+    nt = Lq // tq
+    f32 = jnp.float32
+
+    gy = gy.astype(f32)
+    gdn = gdn.astype(f32)
+    gm = gm.astype(f32)
+    delta = jnp.sum(gy * y, axis=-1) + gdn * dn
+    gmh = gm - delta                                    # (B, G, Lq)
+
+    qtile_map = lambda b, g_, i: (b, g_, i, 0)
+    rtile_map = lambda b, g_, i: (b, g_, i)
+
+    # ---- pass 1: dQ (fine query-tile grid) + per-row max-grad scale -------
+    in_specs = [pl.BlockSpec((1, 1, tq, d), qtile_map)]
+    build, layout = sub_kv_specs(nr, ratio, tq)
+    kv_specs, kv_inputs = build(k, v, w, d, dv)
+    in_specs += kv_specs
+    inputs = [q] + kv_inputs
+    in_specs += [pl.BlockSpec((1, 1, tq), rtile_map),
+                 pl.BlockSpec((1, 1, tq, dv), qtile_map),
+                 pl.BlockSpec((1, 1, tq), rtile_map),
+                 pl.BlockSpec((1, 1, tq), rtile_map)]
+    inputs += [m, gy, gdn, gmh]
+
+    dq, gmn = pl.pallas_call(
+        functools.partial(_dq_sub_kernel, nr=nr, ratio=ratio, tq=tq, lk=Lk),
+        grid=(B, G, nt),
+        in_specs=in_specs,
+        out_specs=(pl.BlockSpec((1, 1, tq, d), qtile_map),
+                   pl.BlockSpec((1, 1, tq), rtile_map)),
+        out_shape=(jax.ShapeDtypeStruct((B, G, Lq, d), f32),
+                   jax.ShapeDtypeStruct((B, G, Lq), f32)),
+        interpret=interpret,
+    )(*inputs)
+
+    # ---- pass 2: dK/dV/dW on the coarse key axis --------------------------
+    if layout == "wide":
+        tqc = tq // ratio
+        # next-halo query operands are exact nq-row blocks: only the
+        # first nq fine rows of tile it+1 read this coarse tile's keys
+        nbq = Lq // nq
+        tbq = tq // nq
+        kv_self = lambda b, i, g_: (b, i, 0)
+        w_self = lambda b, i, g_: (b, i)
+        q_self = lambda b, i, g_: (b, g_, i, 0)
+        q_next = lambda b, i, g_: (
+            b, g_, jnp.minimum((i + 1) * tbq, nbq - 1), 0)
+        r_self = lambda b, i, g_: (b, g_, i)
+        r_next = lambda b, i, g_: (b, g_, jnp.minimum((i + 1) * tbq, nbq - 1))
+
+        in_specs = [pl.BlockSpec((1, tqc, d), kv_self),
+                    pl.BlockSpec((1, tqc, dv), kv_self),
+                    pl.BlockSpec((1, tqc), w_self)]
+        inputs = [k, v, w]
+        for rows, mp in ((tq, q_self), (nq, q_next)):
+            in_specs.append(pl.BlockSpec((1, 1, rows, d), mp))
+            inputs.append(q)
+        for rows, mp in ((tq, q_self), (nq, q_next)):
+            in_specs.append(pl.BlockSpec((1, 1, rows, dv), mp))
+            inputs.append(gy)
+        for tensor in (gdn, m, gmn):
+            for rows, mp in ((tq, r_self), (nq, r_next)):
+                in_specs.append(pl.BlockSpec((1, 1, rows), mp))
+                inputs.append(tensor)
+
+        dk, dvv, dw = pl.pallas_call(
+            functools.partial(_dkvw_sub_wide_kernel, nr=nr, ratio=ratio,
+                              tq=tq, lk=Lk),
+            grid=(B, nt, G),
+            in_specs=in_specs,
+            out_specs=(pl.BlockSpec((1, tqc, d), kv_self),
+                       pl.BlockSpec((1, tqc, dv), kv_self),
+                       pl.BlockSpec((1, tqc), w_self)),
+            out_shape=(jax.ShapeDtypeStruct((B, Lk, d), f32),
+                       jax.ShapeDtypeStruct((B, Lk, dv), f32),
+                       jax.ShapeDtypeStruct((B, Lk), f32)),
+            interpret=interpret,
+        )(*inputs)
+    else:
+        s_blk = nq // tq
+        nkb = Lk // nr
+        kv_blk = lambda b, j, s, g_: (b, j, 0)
+        w_blk = lambda b, j, s, g_: (b, j)
+        q_map = lambda b, j, s, g_: (
+            b, g_, jnp.minimum((j + 1) * s_blk + s, nt - 1), 0)
+        r_map = lambda b, j, s, g_: (
+            b, g_, jnp.minimum((j + 1) * s_blk + s, nt - 1))
+
+        in_specs = [pl.BlockSpec((1, nr, d), kv_blk),
+                    pl.BlockSpec((1, nr, dv), kv_blk),
+                    pl.BlockSpec((1, nr), w_blk),
+                    pl.BlockSpec((1, 1, tq, d), q_map),
+                    pl.BlockSpec((1, 1, tq, dv), q_map),
+                    pl.BlockSpec((1, 1, tq), r_map),
+                    pl.BlockSpec((1, 1, tq), r_map),
+                    pl.BlockSpec((1, 1, tq), r_map)]
+        inputs = [k, v, w, q, gy, gdn, m, gmn]
+
+        dk, dvv, dw = pl.pallas_call(
+            functools.partial(_dkvw_sub_deep_kernel, nr=nr, ratio=ratio,
+                              tq=tq, lk=Lk),
+            grid=(B, nkb, s_blk, G),
+            in_specs=in_specs,
+            out_specs=(pl.BlockSpec((1, nr, d), kv_blk),
+                       pl.BlockSpec((1, nr, dv), kv_blk),
+                       pl.BlockSpec((1, nr), w_blk)),
+            out_shape=(jax.ShapeDtypeStruct((B, Lk, d), f32),
+                       jax.ShapeDtypeStruct((B, Lk, dv), f32),
+                       jax.ShapeDtypeStruct((B, Lk), f32)),
+            interpret=interpret,
+        )(*inputs)
+
+    return (dq.astype(q.dtype), dk.astype(k.dtype),
+            dvv.astype(v.dtype), dw.astype(w.dtype))
+
+
 def band_attention_bwd(
     q: jnp.ndarray,    # (B, G, L, d) -- pre-scaled queries (fwd input)
     k: jnp.ndarray,    # (B, L, d)
@@ -231,9 +539,14 @@ def band_attention_bwd(
     nr: int,
     mode: str,
     tq: int = 128,
+    ratio: int = 1,
     interpret: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Fused backward.  Returns (dq, dk, dv, dw) in the input dtypes."""
+    if mode == SUB_MODE:
+        return band_attention_sub_bwd(q, k, v, w, y, dn, m, gy, gdn, gm,
+                                      nr=nr, ratio=ratio, tq=tq,
+                                      interpret=interpret)
     assert mode in MODES, mode
     B, G, L, d = q.shape
     dv = v.shape[-1]
@@ -249,28 +562,34 @@ def band_attention_bwd(
     delta = jnp.sum(gy * y, axis=-1) + gdn * dn
     gmh = gm - delta                                    # (B, G, L)
 
+    # self operands: full tiles; halo operands: exact nr-row blocks at
+    # the neighbouring tile's edge (index maps count nr-row blocks)
+    nb = L // nr
+    tb = tq // nr
     self_map = lambda b, g_, i: (b, i, 0)
-    prev_map = lambda b, g_, i: (b, jnp.maximum(i - 1, 0), 0)
-    next_map = lambda b, g_, i: (b, jnp.minimum(i + 1, nt - 1), 0)
+    prev_map = lambda b, g_, i: (b, jnp.maximum(i * tb - 1, 0), 0)
+    next_map = lambda b, g_, i: (b, jnp.minimum((i + 1) * tb, nb - 1), 0)
     wself_map = lambda b, g_, i: (b, i)
-    wprev_map = lambda b, g_, i: (b, jnp.maximum(i - 1, 0))
-    wnext_map = lambda b, g_, i: (b, jnp.minimum(i + 1, nt - 1))
+    wprev_map = lambda b, g_, i: (b, jnp.maximum(i * tb - 1, 0))
+    wnext_map = lambda b, g_, i: (b, jnp.minimum((i + 1) * tb, nb - 1))
     qtile_map = lambda b, g_, i: (b, g_, i, 0)
     rtile_map = lambda b, g_, i: (b, g_, i)
 
     # ---- pass 1: dQ (query-tile grid) + per-row max-grad scale ------------
     in_specs = [pl.BlockSpec((1, 1, tq, d), qtile_map)]
     inputs = [q]
-    kmaps = [self_map, prev_map] + ([] if causal else [next_map])
-    wmaps = [wself_map, wprev_map] + ([] if causal else [wnext_map])
-    for mp in kmaps:
-        in_specs.append(pl.BlockSpec((1, tq, d), mp))
+    kmaps = [(tq, self_map), (nr, prev_map)] + (
+        [] if causal else [(nr, next_map)])
+    wmaps = [(tq, wself_map), (nr, wprev_map)] + (
+        [] if causal else [(nr, wnext_map)])
+    for rows, mp in kmaps:
+        in_specs.append(pl.BlockSpec((1, rows, d), mp))
         inputs.append(k)
-    for mp in kmaps:
-        in_specs.append(pl.BlockSpec((1, tq, dv), mp))
+    for rows, mp in kmaps:
+        in_specs.append(pl.BlockSpec((1, rows, dv), mp))
         inputs.append(v)
-    for mp in wmaps:
-        in_specs.append(pl.BlockSpec((1, tq), mp))
+    for rows, mp in wmaps:
+        in_specs.append(pl.BlockSpec((1, rows), mp))
         inputs.append(w)
     in_specs += [pl.BlockSpec((1, 1, tq), rtile_map),
                  pl.BlockSpec((1, 1, tq, dv), qtile_map),
@@ -290,31 +609,33 @@ def band_attention_bwd(
     )(*inputs)
 
     # ---- pass 2: dK/dV/dW (key-tile grid, g innermost accumulates) --------
+    # halo query operands (the nr edge rows of the neighbouring tile)
+    # are fetched as exact nr-row blocks, mirroring pass 1.
     kv_self = lambda b, i, g_: (b, i, 0)
     w_self = lambda b, i, g_: (b, i)
     q_self = lambda b, i, g_: (b, g_, i, 0)
-    q_next = lambda b, i, g_: (b, g_, jnp.minimum(i + 1, nt - 1), 0)
-    q_prev = lambda b, i, g_: (b, g_, jnp.maximum(i - 1, 0), 0)
+    q_next = lambda b, i, g_: (b, g_, jnp.minimum((i + 1) * tb, nb - 1), 0)
+    q_prev = lambda b, i, g_: (b, g_, jnp.maximum(i * tb - 1, 0), 0)
     r_self = lambda b, i, g_: (b, g_, i)
-    r_next = lambda b, i, g_: (b, g_, jnp.minimum(i + 1, nt - 1))
-    r_prev = lambda b, i, g_: (b, g_, jnp.maximum(i - 1, 0))
+    r_next = lambda b, i, g_: (b, g_, jnp.minimum((i + 1) * tb, nb - 1))
+    r_prev = lambda b, i, g_: (b, g_, jnp.maximum(i * tb - 1, 0))
 
-    qmaps = [q_self, q_next] + ([] if causal else [q_prev])
-    rmaps = [r_self, r_next] + ([] if causal else [r_prev])
+    qmaps = [(tq, q_self), (nr, q_next)] + ([] if causal else [(nr, q_prev)])
+    rmaps = [(tq, r_self), (nr, r_next)] + ([] if causal else [(nr, r_prev)])
 
     in_specs = [pl.BlockSpec((1, tq, d), kv_self),
                 pl.BlockSpec((1, tq, dv), kv_self),
                 pl.BlockSpec((1, tq), w_self)]
     inputs = [k, v, w]
-    for mp in qmaps:
-        in_specs.append(pl.BlockSpec((1, 1, tq, d), mp))
+    for rows, mp in qmaps:
+        in_specs.append(pl.BlockSpec((1, 1, rows, d), mp))
         inputs.append(q)
-    for mp in qmaps:
-        in_specs.append(pl.BlockSpec((1, 1, tq, dv), mp))
+    for rows, mp in qmaps:
+        in_specs.append(pl.BlockSpec((1, 1, rows, dv), mp))
         inputs.append(gy)
     for tensor in (gdn, m, gmn):
-        for mp in rmaps:
-            in_specs.append(pl.BlockSpec((1, 1, tq), mp))
+        for rows, mp in rmaps:
+            in_specs.append(pl.BlockSpec((1, 1, rows), mp))
             inputs.append(tensor)
 
     dk, dvv, dw = pl.pallas_call(

@@ -13,8 +13,20 @@ The custom VJP runs hand-written fused Pallas kernels in BOTH passes
 m)`` outputs, and the backward in ``h1d_block_bwd`` recomputes the
 banded scores per tile in VMEM -- no per-level band tensor is ever
 re-materialized in HBM.  The ``impl='jnp'`` path stays a plain
-differentiable XLA program (``jax.vjp`` of :func:`_blocked_jnp`) and is
-the gradient oracle the kernel backward is tested against.
+differentiable XLA program (``jax.vjp`` of :func:`_blocked_jnp` /
+:func:`_blocked_sub_jnp`) and is the gradient oracle the kernel backward
+is tested against.
+
+``mode='sub'`` (with ``ratio=2**l``) is the fine-q causal coarse level:
+queries keep the fine length L while k/v/w are the level-l coarsened
+sequence of length ``L / ratio`` -- see ``h1d_block`` for the fused
+kernel and DESIGN.md section 2 for the tiling.
+
+Tile-size policy: the requested ``tq`` is a *hint*.  ``band_attention``
+shrinks it to the largest tile compatible with (L, nr, mode) instead of
+silently falling back to XLA -- kernel benchmarks and parity tests always
+measure what they claim to.  A truly incompatible shape (L not a
+multiple of nr) raises.
 """
 from __future__ import annotations
 
@@ -88,15 +100,83 @@ def _blocked_jnp(q, k, v, w, *, nr: int, mode: str):
             hc.unblock(m, axis=-2))
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
-def _band_attention_kernel(q, k, v, w, nr, mode, tq, interpret):
+def _blocked_sub_jnp(q, k, v, w, *, nr: int, ratio: int):
+    """Blocked XLA implementation of ``mode='sub'`` (fine-q causal coarse
+    level): fine query blocks of ``nq = nr * ratio`` rows against the
+    previous coarse key block, masked by ``band_mask`` -- the same
+    partition as the Pallas sub kernel, kept as its gradient oracle.
+    """
+    from repro.core import hierarchy as hc
+
+    B, G, Lq, d = q.shape
+    Lk = k.shape[1]
+    kv_g = k.ndim == 4
+    f32 = jnp.float32
+    nq = nr * ratio
+    qb = hc.block(q.astype(f32), nq)                    # (B,G,NB,nq,d)
+    kt = hc.shift_blocks(hc.block(k.astype(f32), nr), -1)
+    vt = hc.shift_blocks(hc.block(v.astype(f32), nr), -1)
+    wt = hc.shift_blocks(hc.block(w.astype(f32), nr, axis=-1), -1,
+                         block_axis=-2)
+    nb = qb.shape[-3]
+    qi = jnp.arange(nq)[:, None] + jnp.arange(nb)[:, None, None] * nq
+    ki = (jnp.arange(nr)[None, :] + (jnp.arange(nb)[:, None, None] - 1) * nr)
+    allow = h1d_block.band_mask(qi, ki, nr, "sub", Lk, ratio)  # (nb, nq, nr)
+    s_eq = "bgnqd,bgnkd->bgnqk" if kv_g else "bgnqd,bnkd->bgnqk"
+    y_eq = "bgnqk,bgnkv->bgnqv" if kv_g else "bgnqk,bnkv->bgnqv"
+    s = jnp.einsum(s_eq, qb, kt, preferred_element_type=f32)
+    allow = allow[None, None] & (wt > 0)[:, None, :, None, :]
+    s = jnp.where(allow, s, h1d_block.NEG_INF)
+    m = jnp.maximum(s.max(-1), h1d_block._MIN_M)
+    a = jnp.exp(s - m[..., None])
+    y = jnp.einsum(y_eq, a, vt, preferred_element_type=f32)
+    dn = jnp.einsum("bgnqk,bnk->bgnq", a, wt, preferred_element_type=f32)
+    return (hc.unblock(y, axis=-3), hc.unblock(dn, axis=-2),
+            hc.unblock(m, axis=-2))
+
+
+def resolve_tq(L: int, nr: int, tq: int, mode: str, ratio: int = 1) -> int:
+    """Largest kernel query-tile size <= the ``tq`` hint that is valid
+    for (L, nr, mode).
+
+    Symmetric modes need ``tq % nr == 0 and L % tq == 0``; ``sub``
+    additionally needs the tile to align with the ``nq = nr * ratio``
+    query blocks (``tq % nq == 0 or nq % tq == 0``), which the
+    power-of-two hierarchy shapes always admit.  Raises on shapes no
+    tile can cover (L not a multiple of nr).
+    """
+    if L % nr:
+        raise ValueError(
+            f"band_attention: L={L} is not a multiple of nr={nr}; no "
+            f"kernel tiling exists (pad the sequence first)")
+    cap = min(tq, L)
+    if cap < nr:
+        raise ValueError(
+            f"band_attention: tq hint {tq} < nr={nr} cannot tile L={L}")
+    if mode == h1d_block.SUB_MODE:
+        # hierarchy shapes: L = nr * 2**M -- any nr * 2**j <= cap divides
+        # L and is compatible with the nq = nr * 2**l query blocks.
+        t = nr
+        while t * 2 <= cap and L % (t * 2) == 0:
+            t *= 2
+        return t
+    for t in range((cap // nr) * nr, nr - 1, -nr):
+        if L % t == 0:
+            return t
+    raise ValueError(f"band_attention: no tile divides L={L} (nr={nr})")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _band_attention_kernel(q, k, v, w, nr, mode, tq, ratio, interpret):
     return h1d_block.band_attention_fwd(
-        q, k, v, w, nr=nr, mode=mode, tq=tq, interpret=interpret)
+        q, k, v, w, nr=nr, mode=mode, tq=tq, ratio=ratio,
+        interpret=interpret)
 
 
-def _fwd(q, k, v, w, nr, mode, tq, interpret):
+def _fwd(q, k, v, w, nr, mode, tq, ratio, interpret):
     out = h1d_block.band_attention_fwd(
-        q, k, v, w, nr=nr, mode=mode, tq=tq, interpret=interpret)
+        q, k, v, w, nr=nr, mode=mode, tq=tq, ratio=ratio,
+        interpret=interpret)
     y, dn, m = out
     # (y, dn, m) are the whole softmax residual: the backward recomputes
     # scores from (q, k, w, m) and needs y/dn only for the row-wise
@@ -104,12 +184,12 @@ def _fwd(q, k, v, w, nr, mode, tq, interpret):
     return out, (q, k, v, w, y, dn, m)
 
 
-def _bwd(nr, mode, tq, interpret, res, cts):
+def _bwd(nr, mode, tq, ratio, interpret, res, cts):
     q, k, v, w, y, dn, m = res
     gy, gdn, gm = cts
     return h1d_block_bwd.band_attention_bwd(
         q, k, v, w, y, dn, m, gy, gdn, gm,
-        nr=nr, mode=mode, tq=tq, interpret=interpret)
+        nr=nr, mode=mode, tq=tq, ratio=ratio, interpret=interpret)
 
 
 _band_attention_kernel.defvjp(_fwd, _bwd)
@@ -118,12 +198,16 @@ _band_attention_kernel.defvjp(_fwd, _bwd)
 def band_attention(
     q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
     *, nr: int, mode: str, impl: str = "jnp", tq: int = 128,
+    ratio: int = 1,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Banded block attention for one hierarchy level.  See module doc."""
     L = q.shape[-2]
-    if impl == "jnp" or L < tq:
+    if impl == "jnp":
+        if mode == h1d_block.SUB_MODE:
+            return _blocked_sub_jnp(q, k, v, w, nr=nr, ratio=ratio)
         return _blocked_jnp(q, k, v, w, nr=nr, mode=mode)
     if impl in ("pallas", "pallas_interpret"):
+        tq = resolve_tq(L, nr, tq, mode, ratio)
         return _band_attention_kernel(
-            q, k, v, w, nr, mode, tq, impl == "pallas_interpret")
+            q, k, v, w, nr, mode, tq, ratio, impl == "pallas_interpret")
     raise ValueError(f"unknown impl {impl!r}")

@@ -12,14 +12,18 @@ import jax.numpy as jnp
 from .h1d_block import band_mask, NEG_INF, _MIN_M
 
 
-def band_attention_ref(q, k, v, w, *, nr: int, mode: str):
-    """q: (B, G, L, d) pre-scaled; k: (B, L, d); v: (B, L, dv); w: (B, L).
-    Returns float32 (y, dn, m) identical to the Pallas kernel."""
+def band_attention_ref(q, k, v, w, *, nr: int, mode: str, ratio: int = 1):
+    """q: (B, G, L, d) pre-scaled; k: (B, Lk, d); v: (B, Lk, dv); w: (B, Lk).
+    Returns float32 (y, dn, m) identical to the Pallas kernel.
+
+    For ``mode='sub'`` (fine-q causal coarse level) the key length is
+    ``Lk = L / ratio``; all other modes have Lk == L (ratio ignored)."""
     B, G, L, d = q.shape
+    Lk = k.shape[1]
     f32 = jnp.float32
     qi = jnp.arange(L)[:, None]
-    ki = jnp.arange(L)[None, :]
-    allow = band_mask(qi, ki, nr, mode, L)                    # (L, L)
+    ki = jnp.arange(Lk)[None, :]
+    allow = band_mask(qi, ki, nr, mode, Lk, ratio)            # (L, Lk)
     s = jnp.einsum("bgqd,bkd->bgqk", q.astype(f32), k.astype(f32),
                    preferred_element_type=f32)
     allow = allow[None, None] & (w > 0)[:, None, None, :]

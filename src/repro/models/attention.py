@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import (h1d_attention, h1d_attention_mha, dense_attention,
-                        h1d_decode)
+                        h1d_decode, fold_kv_heads, unfold_kv_heads)
 from repro.core import hierarchy as hc
 from repro.kernels import band_attention
 from .common import (ModelConfig, dense_init, dense_apply, rmsnorm_init,
@@ -105,7 +105,10 @@ def _local_attention(q, k, v, window: int, causal: bool, kv_weight, impl,
     block size = window (the paper's 'Local Attention' baseline)."""
     B, L, Hq, D = q.shape
     if impl != "jnp" and tq % window:
-        impl = "jnp"   # kernel tiling needs tq % nr == 0; window is nr here
+        # kernel tiling needs tq % nr == 0 (window is nr here): shrink the
+        # tile hint to the largest window multiple instead of silently
+        # abandoning the kernel path (band_attention refines it further)
+        tq = max(window, (tq // window) * window)
     # kernel tiling also needs L % tq == 0; tq is a multiple of window
     # here, so padding to the tile unit keeps the block structure intact
     unit = window if impl == "jnp" else tq
@@ -131,18 +134,12 @@ def _local_attention(q, k, v, window: int, causal: bool, kv_weight, impl,
         return z.transpose(0, 2, 1, 3)[:, :L]
     # kernel path: fold kv-heads into batch, GQA group into G (3-D KV --
     # the Pallas grid broadcasts KV across G without replication).
-    Hkv = k.shape[2]
-    G = Hq // Hkv
-    qh = q.reshape(B, Lp, Hkv, G, D).transpose(0, 2, 3, 1, 4)
-    qh = qh.reshape(B * Hkv, G, Lp, D)
-    kh = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Lp, D)
-    vh = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Lp, v.shape[-1])
-    wr = jnp.repeat(w, Hkv, axis=0)
+    qh, kh, vh, fold = fold_kv_heads(q, k, v)
+    wr = jnp.repeat(w, fold[1], axis=0)
     y, dn, _ = band_attention(qh * scale, kh, vh * wr[..., None], wr,
                               nr=window, mode=mode, impl=impl, tq=tq)
     z = (y / jnp.maximum(dn, 1e-9)[..., None]).astype(q.dtype)
-    z = z.reshape(B, Hkv, G, Lp, -1).transpose(0, 3, 1, 2, 4)
-    return z.reshape(B, Lp, Hq, -1)[:, :L]
+    return unfold_kv_heads(z, fold)[:, :L]
 
 
 def attn_apply(p, cfg: ModelConfig, x, positions, *, causal=True,
@@ -156,7 +153,10 @@ def attn_apply(p, cfg: ModelConfig, x, positions, *, causal=True,
                              cfg.attn_impl, tq=cfg.attn_tq)
     elif cfg.attention == "h1d":
         if cfg.attn_impl in ("pallas", "pallas_interpret"):
-            # kernel path: heads fold into the pallas grid
+            # kernel path: heads fold into the pallas grid.  Every level
+            # is fused -- level 0 via the symmetric band modes, and (for
+            # causal_mode='fine-q') each coarse level via mode='sub', so
+            # a causal train step never leaves the kernel path.
             Lp = hc.padded_length(S, cfg.nr)
             pad = Lp - S
             if pad:

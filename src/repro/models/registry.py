@@ -18,17 +18,25 @@ from . import encdec as ED
 class ModelFns(NamedTuple):
     init: Callable          # (key, cfg) -> (params, specs)
     loss: Callable          # (params, cfg, batch) -> (loss, metrics)
-    prefill: Callable       # (params, cfg, batch, Lmax) -> (logits, caches, pos)
+    prefill: Callable       # (params, cfg, batch, Lmax, *, true_len=None)
+                            #   -> (logits, caches, pos); true_len is the
+                            #   logical prompt length when tokens are
+                            #   right-padded to a length bucket
     decode_step: Callable   # (params, cfg, caches, token, t) -> (logits, caches)
     init_caches: Callable   # (params, cfg, B, Lmax) -> caches
 
 
-def _lm_prefill(params, cfg, batch, Lmax):
+def _lm_prefill(params, cfg, batch, Lmax, *, true_len=None):
     return T.lm_prefill(params, cfg, batch["tokens"], Lmax,
-                        prefix_embeds=batch.get("patch_embeds"))
+                        prefix_embeds=batch.get("patch_embeds"),
+                        true_len=true_len)
 
 
-def _ed_prefill(params, cfg, batch, Lmax):
+def _ed_prefill(params, cfg, batch, Lmax, *, true_len=None):
+    # enc-dec prefill has no bucketed-prompt support: true_len is
+    # accepted for signature parity but must equal the token length
+    # (the engine's bucket gate excludes the encdec family; a traced
+    # true_len cannot be validated here).
     return ED.encdec_prefill(params, cfg, batch["frames"], batch["tokens"],
                              Lmax)
 

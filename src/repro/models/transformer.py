@@ -335,9 +335,18 @@ def _block_decode(p, cfg, kind, h, t, cache, *, layer_global=True):
 
 
 def lm_prefill(params, cfg: ModelConfig, tokens, Lmax: int, *,
-               prefix_embeds=None):
+               prefix_embeds=None, true_len=None):
     """Teacher-forced pass over the prompt building decode caches.
-    Returns (last_logits (B, V), caches, next_pos (B,))."""
+    Returns (last_logits (B, V), caches, next_pos (B,)).
+
+    ``true_len`` (scalar, may be traced): logical prompt length when
+    ``tokens`` is right-padded to a length bucket (ServeEngine pads to
+    powers of two so jit compiles O(log Lmax) prefill shapes instead of
+    one per distinct prompt length).  The returned logits/next_pos then
+    refer to position ``true_len - 1``; the padded tail positions are
+    never attended by decode (causal attention + position-gated caches),
+    and each is overwritten by ``decode_step`` before its turn comes up.
+    """
     B, S = tokens.shape
     h = _embed_tokens(params, cfg, tokens)
     if prefix_embeds is not None:
@@ -374,8 +383,15 @@ def lm_prefill(params, cfg: ModelConfig, tokens, Lmax: int, *,
                 caches.append(shared_cache)
                 inv += 1
         caches = list(caches)
-    logits = _logits(params, cfg, h[:, -1:])[:, 0]
-    next_pos = jnp.full((B,), L, jnp.int32)
+    if true_len is None:
+        last = h[:, -1:]
+        next_pos = jnp.full((B,), L, jnp.int32)
+    else:
+        if prefix_embeds is not None:
+            true_len = true_len + prefix_embeds.shape[1]
+        last = jax.lax.dynamic_slice_in_dim(h, true_len - 1, 1, axis=1)
+        next_pos = jnp.full((B,), true_len, jnp.int32)
+    logits = _logits(params, cfg, last)[:, 0]
     return logits, caches, next_pos
 
 

@@ -5,6 +5,11 @@ caches).
 Design points for scale (DESIGN.md):
 * decode state is a pure pytree -- slots join/leave by writing rows, the
   jit'd step never retraces;
+* admission pads prompts to power-of-two length buckets, so prefill
+  compiles O(log max_len) shapes, not one per distinct prompt length;
+* per-tick bookkeeping reads a host-side numpy mirror of the slot
+  positions -- one device sync per step (the sampled tokens), not one
+  per active slot;
 * the hierarchical H1D cache gives O(nr log L) attention per token, so
   long-context decode cost is flat in practice;
 * the engine is deployment-shaped (request queue, slot map, step loop)
@@ -51,14 +56,36 @@ class ServeEngine:
         self.caches = self.fns.init_caches(params, cfg, slots, max_len)
         self.tokens = jnp.zeros((slots,), jnp.int32)
         self.pos = jnp.zeros((slots,), jnp.int32)
+        # host-side mirror of ``pos``: the decode loop reads positions
+        # every tick (done checks); keeping a numpy twin avoids a device
+        # sync per active slot per step.
+        self.pos_host = np.zeros((slots,), np.int64)
         self.active = np.zeros((slots,), bool)
         self.req: List[Optional[Request]] = [None] * slots
         self.queue: List[Request] = []
 
+        # Prompt length bucketing: right-pad prompts to the next power of
+        # two (capped at max_len) so _prefill1 compiles O(log max_len)
+        # shapes instead of one per distinct prompt length.  Only safe
+        # when the padded tail cannot reach the true-position logits or
+        # the decode-visible cache, so gated off for:
+        #  * recurrent families (ssm/hybrid): the SSM prefill scan over
+        #    pad tokens corrupts the state (and encdec never gets here);
+        #  * sliding-window configs: the rolling local cache keeps only
+        #    the LAST 2*window rows, so pads evict real in-window keys;
+        #  * h1d coarse-q: coarse QUERY means average pad embeddings
+        #    across cluster boundaries (the documented leak, DESIGN.md
+        #    1.2), shifting logits at the true last token.
+        self._bucket = (cfg.family not in ("ssm", "hybrid", "encdec")
+                        and cfg.sliding_window == 0
+                        and (cfg.attention != "h1d"
+                             or cfg.causal_mode == "fine-q"))
+
         self._decode = jax.jit(
             lambda p, c, tok, t: self.fns.decode_step(p, cfg, c, tok, t))
         self._prefill1 = jax.jit(
-            lambda p, batch: self.fns.prefill(p, cfg, batch, max_len))
+            lambda p, batch, n: self.fns.prefill(p, cfg, batch, max_len,
+                                                 true_len=n))
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -66,15 +93,25 @@ class ServeEngine:
         self.queue.append(req)
 
     def _admit(self):
-        """Prefill queued requests into free slots (one at a time keeps
-        the prefill shape static; batched prefill is a trivial extension
-        when prompts are length-bucketed)."""
+        """Prefill queued requests into free slots, one at a time, with
+        prompts right-padded to power-of-two length buckets -- the jit
+        cache holds O(log max_len) prefill shapes, not one per distinct
+        prompt length (batched prefill within a bucket is a trivial
+        extension from here)."""
         for s in range(self.slots):
             if self.active[s] or not self.queue:
                 continue
             req = self.queue.pop(0)
-            batch = {"tokens": jnp.asarray(req.prompt)[None]}
-            logits, caches, pos = self._prefill1(self.params, batch)
+            prompt = np.asarray(req.prompt)
+            S = int(prompt.shape[0])
+            if self._bucket:
+                # cap at max_len; an over-long prompt keeps its own
+                # length (admitted as before, done check ends it fast)
+                Lb = max(S, min(1 << max(S - 1, 0).bit_length(),
+                                self.max_len))
+                prompt = np.pad(prompt, (0, Lb - S))
+            batch = {"tokens": jnp.asarray(prompt)[None]}
+            logits, caches, pos = self._prefill1(self.params, batch, S)
             nxt = int(jnp.argmax(logits[0]))
             # Write slot s.  The slot dim (0, or 1 for scanned layer
             # stacks) may fold kv-heads into the batch (h1d caches:
@@ -90,7 +127,8 @@ class ServeEngine:
 
             self.caches = jax.tree.map(write, self.caches, caches)
             self.tokens = self.tokens.at[s].set(nxt)
-            self.pos = self.pos.at[s].set(int(pos[0]))
+            self.pos = self.pos.at[s].set(S)   # == pos[0], known on host
+            self.pos_host[s] = S
             self.active[s] = True
             self.req[s] = req
             req.out_tokens.append(nxt)
@@ -110,6 +148,7 @@ class ServeEngine:
             nxt = jax.random.categorical(k, logits).astype(jnp.int32)
         self.tokens = nxt
         self.pos = self.pos + 1
+        self.pos_host += 1       # mirrors the device update exactly
         nxt_host = np.asarray(nxt)
         for s in range(self.slots):
             if not self.active[s]:
@@ -117,7 +156,7 @@ class ServeEngine:
             req = self.req[s]
             req.out_tokens.append(int(nxt_host[s]))
             done = (len(req.out_tokens) >= req.max_new_tokens
-                    or int(self.pos[s]) >= self.max_len - 1)
+                    or int(self.pos_host[s]) >= self.max_len - 1)
             if done:
                 self.active[s] = False
                 self.req[s] = None

@@ -44,10 +44,13 @@ class TrainConfig:
     seed: int = 0
     watchdog_factor: float = 3.0      # straggler alarm threshold
     # attention backend overrides (None = keep the ModelConfig value);
-    # setting attn_impl='pallas' runs BOTH passes of every banded level
-    # on the fused kernels (forward + hand-written backward).
+    # setting attn_impl='pallas' runs BOTH passes of EVERY banded level
+    # on the fused kernels (forward + hand-written backward) -- including
+    # the causal_mode='fine-q' coarse levels, which lower to the 'sub'
+    # kernel, so a default-config causal train step is kernel-complete.
     attn_impl: Optional[str] = None   # jnp | pallas | pallas_interpret
     attn_tq: Optional[int] = None     # Pallas query-tile rows
+    attn_causal_mode: Optional[str] = None  # fine-q | coarse-q
 
 
 def resolve_model_config(cfg: ModelConfig, tc: "TrainConfig") -> ModelConfig:
@@ -57,6 +60,8 @@ def resolve_model_config(cfg: ModelConfig, tc: "TrainConfig") -> ModelConfig:
         updates["attn_impl"] = tc.attn_impl
     if tc.attn_tq is not None:
         updates["attn_tq"] = tc.attn_tq
+    if tc.attn_causal_mode is not None:
+        updates["causal_mode"] = tc.attn_causal_mode
     return dataclasses.replace(cfg, **updates) if updates else cfg
 
 

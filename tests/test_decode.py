@@ -69,9 +69,11 @@ def test_decode_per_row_positions():
     np.testing.assert_allclose(z[1], ztrain[1, :, 63], atol=2e-5, rtol=1e-4)
 
 
+@pytest.mark.slow
 def test_attention_layer_decode_consistency():
     """Layer-level: attn_apply (teacher forcing) vs prefill+decode for the
-    h1d, full and local cache paths."""
+    h1d, full and local cache paths.  Slow: the same layer glue runs in
+    the default arch prefill/decode smokes and the serving tests."""
     from repro.models.common import ModelConfig
     from repro.models.attention import (attn_init, attn_apply, attn_decode,
                                         prefill_into_cache)

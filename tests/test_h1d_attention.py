@@ -23,7 +23,13 @@ def keys(n, seed=0):
 
 
 @pytest.mark.parametrize("causal,mode", MODES)
-@pytest.mark.parametrize("L,nr", [(64, 8), (128, 16), (256, 4), (32, 32)])
+@pytest.mark.parametrize("L,nr", [
+    (64, 8), (128, 16),
+    # deep hierarchy (M=5): heaviest jnp sweep -- slow set; the default
+    # run covers deep levels via the L=1024 kernel-complete grad test
+    pytest.param(128, 4, marks=pytest.mark.slow),
+    (32, 32),
+])
 def test_matches_dense_oracle(L, nr, causal, mode):
     k1, k2, k3 = keys(3)
     q, k, v = rand(k1, 2, 2, L, 16), rand(k2, 2, L, 16), rand(k3, 2, L, 8)
@@ -74,7 +80,7 @@ def test_rows_sum_to_one():
     """Applying attention to constant ones values must return ones
     (D-normalization correctness, Algorithm 1)."""
     k1, k2 = keys(2, seed=4)
-    L, nr = 256, 16
+    L, nr = 128, 8
     q, k = rand(k1, 2, 1, L, 8), rand(k2, 2, L, 8)
     v = jnp.ones((2, L, 4))
     for causal, mode in MODES:

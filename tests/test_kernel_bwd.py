@@ -63,8 +63,10 @@ def test_bwd_parity_multi_tile_gqa(mode):
 
 @pytest.mark.parametrize("tq", [128, 256])
 def test_bwd_parity_tq_variants(tq):
+    # one mode suffices: this test varies only the tile size (the full
+    # mode sweep runs in test_bwd_parity_all_modes)
     q, k, v, w = make(1, 1, 256, 32, 32, seed=3)
-    for mode in ("l0_causal", "coarse_bidir"):
+    for mode in ("l0_causal",):
         gp, gr = vjp_pair(mode, q, k, v, w, tq=tq)
         for a, b in zip(gp, gr):
             np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-3)
@@ -72,20 +74,122 @@ def test_bwd_parity_tq_variants(tq):
 
 @pytest.mark.parametrize("nr", [8, 32])
 def test_bwd_parity_nr_variants(nr):
+    # one causal + one bidir mode suffice here: the full mode sweep runs
+    # in test_bwd_parity_all_modes; this test only varies nr
     q, k, v, w = make(1, 1, 256, 16, 16, seed=5)
-    for mode in MODES:
+    for mode in ("l0_causal", "coarse_bidir"):
         gp, gr = vjp_pair(mode, q, k, v, w, nr=nr)
         for a, b in zip(gp, gr):
             np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-3)
 
 
+# ---------------------------------------------------------------------------
+# mode='sub' (fine-q causal coarse level) backward
+# ---------------------------------------------------------------------------
+
+from test_kernels import make_sub   # shared (B,G,L,ratio,d,dv) builder
+
+
+def sub_vjp_pair(q, k, v, w, *, nr, ratio, tq=128, seed=7):
+    out_r, vjp_r = jax.vjp(
+        lambda *a: band_attention_ref(*a, nr=nr, mode="sub", ratio=ratio),
+        q, k, v, w)
+    _, vjp_p = jax.vjp(
+        lambda *a: band_attention(*a, nr=nr, mode="sub", ratio=ratio,
+                                  tq=tq, impl="pallas_interpret"),
+        q, k, v, w)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    cts = tuple(jax.random.normal(kk, o.shape, o.dtype)
+                for kk, o in zip(ks, out_r))
+    return vjp_p(cts), vjp_r(cts)
+
+
+# wide layout (nq < tq), nq == tq boundary, deep layout (nq > tq);
+# G=2 exercises the in-VMEM GQA accumulation, multi-tile both grids,
+# dv != d the separate value head width
+@pytest.mark.parametrize("L,nr,ratio,tq", [
+    (512, 16, 2, 128),
+    (512, 16, 8, 128),
+    (512, 16, 16, 128),
+    (1024, 16, 32, 128),
+])
+@pytest.mark.parametrize("padded", [False, True])
+def test_sub_bwd_parity(L, nr, ratio, tq, padded):
+    q, k, v, w = make_sub(1, 2, L, ratio, 16, 32, seed=ratio)
+    if padded:
+        Lk = L // ratio
+        w = w * (jnp.arange(Lk) < Lk - 3).astype(jnp.float32)[None]
+    gp, gr = sub_vjp_pair(q, k, v, w, nr=nr, ratio=ratio, tq=tq)
+    for name, a, b in zip("qkvw", gp, gr):
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-3,
+                                   err_msg=f"d{name} mismatch (ratio={ratio})")
+
+
+def _count_jnp_level_calls(monkeypatch):
+    """Patch call counters onto the two pure-jnp level implementations."""
+    import importlib
+    h1d_mod = importlib.import_module("repro.core.h1d_attention")
+    ops_mod = importlib.import_module("repro.kernels.ops")
+    calls = {"_level_fine_q": 0, "_blocked_jnp": 0}
+
+    orig_f = h1d_mod._level_fine_q
+    orig_b = ops_mod._blocked_jnp
+
+    def count_f(*a, **kw):
+        calls["_level_fine_q"] += 1
+        return orig_f(*a, **kw)
+
+    def count_b(*a, **kw):
+        calls["_blocked_jnp"] += 1
+        return orig_b(*a, **kw)
+
+    monkeypatch.setattr(h1d_mod, "_level_fine_q", count_f)
+    monkeypatch.setattr(ops_mod, "_blocked_jnp", count_b)
+    return calls
+
+
+def test_h1d_fine_q_kernel_complete_L1024(monkeypatch):
+    """Acceptance: fine-q causal fwd+grad at L=1024, nr=16 on the kernel
+    path matches the jnp oracle to 1e-4 AND executes zero
+    ``_level_fine_q`` / ``_blocked_jnp`` calls -- every one of the six
+    hierarchy levels runs fused (level 0 + five 'sub' levels spanning
+    the wide, boundary and deep tilings at tq=128)."""
+    B, G, L, D, nr = 1, 2, 1024, 16, 16
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(23), 3)
+    q = jax.random.normal(k1, (B, G, L, D), jnp.float32)
+    k = jax.random.normal(k2, (B, L, D), jnp.float32)
+    v = jax.random.normal(k3, (B, L, D), jnp.float32)
+
+    def loss(impl):
+        def f(q, k, v):
+            z = h1d_attention(q, k, v, nr=nr, causal=True,
+                              causal_mode="fine-q", impl=impl, tq=128)
+            return jnp.sum(z ** 2)
+        return f
+
+    calls = _count_jnp_level_calls(monkeypatch)
+    zk, gk = jax.value_and_grad(loss("pallas_interpret"),
+                                argnums=(0, 1, 2))(q, k, v)
+    assert calls == {"_level_fine_q": 0, "_blocked_jnp": 0}, calls
+
+    zj, gj = jax.value_and_grad(loss("jnp"), argnums=(0, 1, 2))(q, k, v)
+    assert calls["_level_fine_q"] > 0      # the oracle stayed on jnp
+    np.testing.assert_allclose(zk, zj, atol=1e-4, rtol=1e-4)
+    for name, a, b in zip("qkv", gk, gj):
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-3,
+                                   err_msg=f"d{name} mismatch")
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("causal,cmode", [(False, "coarse-q"),
                                           (True, "coarse-q"),
                                           (True, "fine-q")])
 def test_h1d_attention_grad_kernel_vs_jnp(causal, cmode):
-    """Full-operator gradient through _combine_levels: the kernel path
-    (level-0 + coarse levels on the custom VJP) against the blocked-jnp
-    path (plain XLA autodiff)."""
+    """Full-operator gradient through the streaming cross-level combine:
+    the kernel path (level-0 + coarse levels on the custom VJP) against
+    the blocked-jnp path (plain XLA autodiff).  Slow sweep: the default
+    run covers the same path via test_h1d_fine_q_kernel_complete_L1024
+    and the per-mode band parity tests."""
     B, G, L, D, nr = 1, 2, 256, 32, 16
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(17), 3)
     q = jax.random.normal(k1, (B, G, L, D), jnp.float32)
@@ -122,9 +226,10 @@ def test_local_attention_kernel_path_padding(L):
     np.testing.assert_allclose(zi, zj, atol=2e-5, rtol=1e-4)
 
 
-def test_train_step_runs_on_kernel_path():
-    """A full training step (loss + grads + optimizer) on the Pallas
-    custom-VJP path, via the TrainConfig attention override."""
+def test_train_step_runs_on_kernel_path(monkeypatch):
+    """A full fine-q causal training step (loss + grads + optimizer) on
+    the Pallas custom-VJP path, via the TrainConfig attention overrides.
+    Every hierarchy level must stay fused: zero pure-jnp level calls."""
     from repro.data import ZipfLM
     from repro.models.common import ModelConfig
     from repro.train import TrainConfig, init_state, make_train_step
@@ -134,10 +239,13 @@ def test_train_step_runs_on_kernel_path():
                       vocab_size=64, attention="h1d", nr=16,
                       tie_embeddings=True)
     tc = TrainConfig(peak_lr=1e-3, warmup=2, total_steps=4,
-                     attn_impl="pallas_interpret", attn_tq=128)
+                     attn_impl="pallas_interpret", attn_tq=128,
+                     attn_causal_mode="fine-q")
+    calls = _count_jnp_level_calls(monkeypatch)
     state, _ = init_state(jax.random.PRNGKey(0), cfg, tc)
     step = jax.jit(make_train_step(cfg, tc))
     data = ZipfLM(vocab_size=64, seq_len=128, batch_per_host=2, seed=0)
     state, m = step(state, jax.tree.map(jnp.asarray, data.batch(0)))
     assert np.isfinite(float(m["loss"]))
     assert int(state.step) == 1
+    assert calls == {"_level_fine_q": 0, "_blocked_jnp": 0}, calls

@@ -8,6 +8,16 @@ import pytest
 from repro.configs import ARCH_IDS, PAPER_IDS, get_smoke_config, get_config
 from repro.models import get_model
 
+# default run keeps one representative per heavyweight family axis
+# (dense+h1d, MoE, SSM); the remaining architecture smokes are compile
+# heavy (~10-30 s each) and run under ``pytest -m slow``
+_DEFAULT_ARCHS = {"llama3.2-1b", "qwen2-moe-a2.7b", "mamba2-1.3b"}
+ARCH_PARAMS = [
+    name if name in _DEFAULT_ARCHS
+    else pytest.param(name, marks=pytest.mark.slow)
+    for name in ARCH_IDS
+]
+
 
 def make_batch(cfg, key, B=2, S=64):
     tok = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
@@ -20,7 +30,7 @@ def make_batch(cfg, key, B=2, S=64):
     return batch
 
 
-@pytest.mark.parametrize("name", ARCH_IDS)
+@pytest.mark.parametrize("name", ARCH_PARAMS)
 def test_arch_smoke_train_step(name):
     cfg = get_smoke_config(name)
     fns = get_model(cfg)
@@ -41,7 +51,7 @@ def test_arch_smoke_train_step(name):
     assert sum(float(jnp.sum(jnp.abs(g))) for g in leaves) > 0
 
 
-@pytest.mark.parametrize("name", ARCH_IDS)
+@pytest.mark.parametrize("name", ARCH_PARAMS)
 def test_arch_smoke_prefill_decode(name):
     cfg = get_smoke_config(name)
     fns = get_model(cfg)

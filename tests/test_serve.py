@@ -60,3 +60,58 @@ def test_engine_slot_reuse_more_requests_than_slots():
         assert len(r.out_tokens) == 4
         want = manual_greedy(cfg, params, r.prompt, 4)
         assert r.out_tokens == want
+
+
+def test_prompt_length_bucketing_compile_count_and_parity():
+    """Distinct prompt lengths within one power-of-two bucket must share
+    a single _prefill1 compilation (regression: per-length jit retraces
+    made admission O(#distinct lengths) compiles), and the bucketed
+    prefill must still generate exactly what the unpadded path does."""
+    cfg = get_smoke_config("llama3.2-1b")
+    fns = get_model(cfg)
+    params, _ = fns.init(jax.random.PRNGKey(2), cfg)
+    eng = ServeEngine(cfg, params, slots=4, max_len=64)
+    lengths = [5, 6, 7, 8]           # one bucket: all pad to 8
+    reqs = [Request(uid=i,
+                    prompt=((np.arange(n) + 3 * i) % cfg.vocab_size)
+                    .astype(np.int32),
+                    max_new_tokens=3) for i, n in enumerate(lengths)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    cache_size = getattr(eng._prefill1, "_cache_size", lambda: None)()
+    if cache_size is not None:
+        assert cache_size == 1, (lengths, cache_size)
+    for r in reqs:
+        want = manual_greedy(cfg, params, r.prompt, 3, max_len=64)
+        assert r.out_tokens == want, (r.uid, r.out_tokens, want)
+
+
+def test_engine_host_pos_mirror_tracks_device():
+    cfg = get_smoke_config("llama3.2-1b")
+    fns = get_model(cfg)
+    params, _ = fns.init(jax.random.PRNGKey(3), cfg)
+    eng = ServeEngine(cfg, params, slots=2, max_len=64)
+    eng.submit(Request(uid=0, prompt=(np.arange(9) % cfg.vocab_size)
+                       .astype(np.int32), max_new_tokens=4))
+    while eng.step():
+        np.testing.assert_array_equal(eng.pos_host, np.asarray(eng.pos))
+
+
+def test_bucketing_gated_off_for_rolling_and_recurrent_caches():
+    """Padding must not reach prefills whose caches are not position
+    masked: SSM state scans over pads, and the rolling local cache keeps
+    only the last 2*window rows (pads would evict real in-window keys)."""
+    import dataclasses
+    cfg = get_smoke_config("llama3.2-1b")
+    fns = get_model(cfg)
+    params, _ = fns.init(jax.random.PRNGKey(4), cfg)
+    assert ServeEngine(cfg, params, slots=1, max_len=64)._bucket
+    local = dataclasses.replace(cfg, sliding_window=16)
+    assert not ServeEngine(local, params, slots=1, max_len=64)._bucket
+    # coarse-q leaks pad embeddings into coarse QUERY means (DESIGN 1.2)
+    coarse = dataclasses.replace(cfg, causal_mode="coarse-q")
+    assert not ServeEngine(coarse, params, slots=1, max_len=64)._bucket
+    ssm = get_smoke_config("mamba2-1.3b")
+    sparams, _ = get_model(ssm).init(jax.random.PRNGKey(5), ssm)
+    assert not ServeEngine(ssm, sparams, slots=1, max_len=64)._bucket
