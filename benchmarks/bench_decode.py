@@ -1,0 +1,107 @@
+"""Decode-path microbenchmarks: one serving tick (hierarchical-KV
+ancestor update + O(nr log L) attend) per backend, reported as tokens/s
+per slot count.
+
+``impl='jnp'`` is the oracle path (one-hot block reads: every band
+streams the whole cache level, ~2(M+1) einsum launches per tick);
+``impl='pallas'`` (TPU backends only) runs the two fused single-launch
+kernels from ``kernels/h1d_decode_kernel`` -- one nr-row HBM read per
+needed block (EXPERIMENTS.md P25).  Interpret-mode allclose checks
+verify the kernel semantics at bench shapes on any backend.
+
+``--json out.json`` (default name BENCH_decode.json via ``--json``
+alone) writes every row as machine-readable JSON so the decode perf
+trajectory across PRs can be diffed by tooling.
+"""
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import h1d_decode as hd
+
+from .common import time_fn, emit
+
+NR, D, G, HKV = 16, 64, 4, 2
+
+
+def _tick(impl):
+    """One decode tick: append the token's K/V (+ ancestors), attend."""
+    def f(cache, q, kn, vn, t):
+        cache = hd.update_cache(cache, kn, vn, t, impl=impl)
+        z = hd.decode_attend(cache, q, t, nr=NR, impl=impl)
+        return z, cache
+    return f
+
+
+def _inputs(Lmax, slots, seed=0):
+    R = slots * HKV
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    cache = hd.prefill_cache(jax.random.normal(ks[0], (R, Lmax, D)),
+                             jax.random.normal(ks[1], (R, Lmax, D)),
+                             Lmax, NR)
+    q = jax.random.normal(ks[2], (R, G, D))
+    kn = jax.random.normal(ks[3], (R, D))
+    vn = jax.random.normal(ks[4], (R, D))
+    t = jnp.asarray(np.random.default_rng(seed).integers(
+        NR, Lmax, size=R).astype(np.int32))
+    return cache, q, kn, vn, t
+
+
+def run(json_path=None):
+    impls = ["jnp"]
+    if jax.default_backend() == "tpu":
+        impls.append("pallas")
+
+    rows = []
+
+    def record(name, us, derived):
+        emit(name, us, derived)
+        rows.append({"name": name, "us_per_call": round(us, 1),
+                     "derived": derived})
+
+    for Lmax in (256, 1024):
+        for slots in (1, 8, 32):
+            args = _inputs(Lmax, slots)
+            for impl in impls:
+                step = jax.jit(_tick(impl))
+                us = time_fn(step, *args, iters=5, warmup=2)
+                tok_s = slots * 1e6 / us
+                record(f"decode_L{Lmax}_s{slots}_{impl}", us,
+                       f"tok_s={tok_s:.0f}")
+
+    # interpret-mode correctness at a reduced shape: the exact kernel
+    # programs vs the jnp oracle (attend allclose, update bit-exact).
+    cache, q, kn, vn, t = _inputs(256, 2, seed=1)
+    z_ref, c_ref = _tick("jnp")(cache, q, kn, vn, t)
+    z_ker, c_ker = _tick("pallas_interpret")(cache, q, kn, vn, t)
+    err_a = float(jnp.abs(z_ker - z_ref).max())
+    err_u = max(float(jnp.abs(a - b).max()) for a, b in
+                zip(jax.tree.leaves(c_ref), jax.tree.leaves(c_ker)))
+    record("decode_pallas_interpret_attend_allclose", 0.0,
+           f"max_err={err_a:.2e}")
+    record("decode_pallas_interpret_update_allclose", 0.0,
+           f"max_err={err_u:.2e}")
+    assert err_a < 1e-5 and err_u == 0.0
+
+    if json_path:
+        payload = {"bench": "decode",
+                   "shape": {"nr": NR, "d": D, "G": G, "Hkv": HKV},
+                   "backend": jax.default_backend(),
+                   "rows": rows}
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {json_path} ({len(rows)} rows)")
+    return {"err_attend": err_a, "err_update": err_u}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", nargs="?", const="BENCH_decode.json",
+                    default=None, metavar="PATH",
+                    help="also write rows as JSON (default name "
+                         "BENCH_decode.json)")
+    args = ap.parse_args()
+    run(json_path=args.json)

@@ -7,6 +7,7 @@ roofline reports.  Prints ``name,us_per_call,derived`` CSV rows.
   table2   -- LM test perplexity at matched params (H1D N_r=16 vs dense)
   scaling  -- run-time vs L: the O(L) vs O(L^2) claim (section 7)
   kernels  -- banded block-attention kernel microbench + allclose
+  decode   -- serving tick (hierarchical-KV update + attend) tokens/s
   roofline -- summary of artifacts/roofline (if the dry-run ran)
 """
 import argparse
@@ -50,7 +51,8 @@ def bench_roofline():
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: table1,table2,scaling,kernels,roofline")
+                    help="comma list: table1,table2,scaling,kernels,"
+                         "decode,roofline")
     args, _ = ap.parse_known_args()
     want = set(args.only.split(",")) if args.only else None
 
@@ -63,6 +65,9 @@ def main() -> None:
     if on("kernels"):
         from benchmarks.bench_kernels import run as r
         jobs.append(("kernels", r))
+    if on("decode"):
+        from benchmarks.bench_decode import run as r
+        jobs.append(("decode", r))
     if on("scaling"):
         from benchmarks.bench_scaling import run as r
         jobs.append(("scaling", r))

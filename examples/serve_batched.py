@@ -22,12 +22,17 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--decode-impl", default=None,
+                    choices=["jnp", "pallas", "pallas_interpret"],
+                    help="h1d decode tick backend (pallas = fused "
+                         "single-launch kernels)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
     fns = get_model(cfg)
     params, _ = fns.init(jax.random.PRNGKey(0), cfg)
-    eng = ServeEngine(cfg, params, slots=args.slots, max_len=128)
+    eng = ServeEngine(cfg, params, slots=args.slots, max_len=128,
+                      decode_impl=args.decode_impl)
 
     rng = np.random.default_rng(0)
     reqs = []

@@ -8,6 +8,8 @@ from .h1d_decode import (
     prefill_cache,
     update_cache,
     decode_attend,
+    update_cache_uniform,
+    decode_attend_uniform,
 )
 from . import hierarchy
 
@@ -23,5 +25,7 @@ __all__ = [
     "prefill_cache",
     "update_cache",
     "decode_attend",
+    "update_cache_uniform",
+    "decode_attend_uniform",
     "hierarchy",
 ]

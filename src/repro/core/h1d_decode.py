@@ -17,6 +17,16 @@ Shapes: the caller folds batch*kv_heads into ``B``; ``G`` is the GQA group.
 Cache arrays: fine (B, Lmax, D); level-l coarse (B, Lmax >> l, D).
 Positions ``t``: (B,) int32 -- the index of the *current* token (0-based),
 whose K/V must already be written by ``update_cache``.
+
+Backends (``impl``, threaded from ``ModelConfig.decode_impl``):
+``'jnp'`` is the pure-XLA oracle below; ``'pallas'`` routes
+``update_cache`` / ``decode_attend`` (and the uniform-position variants)
+through the fused single-launch kernels in
+``repro.kernels.h1d_decode_kernel`` -- one HBM read per needed block and
+one output write per decode tick, instead of ~2(M+1) one-hot einsums
+that stream the whole cache (EXPERIMENTS.md P25);
+``'pallas_interpret'`` runs the same kernel bodies interpreted on CPU
+(the CI parity path).
 """
 from __future__ import annotations
 
@@ -89,8 +99,20 @@ def _update_one(cache: H1DCache, k_new, v_new, t):
     return H1DCache(k=k, v=v, ck=tuple(ck), cv=tuple(cv))
 
 
-def update_cache(cache: H1DCache, k_new, v_new, t) -> H1DCache:
+def _decode_kernels(impl: str):
+    """Lazy import (kernels -> core would otherwise cycle) + interpret
+    flag resolution for ``impl in ('pallas', 'pallas_interpret')``."""
+    from repro.kernels import h1d_decode_kernel as dk
+    return dk, impl == "pallas_interpret"
+
+
+def update_cache(cache: H1DCache, k_new, v_new, t, *,
+                 impl: str = "jnp") -> H1DCache:
     """Batched cache update.  k_new: (B, D), v_new: (B, Dv), t: (B,)."""
+    if impl != "jnp":
+        dk, interpret = _decode_kernels(impl)
+        return dk.update_cache_fused(cache, k_new, v_new, t,
+                                     interpret=interpret)
     return jax.vmap(_update_one)(cache, k_new, v_new, t)
 
 
@@ -166,9 +188,14 @@ def _block_read_rows(arr, blk, size):
 
 
 def decode_attend(cache: H1DCache, q, t, *, nr: int,
-                  softmax_scale=None) -> jnp.ndarray:
+                  softmax_scale=None, impl: str = "jnp") -> jnp.ndarray:
     """Batched single-token attention.  q: (B, G, D), t: (B,) per-row
     positions.  Returns (B, G, Dv) in q.dtype."""
+    if impl != "jnp":
+        dk, interpret = _decode_kernels(impl)
+        return dk.decode_attend_fused(cache, q, t, nr=nr,
+                                      softmax_scale=softmax_scale,
+                                      interpret=interpret)
     f32 = jnp.float32
     B, G, D = q.shape
     scale = softmax_scale if softmax_scale is not None else 1 / math.sqrt(D)
@@ -252,8 +279,22 @@ def _block_read(arr, blk, size):
     return out.reshape(B, size, D)
 
 
-def update_cache_uniform(cache: H1DCache, k_new, v_new, t) -> H1DCache:
-    """k_new: (B, D), v_new: (B, Dv), t: scalar int32 (same for all rows)."""
+def update_cache_uniform(cache: H1DCache, k_new, v_new, t, *,
+                         impl: str = "jnp") -> H1DCache:
+    """k_new: (B, D), v_new: (B, Dv), t: scalar int32 (same for all rows).
+
+    ``impl != 'jnp'`` routes through the SAME fused kernel as the batched
+    path with the scalar ``t`` broadcast per row: on a single chip the
+    long-context shape keeps one-read-per-block semantics.  A
+    SEQUENCE-SHARDED cache must stay on ``impl='jnp'``: only the
+    scalar-``t`` dynamic-slices partition under GSPMD (P21/P22); a
+    pallas_call operand would be gathered whole per tick.
+    """
+    if impl != "jnp":
+        dk, interpret = _decode_kernels(impl)
+        tt = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (cache.k.shape[0],))
+        return dk.update_cache_fused(cache, k_new, v_new, tt,
+                                     interpret=interpret)
     k = jax.lax.dynamic_update_slice(cache.k, k_new[:, None], (0, t, 0))
     v = jax.lax.dynamic_update_slice(cache.v, v_new[:, None], (0, t, 0))
     ck, cv = [], []
@@ -273,8 +314,19 @@ def update_cache_uniform(cache: H1DCache, k_new, v_new, t) -> H1DCache:
 
 
 def decode_attend_uniform(cache: H1DCache, q, t, *, nr: int,
-                          softmax_scale=None) -> jnp.ndarray:
-    """q: (B, G, D); t: scalar int32.  Returns (B, G, Dv)."""
+                          softmax_scale=None,
+                          impl: str = "jnp") -> jnp.ndarray:
+    """q: (B, G, D); t: scalar int32.  Returns (B, G, Dv).
+
+    ``impl != 'jnp'``: scalar-``t`` specialization of the fused decode
+    kernel (broadcast per row) -- single-chip only; sequence-sharded
+    caches must keep ``impl='jnp'`` (see ``update_cache_uniform``)."""
+    if impl != "jnp":
+        dk, interpret = _decode_kernels(impl)
+        tt = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (cache.k.shape[0],))
+        return dk.decode_attend_fused(cache, q, tt, nr=nr,
+                                      softmax_scale=softmax_scale,
+                                      interpret=interpret)
     f32 = jnp.float32
     B, G, D = q.shape
     scale = softmax_scale if softmax_scale is not None else 1 / math.sqrt(D)

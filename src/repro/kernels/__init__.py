@@ -3,9 +3,11 @@ from .ops import band_attention, resolve_tq
 from .h1d_block import (band_attention_fwd, band_attention_sub_fwd,
                         band_mask, MODES, SUB_MODE)
 from .h1d_block_bwd import band_attention_bwd, band_attention_sub_bwd
+from .h1d_decode_kernel import decode_attend_fused, update_cache_fused
 from .ref import band_attention_ref
 
 __all__ = ["band_attention", "band_attention_fwd", "band_attention_bwd",
            "band_attention_sub_fwd", "band_attention_sub_bwd",
            "band_mask", "band_attention_ref", "resolve_tq",
+           "decode_attend_fused", "update_cache_fused",
            "MODES", "SUB_MODE"]

@@ -1,0 +1,232 @@
+"""Pallas TPU kernels for the serving hot path: fused single-token
+hierarchical-KV decode (DESIGN.md section 4).
+
+Two kernels, both on a ``(R,)`` grid where ``R = slots * Hkv`` (batch
+rows with kv-heads folded in, the ``core.h1d_decode`` cache layout):
+
+* :func:`decode_attend_fused` -- ONE launch computes the whole
+  O(nr log L) decode attention for every row: the per-row position ``t``
+  is scalar-prefetched, so the BlockSpec index maps gather exactly the
+  own/prev level-0 blocks plus the single ``(I_l - 1)`` coarse block per
+  level straight from HBM (one ``nr``-row read per needed block), and
+  the span/quadrant masks, per-level weights ``2^l`` and the weighted
+  LSE combine all happen in VMEM.  The jnp path this replaces launches
+  ~``2 (M+1)`` one-hot einsums that each stream the ENTIRE cache level
+  through the MXU plus a concat/softmax epilogue (EXPERIMENTS.md P25).
+
+* :func:`update_cache_fused` -- ONE launch appends a token: for each
+  level ``l`` it reads the 2-row sibling pair containing the token's
+  ancestor ``t >> l``, substitutes the freshly computed row (carried in
+  VMEM from level ``l-1``), and writes the pair back --
+  ``input_output_aliases`` makes it an in-place scatter, so the whole
+  O(log L) ancestor chain costs 2 rows read + 2 rows written per level
+  instead of M+1 vmap'd ``dynamic_update_slice`` launches.
+
+Both kernels are bit-faithful to the ``impl='jnp'`` oracle in
+``core.h1d_decode`` (same masks, same single-max softmax, same pairwise
+mean/sum order); ``tests/test_decode_kernel.py`` sweeps the parity.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_MIN_M = -1e30
+
+
+def _hc():
+    """Lazy ``core.hierarchy`` import (module-level would cycle through
+    core/__init__ -> h1d_attention -> kernels/__init__), keeping one
+    source of truth for num_levels / NEG_INF."""
+    from repro.core import hierarchy as hc
+    return hc
+
+
+# ---------------------------------------------------------------------------
+# fused decode attention
+# ---------------------------------------------------------------------------
+
+def _attend_kernel(t_ref, q_ref, *refs, nr: int, nbands: int, scale: float,
+                   neg_inf: float):
+    """One grid step = one cache row: q (1, G, D) against ``nbands``
+    nr-key bands (own, prev, coarse levels 1..M-1), weighted-LSE
+    combined entirely in VMEM."""
+    k_refs = refs[:nbands]
+    v_refs = refs[nbands:2 * nbands]
+    o_ref = refs[2 * nbands]
+    r = pl.program_id(0)
+    t = t_ref[r]
+    f32 = jnp.float32
+
+    q = q_ref[0].astype(f32) * scale                     # (G, D)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (1, nr), 1)  # key idx in band
+    b0 = t // nr
+
+    logits, values, weights = [], [], []
+    for band in range(nbands):
+        kb = k_refs[band][0].astype(f32)                 # (nr, D)
+        s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
+                                preferred_element_type=f32)   # (G, nr)
+        if band == 0:          # own level-0 block, causal within the block
+            pos = b0 * nr + ki
+            mask = pos <= t
+            wgt = jnp.full((1, nr), 1.0, f32)
+        elif band == 1:        # previous level-0 block
+            mask = jnp.broadcast_to(b0 >= 1, (1, nr))
+            wgt = jnp.full((1, nr), 1.0, f32)
+        else:                  # coarse level l: block I_l - 1, quadrant mask
+            l = band - 1
+            span = nr << l
+            Il = t // span
+            first_half_q = (t % span) < (span // 2)
+            key_last_half = ki >= (nr // 2)
+            mask = (Il >= 1) & ~(first_half_q & key_last_half)
+            wgt = jnp.full((1, nr), float(1 << l), f32)
+        logits.append(jnp.where(mask, s, neg_inf))
+        values.append(v_refs[band][0].astype(f32))       # (nr, Dv)
+        weights.append(jnp.where(mask, wgt, 0.0))
+
+    s_all = jnp.concatenate(logits, axis=-1)             # (G, K)
+    v_all = jnp.concatenate(values, axis=-2)             # (K, Dv)
+    w_all = jnp.concatenate(weights, axis=-1)            # (1, K)
+    m = jnp.maximum(s_all.max(axis=-1, keepdims=True), _MIN_M)
+    a = jnp.exp(s_all - m)
+    num = jax.lax.dot_general(a, v_all, (((1,), (0,)), ((), ())),
+                              preferred_element_type=f32)     # (G, Dv)
+    den = jnp.sum(a * w_all, axis=-1)                    # (G,)
+    o_ref[0] = num / jnp.maximum(den, 1e-9)[:, None]
+
+
+def decode_attend_fused(cache, q: jnp.ndarray, t: jnp.ndarray, *, nr: int,
+                        softmax_scale=None,
+                        interpret: bool = False) -> jnp.ndarray:
+    """Fused batched single-token attention.  ``cache`` is an
+    ``H1DCache``; ``q``: (R, G, D); ``t``: (R,) int32 per-row positions.
+    Returns (R, G, Dv) in ``q.dtype`` -- same contract and numerics as
+    ``core.h1d_decode.decode_attend(impl='jnp')``."""
+    hc = _hc()
+    R, G, D = q.shape
+    Lmax = cache.k.shape[-2]
+    Dv = cache.v.shape[-1]
+    M = hc.num_levels(Lmax, nr)
+    levels = len(cache.ck)
+    assert levels == max(M - 1, 0), (levels, M)
+    nbands = 2 + levels
+    scale = softmax_scale if softmax_scale is not None else 1 / math.sqrt(D)
+
+    nb0 = Lmax // nr
+    own_map = lambda r, tref: (r, jnp.minimum(tref[r] // nr, nb0 - 1), 0)
+    prev_map = lambda r, tref: (r, jnp.maximum(tref[r] // nr - 1, 0), 0)
+
+    def lvl_map(l):
+        nbl = (Lmax >> l) // nr
+        return lambda r, tref: (
+            r, jnp.clip(tref[r] // (nr << l) - 1, 0, nbl - 1), 0)
+
+    maps = [own_map, prev_map] + [lvl_map(l) for l in range(1, M)]
+    k_arrs = [cache.k, cache.k] + list(cache.ck)
+    v_arrs = [cache.v, cache.v] + list(cache.cv)
+
+    in_specs = [pl.BlockSpec((1, G, D), lambda r, tref: (r, 0, 0))]
+    in_specs += [pl.BlockSpec((1, nr, D), mp) for mp in maps]
+    in_specs += [pl.BlockSpec((1, nr, Dv), mp) for mp in maps]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(R,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, G, Dv), lambda r, tref: (r, 0, 0)),
+    )
+    kernel = functools.partial(_attend_kernel, nr=nr, nbands=nbands,
+                               scale=float(scale), neg_inf=hc.NEG_INF)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, G, Dv), jnp.float32),
+        interpret=interpret,
+    )(t.astype(jnp.int32), q, *k_arrs, *v_arrs)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused ancestor update
+# ---------------------------------------------------------------------------
+
+def _update_kernel(t_ref, knew_ref, vnew_ref, *refs, nlev: int):
+    """One grid step = one cache row: substitute the new fine row into
+    its level-0 sibling pair, then walk the ancestor chain upward -- the
+    level-l row is the pairwise mean/sum of the level-(l-1) pair, which
+    is already updated in VMEM."""
+    in_refs = refs[:2 * nlev]
+    out_refs = refs[2 * nlev:]
+    r = pl.program_id(0)
+    t = t_ref[r]
+    f32 = jnp.float32
+    sel_row = jax.lax.broadcasted_iota(jnp.int32, (2, 1), 0)
+
+    new_k = knew_ref[...].astype(f32)                    # (1, D)
+    new_v = vnew_ref[...].astype(f32)                    # (1, Dv)
+    for l in range(nlev):
+        sel = sel_row == ((t >> l) & 1)
+        pk = jnp.where(sel, new_k, in_refs[2 * l][0].astype(f32))
+        pv = jnp.where(sel, new_v, in_refs[2 * l + 1][0].astype(f32))
+        out_refs[2 * l][0] = pk.astype(out_refs[2 * l].dtype)
+        out_refs[2 * l + 1][0] = pv.astype(out_refs[2 * l + 1].dtype)
+        if l + 1 < nlev:
+            new_k = pk.mean(axis=0, keepdims=True)       # Eq. 25/26
+            new_v = pv.sum(axis=0, keepdims=True)        # Eq. 27
+
+
+def update_cache_fused(cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                       t: jnp.ndarray, *, interpret: bool = False):
+    """Fused batched cache append.  ``k_new``: (R, D), ``v_new``:
+    (R, Dv), ``t``: (R,).  Returns an updated ``H1DCache`` -- same
+    contract as ``core.h1d_decode.update_cache(impl='jnp')``.
+
+    Every level array is aliased input->output, so rows outside the
+    written sibling pairs are untouched in HBM (in-place scatter)."""
+    R, D = k_new.shape
+    Dv = v_new.shape[-1]
+    Lmax = cache.k.shape[-2]
+    nlev = 1 + len(cache.ck)        # fine + coarse levels
+
+    arrs, in_specs, out_specs, out_shape = [], [], [], []
+    lvls = [(cache.k, cache.v)] + list(zip(cache.ck, cache.cv))
+    for l, (ka, va) in enumerate(lvls):
+        npairs = ka.shape[-2] // 2
+
+        def pair_map(r, tref, l=l, npairs=npairs):
+            return (r, jnp.minimum(tref[r] >> (l + 1), npairs - 1), 0)
+
+        for a, d_ in ((ka, D), (va, Dv)):
+            arrs.append(a)
+            in_specs.append(pl.BlockSpec((1, 2, d_), pair_map))
+            out_specs.append(pl.BlockSpec((1, 2, d_), pair_map))
+            out_shape.append(jax.ShapeDtypeStruct(a.shape, a.dtype))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(R,),
+        in_specs=[pl.BlockSpec((1, D), lambda r, tref: (r, 0)),
+                  pl.BlockSpec((1, Dv), lambda r, tref: (r, 0))] + in_specs,
+        out_specs=tuple(out_specs),
+    )
+    # alias each cache operand to its output; call-arg indices include
+    # the scalar-prefetch arg and (k_new, v_new), hence the +3 offset.
+    aliases = {3 + i: i for i in range(2 * nlev)}
+    kernel = functools.partial(_update_kernel, nlev=nlev)
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=tuple(out_shape),
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(t.astype(jnp.int32), k_new, v_new, *arrs)
+    ck = tuple(outs[2 + 2 * i] for i in range(nlev - 1))
+    cv = tuple(outs[3 + 2 * i] for i in range(nlev - 1))
+    return type(cache)(k=outs[0], v=outs[1], ck=ck, cv=cv)

@@ -10,19 +10,18 @@ from __future__ import annotations
 
 import jax
 
+from repro.parallel.sharding import axis_type_kwargs
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **axis_type_kwargs(len(axes)))
 
 
 def make_mesh(shape, axes):
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         **axis_type_kwargs(len(axes)))
 
 
 # TPU v5e-ish hardware constants used by the roofline analysis

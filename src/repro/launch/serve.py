@@ -29,13 +29,17 @@ def main(argv=None):
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--sample", action="store_true")
+    ap.add_argument("--decode-impl", default=None,
+                    choices=["jnp", "pallas", "pallas_interpret"],
+                    help="h1d decode tick backend (pallas = fused "
+                         "single-launch kernels; default: cfg.decode_impl)")
     args = ap.parse_args(argv)
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     fns = get_model(cfg)
     params, _ = fns.init(jax.random.PRNGKey(0), cfg)
     eng = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
-                      greedy=not args.sample)
+                      greedy=not args.sample, decode_impl=args.decode_impl)
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):

@@ -234,15 +234,20 @@ def attn_decode(p, cfg: ModelConfig, x, t, cache, *, layer_global=True):
     local = cfg.sliding_window > 0 and not layer_global
 
     if cfg.attention == "h1d" and not local:
+        impl = cfg.decode_impl
         if B == 1:
             # uniform-position fast path: scalar t keeps cache reads as
-            # dynamic-slices on the sharded sequence dim (P21)
-            cache = h1d_decode.update_cache_uniform(cache, k1, v1, t[0])
-            z = h1d_decode.decode_attend_uniform(cache, q1, t[0], nr=cfg.nr)
+            # dynamic-slices on the sharded sequence dim (P21); on the
+            # kernel path it specializes the same fused kernel to a
+            # broadcast scalar t.
+            cache = h1d_decode.update_cache_uniform(cache, k1, v1, t[0],
+                                                    impl=impl)
+            z = h1d_decode.decode_attend_uniform(cache, q1, t[0], nr=cfg.nr,
+                                                 impl=impl)
         else:
             tt = jnp.repeat(t, hkv, axis=0)
-            cache = h1d_decode.update_cache(cache, k1, v1, tt)
-            z = h1d_decode.decode_attend(cache, q1, tt, nr=cfg.nr)
+            cache = h1d_decode.update_cache(cache, k1, v1, tt, impl=impl)
+            z = h1d_decode.decode_attend(cache, q1, tt, nr=cfg.nr, impl=impl)
         z = z.reshape(B, hkv, G, hd).reshape(B, 1, hq * hd)
     else:
         Lc = cache["k"].shape[1]

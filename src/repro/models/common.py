@@ -41,6 +41,9 @@ class ModelConfig:
     causal_mode: str = "fine-q"  # fine-q (leak-free) | coarse-q (paper-faithful)
     attn_impl: str = "jnp"       # jnp | pallas | pallas_interpret
     attn_tq: int = 128           # Pallas query-tile rows (multiple of nr)
+    decode_impl: str = "jnp"     # serving decode tick: jnp | pallas |
+                                 # pallas_interpret (fused single-launch
+                                 # hierarchical-KV attend + ancestor update)
     qkv_bias: bool = False       # qwen2.x
     qk_norm: bool = False        # gemma3
     sliding_window: int = 0      # >0: local layers use block-local attention

@@ -20,8 +20,10 @@ class ModelFns(NamedTuple):
     loss: Callable          # (params, cfg, batch) -> (loss, metrics)
     prefill: Callable       # (params, cfg, batch, Lmax, *, true_len=None)
                             #   -> (logits, caches, pos); true_len is the
-                            #   logical prompt length when tokens are
-                            #   right-padded to a length bucket
+                            #   logical prompt length (scalar, or per-row
+                            #   (B,) vector for batched in-bucket
+                            #   admission) when tokens are right-padded
+                            #   to a length bucket
     decode_step: Callable   # (params, cfg, caches, token, t) -> (logits, caches)
     init_caches: Callable   # (params, cfg, B, Lmax) -> caches
 

@@ -339,13 +339,16 @@ def lm_prefill(params, cfg: ModelConfig, tokens, Lmax: int, *,
     """Teacher-forced pass over the prompt building decode caches.
     Returns (last_logits (B, V), caches, next_pos (B,)).
 
-    ``true_len`` (scalar, may be traced): logical prompt length when
-    ``tokens`` is right-padded to a length bucket (ServeEngine pads to
-    powers of two so jit compiles O(log Lmax) prefill shapes instead of
-    one per distinct prompt length).  The returned logits/next_pos then
-    refer to position ``true_len - 1``; the padded tail positions are
-    never attended by decode (causal attention + position-gated caches),
-    and each is overwritten by ``decode_step`` before its turn comes up.
+    ``true_len`` (scalar or per-row (B,) vector, may be traced): logical
+    prompt length(s) when ``tokens`` is right-padded to a length bucket
+    (ServeEngine pads to powers of two so jit compiles O(log Lmax)
+    prefill shapes instead of one per distinct prompt length; batched
+    in-bucket admission prefills several requests of DIFFERENT true
+    lengths in one call, hence the vector form).  The returned
+    logits/next_pos then refer to position ``true_len - 1`` per row; the
+    padded tail positions are never attended by decode (causal attention
+    + position-gated caches), and each is overwritten by ``decode_step``
+    before its turn comes up.
     """
     B, S = tokens.shape
     h = _embed_tokens(params, cfg, tokens)
@@ -389,8 +392,15 @@ def lm_prefill(params, cfg: ModelConfig, tokens, Lmax: int, *,
     else:
         if prefix_embeds is not None:
             true_len = true_len + prefix_embeds.shape[1]
-        last = jax.lax.dynamic_slice_in_dim(h, true_len - 1, 1, axis=1)
-        next_pos = jnp.full((B,), true_len, jnp.int32)
+        tl = jnp.asarray(true_len, jnp.int32)
+        if tl.ndim == 0:
+            last = jax.lax.dynamic_slice_in_dim(h, true_len - 1, 1, axis=1)
+            next_pos = jnp.full((B,), true_len, jnp.int32)
+        else:
+            # per-row logical lengths (batched in-bucket admission):
+            # gather each row's last true token
+            last = jnp.take_along_axis(h, (tl - 1)[:, None, None], axis=1)
+            next_pos = tl
     logits = _logits(params, cfg, last)[:, 0]
     return logits, caches, next_pos
 

@@ -1,4 +1,5 @@
 """Distribution: sharding rules, pipeline parallelism."""
 from .sharding import (param_shardings, batch_shardings, cache_shardings,
-                       replicated, dp_axes, dp_size, tp_axis, tp_size)
+                       replicated, dp_axes, dp_size, tp_axis, tp_size,
+                       abstract_mesh, axis_type_kwargs)
 from .pipeline import pipeline_apply

@@ -6,11 +6,21 @@ Design points for scale (DESIGN.md):
 * decode state is a pure pytree -- slots join/leave by writing rows, the
   jit'd step never retraces;
 * admission pads prompts to power-of-two length buckets, so prefill
-  compiles O(log max_len) shapes, not one per distinct prompt length;
+  compiles O(log max_len) shapes, not one per distinct prompt length,
+  and admits ALL queued requests sharing a bucket in one batched
+  prefill call (per-row ``true_len``, row count padded to a power of
+  two) so admission cost amortizes under load while the prefill jit
+  cache stays O(log slots * log max_len);
+* prompts longer than ``max_len - 1`` are rejected (or tail-truncated)
+  at ``submit`` -- see ``ServeEngine.overflow``;
+* finished slots are frozen (their ``pos`` stops advancing) so the
+  clamped cache writes of an idle slot never walk out of range;
 * per-tick bookkeeping reads a host-side numpy mirror of the slot
   positions -- one device sync per step (the sampled tokens), not one
   per active slot;
-* the hierarchical H1D cache gives O(nr log L) attention per token, so
+* the hierarchical H1D cache gives O(nr log L) attention per token --
+  with ``decode_impl='pallas'`` the whole tick's attend runs as ONE
+  fused kernel launch (and the ancestor update as one more), so
   long-context decode cost is flat in practice;
 * the engine is deployment-shaped (request queue, slot map, step loop)
   while staying single-host here; the multi-pod serve driver shards the
@@ -19,7 +29,7 @@ Design points for scale (DESIGN.md):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,14 +47,32 @@ class Request:
 
 
 class ServeEngine:
+    """``overflow`` policy for prompts longer than ``max_len - 1`` (the
+    cache needs >= 1 free position to generate anything): ``'error'``
+    rejects at ``submit()``; ``'truncate'`` keeps the LAST
+    ``max_len - 1`` prompt tokens (most recent context) and serves the
+    rest of the request normally.  Silent admission used to prefill a
+    cache longer than the slot rows, corrupting neighbouring slots.
+
+    ``decode_impl`` overrides ``cfg.decode_impl`` (``'jnp'`` |
+    ``'pallas'`` | ``'pallas_interpret'``): ``'pallas'`` runs each
+    decode tick through the fused single-launch hierarchical-KV kernels
+    (``kernels/h1d_decode_kernel``)."""
+
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 8,
-                 max_len: int = 512, greedy: bool = True, seed: int = 0):
+                 max_len: int = 512, greedy: bool = True, seed: int = 0,
+                 overflow: str = "error", decode_impl: Optional[str] = None):
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "ServeEngine targets decoder-only families; enc-dec serving "
                 "goes through launch/serve.py with per-request encoder runs")
+        if overflow not in ("error", "truncate"):
+            raise ValueError(f"unknown overflow policy {overflow!r}")
+        if decode_impl is not None and decode_impl != cfg.decode_impl:
+            cfg = dataclasses.replace(cfg, decode_impl=decode_impl)
         from repro.models.transformer import _stacked_caches
         self.cfg = cfg
+        self.overflow = overflow
         self.params = params
         self.fns = get_model(cfg)
         self.slots = slots
@@ -62,7 +90,9 @@ class ServeEngine:
         self.pos_host = np.zeros((slots,), np.int64)
         self.active = np.zeros((slots,), bool)
         self.req: List[Optional[Request]] = [None] * slots
-        self.queue: List[Request] = []
+        # queued (request, admitted-prompt) pairs: the prompt copy may be
+        # tail-truncated (overflow='truncate') without touching req.prompt
+        self.queue: List[Tuple[Request, np.ndarray]] = []
 
         # Prompt length bucketing: right-pad prompts to the next power of
         # two (capped at max_len) so _prefill1 compiles O(log max_len)
@@ -89,49 +119,124 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
+        """Queue a request.  Prompts longer than ``max_len - 1`` (no
+        room left to generate) are rejected or tail-truncated per the
+        engine's ``overflow`` policy -- silently admitting them used to
+        prefill an over-long cache whose slot write sliced into
+        neighbouring slots' rows."""
+        prompt = np.asarray(req.prompt, np.int32)
+        S = int(prompt.shape[0])
+        limit = self.max_len - 1
+        if S > limit:
+            if self.overflow == "truncate":
+                # truncate a private copy -- the caller's Request object
+                # is left intact (it may be logged or re-submitted to an
+                # engine with a larger max_len)
+                prompt = prompt[-limit:]
+            else:
+                raise ValueError(
+                    f"prompt length {S} > max_len - 1 = {limit}; shorten "
+                    f"the prompt or construct the engine with "
+                    f"overflow='truncate'")
         req.out_tokens = []
-        self.queue.append(req)
+        self.queue.append((req, prompt))
+
+    def _bucket_len(self, S: int) -> int:
+        """Padded prompt length: next power of two capped at max_len
+        (identity when bucketing is gated off for this config)."""
+        if not self._bucket:
+            return S
+        return max(S, min(1 << max(S - 1, 0).bit_length(), self.max_len))
 
     def _admit(self):
-        """Prefill queued requests into free slots, one at a time, with
-        prompts right-padded to power-of-two length buckets -- the jit
-        cache holds O(log max_len) prefill shapes, not one per distinct
-        prompt length (batched prefill within a bucket is a trivial
-        extension from here)."""
-        for s in range(self.slots):
-            if self.active[s] or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            prompt = np.asarray(req.prompt)
-            S = int(prompt.shape[0])
-            if self._bucket:
-                # cap at max_len; an over-long prompt keeps its own
-                # length (admitted as before, done check ends it fast)
-                Lb = max(S, min(1 << max(S - 1, 0).bit_length(),
-                                self.max_len))
-                prompt = np.pad(prompt, (0, Lb - S))
-            batch = {"tokens": jnp.asarray(prompt)[None]}
-            logits, caches, pos = self._prefill1(self.params, batch, S)
-            nxt = int(jnp.argmax(logits[0]))
-            # Write slot s.  The slot dim (0, or 1 for scanned layer
-            # stacks) may fold kv-heads into the batch (h1d caches:
-            # B*Hkv rows), so slot s spans rows [s*r, (s+1)*r) with
-            # r = full_rows // slots == rows of the B=1 prefill cache.
+        """Prefill queued requests into free slots.  Requests are taken
+        in FIFO order and grouped by padded-length bucket: every queued
+        request sharing the head-of-queue's bucket (up to the number of
+        free slots) prefills in ONE batched ``_prefill1`` call with a
+        per-row ``true_len`` vector, so admission under load costs one
+        forward per bucket instead of one per request.  The row count is
+        padded to a power of two as well (dummy rows discarded), keeping
+        the prefill jit cache at O(log slots * log max_len) shapes."""
+        while self.queue:
+            free = [s for s in range(self.slots) if not self.active[s]]
+            if not free:
+                return
+            Lb = self._bucket_len(len(self.queue[0][1]))
+            group: List[Request] = []
+            plist: List[np.ndarray] = []
+            while (self.queue and len(group) < len(free)
+                   and self._bucket_len(len(self.queue[0][1])) == Lb):
+                r, p = self.queue.pop(0)
+                group.append(r)
+                plist.append(p)
+            g = len(group)
+            gp = 1 << (g - 1).bit_length()       # pow2 row count
+            prompts = np.zeros((gp, Lb), np.int32)
+            ns = np.ones((gp,), np.int32)        # dummy rows: true_len 1
+            for i, p in enumerate(plist):
+                prompts[i, :len(p)] = p
+                ns[i] = len(p)
+            batch = {"tokens": jnp.asarray(prompts)}
+            logits, caches, pos = self._prefill1(self.params, batch,
+                                                 jnp.asarray(ns))
+            if self.greedy:
+                nxt = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
+            else:
+                # sample the first generated token exactly like step():
+                # one key split per batched call, categorical over the
+                # per-row last-true-token logits
+                self.key, k = jax.random.split(self.key)
+                nxt = np.asarray(
+                    jax.random.categorical(k, logits)).astype(np.int32)
+            # Write the whole group into its slots with ONE tree.map
+            # pass (contiguous free slots collapse to a single slice
+            # write).  The slot dim (0, or 1 for scanned layer stacks)
+            # may fold kv-heads into the batch (h1d caches: B*Hkv
+            # rows), so slot s spans rows [s*r, (s+1)*r) with
+            # r = full_rows // slots == rows per request of the batched
+            # prefill cache.
             ax = self._slot_axis
+            dst = free[:g]
+            contig = dst == list(range(dst[0], dst[0] + g))
 
             def write(full, one):
                 r = full.shape[ax] // self.slots
+                src = [slice(None)] * one.ndim
+                src[ax] = slice(0, g * r)
                 idx = [slice(None)] * full.ndim
-                idx[ax] = slice(s * r, (s + 1) * r)
-                return full.at[tuple(idx)].set(one)
+                if contig:
+                    # slice write lowers to one dynamic_update_slice
+                    idx[ax] = slice(dst[0] * r, (dst[0] + g) * r)
+                else:
+                    # one row-index scatter -- NOT one full-cache copy
+                    # per destination slot
+                    rows = np.concatenate([np.arange(s * r, (s + 1) * r)
+                                           for s in dst])
+                    idx[ax] = jnp.asarray(rows)
+                return full.at[tuple(idx)].set(one[tuple(src)])
 
             self.caches = jax.tree.map(write, self.caches, caches)
-            self.tokens = self.tokens.at[s].set(nxt)
-            self.pos = self.pos.at[s].set(S)   # == pos[0], known on host
-            self.pos_host[s] = S
-            self.active[s] = True
-            self.req[s] = req
-            req.out_tokens.append(nxt)
+            # batched token/pos scatter: 2 dispatches per group, not 2g
+            idx = jnp.asarray(np.array(dst, np.int32))
+            self.tokens = self.tokens.at[idx].set(jnp.asarray(nxt[:g]))
+            self.pos = self.pos.at[idx].set(jnp.asarray(ns[:g]))
+            for i, req in enumerate(group):
+                s = dst[i]
+                self.pos_host[s] = int(ns[i])
+                self.req[s] = req
+                req.out_tokens.append(int(nxt[i]))
+                # done-check at admission: the first sampled token may
+                # already satisfy max_new_tokens (or the prompt already
+                # fills the cache) -- the slot then never activates, so
+                # no decode tick is wasted and max_new_tokens is a hard
+                # cap (regression: every request used to get >= 2
+                # tokens).
+                done = (len(req.out_tokens) >= req.max_new_tokens
+                        or int(ns[i]) >= self.max_len - 1)
+                if done:
+                    self.req[s] = None
+                else:
+                    self.active[s] = True
 
     def step(self) -> int:
         """One engine tick: admit + one decode step for all active slots.
@@ -147,8 +252,14 @@ class ServeEngine:
             self.key, k = jax.random.split(self.key)
             nxt = jax.random.categorical(k, logits).astype(jnp.int32)
         self.tokens = nxt
-        self.pos = self.pos + 1
-        self.pos_host += 1       # mirrors the device update exactly
+        # Freeze finished/inactive slots: only slots active for THIS
+        # decode advance.  A free-running pos eventually walks past the
+        # cache rows, where the clamped cache writes would grind on the
+        # last row every tick (and pos itself overflows); pinning t
+        # keeps every write in range until the slot is re-admitted.
+        act = self.active.astype(np.int32)
+        self.pos = self.pos + jnp.asarray(act)
+        self.pos_host += act     # mirrors the device update exactly
         nxt_host = np.asarray(nxt)
         for s in range(self.slots):
             if not self.active[s]:
