@@ -15,6 +15,7 @@ trajectory across PRs can be diffed by tooling.
 """
 import argparse
 import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -90,6 +91,7 @@ def run(json_path=None):
         payload = {"bench": "decode",
                    "shape": {"nr": NR, "d": D, "G": G, "Hkv": HKV},
                    "backend": jax.default_backend(),
+                   "xla_flags": os.environ.get("XLA_FLAGS", ""),
                    "rows": rows}
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=1)

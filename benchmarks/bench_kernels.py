@@ -15,6 +15,7 @@ perf trajectory across PRs can be diffed by tooling.
 """
 import argparse
 import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -115,6 +116,7 @@ def run(json_path=None):
         payload = {"bench": "kernels",
                    "shape": {"B": B, "G": G, "L": L, "d": d, "nr": nr},
                    "backend": jax.default_backend(),
+                   "xla_flags": os.environ.get("XLA_FLAGS", ""),
                    "rows": rows}
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=1)

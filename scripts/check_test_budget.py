@@ -1,0 +1,50 @@
+"""Fail if any test in a ``pytest --durations`` report exceeded the
+per-test wall-clock budget (default 60 s for the ``call`` phase).
+
+Usage::
+
+    pytest -q --durations=0 | tee out.txt
+    python scripts/check_test_budget.py out.txt [--budget 60]
+
+Run via ``scripts/ci.sh``.  The budget applies to the default
+(``-m 'not slow'``) selection: anything heavier belongs behind the
+``slow`` marker (see pyproject.toml).
+"""
+import argparse
+import re
+import sys
+
+# "   12.34s call     tests/test_foo.py::test_bar[param]"
+_DURATION = re.compile(r"^\s*(\d+(?:\.\d+)?)s\s+(call|setup|teardown)\s+(\S+)")
+
+
+def over_budget(lines, budget: float):
+    out = []
+    for line in lines:
+        m = _DURATION.match(line)
+        if m and m.group(2) == "call" and float(m.group(1)) > budget:
+            out.append((float(m.group(1)), m.group(3)))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("report", help="captured pytest output")
+    ap.add_argument("--budget", type=float, default=60.0,
+                    help="max seconds per test call phase")
+    args = ap.parse_args(argv)
+    with open(args.report, encoding="utf-8") as f:
+        offenders = over_budget(f, args.budget)
+    if offenders:
+        print(f"FAIL: {len(offenders)} test(s) over the "
+              f"{args.budget:.0f}s budget:")
+        for secs, test in sorted(offenders, reverse=True):
+            print(f"  {secs:8.2f}s  {test}")
+        print("Shrink the test or move it behind @pytest.mark.slow.")
+        return 1
+    print(f"test budget OK (no call over {args.budget:.0f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

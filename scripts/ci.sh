@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Single CI entry point:
+#   1. docs reference check (no dangling *.md citations in src/),
+#   2. tier-1 test suite (default selection: -m 'not slow'),
+#   3. per-test wall-clock budget: any non-slow test whose call phase
+#      exceeds 60 s fails the run (shrink it or mark it slow).
+#
+#   bash scripts/ci.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== docs reference check =="
+python scripts/check_docs.py
+
+echo "== tier-1 tests (durations-budgeted) =="
+report="$(mktemp)"
+trap 'rm -f "$report"' EXIT
+# --durations=0 reports every phase >= 5ms; the budget checker reads
+# the 'call' rows.  pipefail propagates a pytest failure through tee.
+python -m pytest -q --durations=0 "$@" | tee "$report"
+
+echo "== per-test budget =="
+python scripts/check_test_budget.py "$report" --budget 60

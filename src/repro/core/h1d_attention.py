@@ -157,6 +157,21 @@ def h1d_attention(
         assert impl == "jnp", "per-head KV layout is the XLA path"
     else:
         assert k.shape == (B, L, k.shape[-1]) and v.shape[:2] == (B, L)
+    if impl in ("pallas", "pallas_interpret"):
+        # sequence-parallel dispatch: inside an sp_scope(mesh) region,
+        # shard the WHOLE hierarchy over the data axis (local kernels +
+        # one packed halo ppermute per direction + a gathered tail for
+        # the deep levels).  Shapes whose local slab cannot hold an
+        # nr-row block stay on the single-launch kernel path.
+        from repro.parallel.sp_attention import sp_ctx, sp_h1d_attention
+        ctx = sp_ctx()
+        if ctx is not None:
+            d = dict(ctx[0].shape).get(ctx[1], 1)
+            if L % d == 0 and (L // d) % nr == 0 and L // d >= nr:
+                return sp_h1d_attention(
+                    q, k, v, mesh=ctx[0], axis=ctx[1], nr=nr, causal=causal,
+                    causal_mode=causal_mode, kv_weight=kv_weight,
+                    softmax_scale=softmax_scale, impl=impl, tq=tq)
     M = hc.num_levels(L, nr)
     scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
     f32 = jnp.float32

@@ -27,11 +27,21 @@ one output write per decode tick, instead of ~2(M+1) one-hot einsums
 that stream the whole cache (EXPERIMENTS.md P25);
 ``'pallas_interpret'`` runs the same kernel bodies interpreted on CPU
 (the CI parity path).
+
+Sequence-sharded caches are a kernel-path fast path too: inside an
+``sp_scope(mesh)`` region (``repro.parallel.sp_attention``) every entry
+point below routes through the shard_map'd fused kernels -- shard-local
+block indices and ownership bits are scalar-prefetched so each shard
+reads/updates only the blocks it owns, and the partial softmax triples
+merge with one pmax + psum.  The old restriction (fused kernels forced
+sequence-sharded caches back to ``impl='jnp'``, P21/P22) is gone; the
+jnp path remains the decode oracle and the GSPMD-partitionable
+fallback.
 """
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -106,10 +116,41 @@ def _decode_kernels(impl: str):
     return dk, impl == "pallas_interpret"
 
 
+def _sp_decode_ctx(cache: H1DCache, nr: Optional[int] = None):
+    """Active SP scope if the cache can shard its fine level (>= one
+    nr-row block per shard), else None.  When the caller has no ``nr``
+    (the update path) it is recovered from the cache's level count
+    (Lmax = nr << num_levels) -- unambiguous only with at least one
+    coarse level, so coarse-less caches stay on the single-launch
+    kernel."""
+    from repro.parallel.sp_attention import sp_ctx, sp_sharded_levels
+    ctx = sp_ctx()
+    if ctx is None:
+        return None
+    Lmax = cache.k.shape[-2]
+    if nr is None:
+        if not cache.ck:          # M in {0, 1}: shape alone can't tell
+            return None
+        nr = Lmax >> (len(cache.ck) + 1)
+    d = dict(ctx[0].shape).get(ctx[1], 1)
+    if sp_sharded_levels(Lmax, nr, d) < 1:
+        return None
+    return ctx
+
+
 def update_cache(cache: H1DCache, k_new, v_new, t, *,
                  impl: str = "jnp") -> H1DCache:
-    """Batched cache update.  k_new: (B, D), v_new: (B, Dv), t: (B,)."""
+    """Batched cache update.  k_new: (B, D), v_new: (B, Dv), t: (B,).
+
+    Kernel impls inside an ``sp_scope(mesh)`` run the shard_map'd fused
+    update: each token's ancestor pairs are rewritten on their owning
+    shard only (see ``parallel.sp_attention.sp_update_cache``)."""
     if impl != "jnp":
+        ctx = _sp_decode_ctx(cache)
+        if ctx is not None:
+            from repro.parallel.sp_attention import sp_update_cache
+            return sp_update_cache(cache, k_new, v_new, t, impl=impl,
+                                   mesh=ctx[0], axis=ctx[1])
         dk, interpret = _decode_kernels(impl)
         return dk.update_cache_fused(cache, k_new, v_new, t,
                                      interpret=interpret)
@@ -190,8 +231,18 @@ def _block_read_rows(arr, blk, size):
 def decode_attend(cache: H1DCache, q, t, *, nr: int,
                   softmax_scale=None, impl: str = "jnp") -> jnp.ndarray:
     """Batched single-token attention.  q: (B, G, D), t: (B,) per-row
-    positions.  Returns (B, G, Dv) in q.dtype."""
+    positions.  Returns (B, G, Dv) in q.dtype.
+
+    Kernel impls inside an ``sp_scope(mesh)`` run the shard_map'd fused
+    attend (per-shard partial kernels over owned blocks, one pmax+psum
+    merge -- ``parallel.sp_attention.sp_decode_attend``)."""
     if impl != "jnp":
+        ctx = _sp_decode_ctx(cache, nr)
+        if ctx is not None:
+            from repro.parallel.sp_attention import sp_decode_attend
+            return sp_decode_attend(cache, q, t, nr=nr,
+                                    softmax_scale=softmax_scale, impl=impl,
+                                    mesh=ctx[0], axis=ctx[1])
         dk, interpret = _decode_kernels(impl)
         return dk.decode_attend_fused(cache, q, t, nr=nr,
                                       softmax_scale=softmax_scale,
@@ -284,15 +335,22 @@ def update_cache_uniform(cache: H1DCache, k_new, v_new, t, *,
     """k_new: (B, D), v_new: (B, Dv), t: scalar int32 (same for all rows).
 
     ``impl != 'jnp'`` routes through the SAME fused kernel as the batched
-    path with the scalar ``t`` broadcast per row: on a single chip the
-    long-context shape keeps one-read-per-block semantics.  A
-    SEQUENCE-SHARDED cache must stay on ``impl='jnp'``: only the
-    scalar-``t`` dynamic-slices partition under GSPMD (P21/P22); a
-    pallas_call operand would be gathered whole per tick.
+    path with the scalar ``t`` broadcast per row.  A SEQUENCE-SHARDED
+    cache is a fast path too: inside ``sp_scope(mesh)`` the broadcast
+    goes through the shard_map'd kernel with shard-local index maps
+    (``parallel.sp_attention``), so the long-context serving shape no
+    longer downgrades to ``impl='jnp'`` (the old P21/P22 restriction);
+    outside an SP scope the jnp scalar-``t`` dynamic-slices remain the
+    GSPMD fallback.
     """
     if impl != "jnp":
-        dk, interpret = _decode_kernels(impl)
         tt = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (cache.k.shape[0],))
+        ctx = _sp_decode_ctx(cache)
+        if ctx is not None:
+            from repro.parallel.sp_attention import sp_update_cache
+            return sp_update_cache(cache, k_new, v_new, tt, impl=impl,
+                                   mesh=ctx[0], axis=ctx[1])
+        dk, interpret = _decode_kernels(impl)
         return dk.update_cache_fused(cache, k_new, v_new, tt,
                                      interpret=interpret)
     k = jax.lax.dynamic_update_slice(cache.k, k_new[:, None], (0, t, 0))
@@ -319,11 +377,18 @@ def decode_attend_uniform(cache: H1DCache, q, t, *, nr: int,
     """q: (B, G, D); t: scalar int32.  Returns (B, G, Dv).
 
     ``impl != 'jnp'``: scalar-``t`` specialization of the fused decode
-    kernel (broadcast per row) -- single-chip only; sequence-sharded
-    caches must keep ``impl='jnp'`` (see ``update_cache_uniform``)."""
+    kernel (broadcast per row); inside ``sp_scope(mesh)`` a
+    sequence-sharded cache stays on the kernel path via the shard_map'd
+    partial attend (see ``update_cache_uniform``)."""
     if impl != "jnp":
-        dk, interpret = _decode_kernels(impl)
         tt = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (cache.k.shape[0],))
+        ctx = _sp_decode_ctx(cache, nr)
+        if ctx is not None:
+            from repro.parallel.sp_attention import sp_decode_attend
+            return sp_decode_attend(cache, q, tt, nr=nr,
+                                    softmax_scale=softmax_scale, impl=impl,
+                                    mesh=ctx[0], axis=ctx[1])
+        dk, interpret = _decode_kernels(impl)
         return dk.decode_attend_fused(cache, q, tt, nr=nr,
                                       softmax_scale=softmax_scale,
                                       interpret=interpret)

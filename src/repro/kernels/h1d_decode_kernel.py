@@ -154,6 +154,120 @@ def decode_attend_fused(cache, q: jnp.ndarray, t: jnp.ndarray, *, nr: int,
 
 
 # ---------------------------------------------------------------------------
+# sequence-parallel partial attend (sharded index maps)
+# ---------------------------------------------------------------------------
+
+def _attend_partial_kernel(t_ref, bidx_ref, own_ref, q_ref, *refs, nr: int,
+                           nbands: int, scale: float, neg_inf: float):
+    """Per-shard variant of :func:`_attend_kernel` for the SP path: the
+    BlockSpec index maps read shard-LOCAL block indices from the
+    scalar-prefetched ``bidx`` array (``repro.parallel.sp_attention``
+    computes them from the global position and the shard index), each
+    band is additionally masked by its ownership bit, and the outputs
+    are the *partial* ``(num, den, m)`` triple instead of the
+    normalized result -- the cross-shard merge is one pmax + psum."""
+    k_refs = refs[:nbands]
+    v_refs = refs[nbands:2 * nbands]
+    num_ref, den_ref, m_ref = refs[2 * nbands:2 * nbands + 3]
+    r = pl.program_id(0)
+    t = t_ref[r]
+    f32 = jnp.float32
+
+    q = q_ref[0].astype(f32) * scale                     # (G, D)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (1, nr), 1)
+    b0 = t // nr
+
+    logits, values, weights = [], [], []
+    for band in range(nbands):
+        kb = k_refs[band][0].astype(f32)                 # (nr, D)
+        s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
+                                preferred_element_type=f32)   # (G, nr)
+        if band == 0:
+            pos = b0 * nr + ki
+            mask = pos <= t
+            wgt = jnp.full((1, nr), 1.0, f32)
+        elif band == 1:
+            mask = jnp.broadcast_to(b0 >= 1, (1, nr))
+            wgt = jnp.full((1, nr), 1.0, f32)
+        else:
+            l = band - 1
+            span = nr << l
+            Il = t // span
+            first_half_q = (t % span) < (span // 2)
+            key_last_half = ki >= (nr // 2)
+            mask = (Il >= 1) & ~(first_half_q & key_last_half)
+            wgt = jnp.full((1, nr), float(1 << l), f32)
+        mask = mask & (own_ref[r, band] > 0)
+        logits.append(jnp.where(mask, s, neg_inf))
+        values.append(v_refs[band][0].astype(f32))
+        weights.append(jnp.where(mask, wgt, 0.0))
+
+    s_all = jnp.concatenate(logits, axis=-1)             # (G, K)
+    v_all = jnp.concatenate(values, axis=-2)             # (K, Dv)
+    w_all = jnp.concatenate(weights, axis=-1)            # (1, K)
+    m = jnp.maximum(s_all.max(axis=-1), _MIN_M)          # (G,)
+    a = jnp.exp(s_all - m[:, None])
+    num_ref[0] = jax.lax.dot_general(a, v_all, (((1,), (0,)), ((), ())),
+                                     preferred_element_type=f32)
+    den_ref[0] = jnp.sum(a * w_all, axis=-1)
+    m_ref[0] = m
+
+
+def decode_attend_partial(cache, q: jnp.ndarray, t: jnp.ndarray,
+                          bidx: jnp.ndarray, owned: jnp.ndarray, *,
+                          nr: int, softmax_scale=None,
+                          interpret: bool = False):
+    """Partial fused decode attention on shard-LOCAL cache arrays.
+
+    ``bidx`` (R, nbands) int32 holds the local block index of each band
+    in this shard's cache slab (levels may have fewer local blocks than
+    the global cache); ``owned`` (R, nbands) gates bands this shard
+    does not own.  Returns float32 ``(num (R,G,Dv), den (R,G),
+    m (R,G))`` -- merge across shards with
+    ``num * exp(m - pmax(m))`` psums (``sp_attention.sp_decode_attend``).
+    """
+    hc = _hc()
+    R, G, D = q.shape
+    Dv = cache.v.shape[-1]
+    levels = len(cache.ck)
+    nbands = 2 + levels
+    scale = softmax_scale if softmax_scale is not None else 1 / math.sqrt(D)
+
+    def band_map(band):
+        return lambda r, tref, bref, oref: (r, bref[r, band], 0)
+
+    maps = [band_map(b) for b in range(nbands)]
+    k_arrs = [cache.k, cache.k] + list(cache.ck)
+    v_arrs = [cache.v, cache.v] + list(cache.cv)
+
+    in_specs = [pl.BlockSpec((1, G, D), lambda r, tref, bref, oref: (r, 0, 0))]
+    in_specs += [pl.BlockSpec((1, nr, D), mp) for mp in maps]
+    in_specs += [pl.BlockSpec((1, nr, Dv), mp) for mp in maps]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(R,),
+        in_specs=in_specs,
+        out_specs=(
+            pl.BlockSpec((1, G, Dv), lambda r, tref, bref, oref: (r, 0, 0)),
+            pl.BlockSpec((1, G), lambda r, tref, bref, oref: (r, 0)),
+            pl.BlockSpec((1, G), lambda r, tref, bref, oref: (r, 0)),
+        ))
+    kernel = functools.partial(_attend_partial_kernel, nr=nr, nbands=nbands,
+                               scale=float(scale), neg_inf=hc.NEG_INF)
+    f32 = jnp.float32
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((R, G, Dv), f32),
+                   jax.ShapeDtypeStruct((R, G), f32),
+                   jax.ShapeDtypeStruct((R, G), f32)),
+        interpret=interpret,
+    )(t.astype(jnp.int32), bidx.astype(jnp.int32), owned.astype(jnp.int32),
+      q, *k_arrs, *v_arrs)
+
+
+# ---------------------------------------------------------------------------
 # fused ancestor update
 # ---------------------------------------------------------------------------
 
@@ -230,3 +344,98 @@ def update_cache_fused(cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
     ck = tuple(outs[2 + 2 * i] for i in range(nlev - 1))
     cv = tuple(outs[3 + 2 * i] for i in range(nlev - 1))
     return type(cache)(k=outs[0], v=outs[1], ck=ck, cv=cv)
+
+
+# ---------------------------------------------------------------------------
+# sequence-parallel partial update (owned rows only + carried ancestor)
+# ---------------------------------------------------------------------------
+
+def _update_partial_kernel(t_ref, own_ref, knew_ref, vnew_ref, *refs,
+                           nlev: int):
+    """SP variant of :func:`_update_kernel`: ``t`` is shard-LOCAL, the
+    substitution is gated per row by the ownership bit (non-owners
+    write their clamped pair back unchanged -- a no-op scatter), and
+    the pair mean/sum carried past the LAST level is emitted so the
+    caller can broadcast it to the replicated deep levels."""
+    in_refs = refs[:2 * nlev]
+    out_refs = refs[2 * nlev:4 * nlev]
+    ck_ref, cv_ref = refs[4 * nlev:4 * nlev + 2]
+    r = pl.program_id(0)
+    t = t_ref[r]
+    owned = own_ref[r] > 0
+    f32 = jnp.float32
+    sel_row = jax.lax.broadcasted_iota(jnp.int32, (2, 1), 0)
+
+    new_k = knew_ref[...].astype(f32)                    # (1, D)
+    new_v = vnew_ref[...].astype(f32)                    # (1, Dv)
+    for l in range(nlev):
+        sel = (sel_row == ((t >> l) & 1)) & owned
+        pk = jnp.where(sel, new_k, in_refs[2 * l][0].astype(f32))
+        pv = jnp.where(sel, new_v, in_refs[2 * l + 1][0].astype(f32))
+        out_refs[2 * l][0] = pk.astype(out_refs[2 * l].dtype)
+        out_refs[2 * l + 1][0] = pv.astype(out_refs[2 * l + 1].dtype)
+        new_k = pk.mean(axis=0, keepdims=True)
+        new_v = pv.sum(axis=0, keepdims=True)
+    # carried row for the first level ABOVE this sharded chain; garbage
+    # on non-owner rows (the caller masks it with `owned` before psum)
+    ck_ref[...] = new_k.astype(ck_ref.dtype)
+    cv_ref[...] = new_v.astype(cv_ref.dtype)
+
+
+def update_cache_partial(cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                         t_loc: jnp.ndarray, owned: jnp.ndarray, *,
+                         interpret: bool = False):
+    """Fused ancestor update on shard-LOCAL cache arrays.
+
+    ``cache`` holds only the SHARDED levels of the hierarchy (this
+    shard's slab); ``t_loc`` (R,) is the shard-local position (clamped
+    for non-owners) and ``owned`` (R,) marks the rows whose token lives
+    on this shard.  Returns ``(updated_cache, carry_k (R, D),
+    carry_v (R, Dv))`` where the carry is the freshly computed row for
+    the first level above the sharded chain (valid on owner rows)."""
+    R, D = k_new.shape
+    Dv = v_new.shape[-1]
+    nlev = 1 + len(cache.ck)
+
+    arrs, in_specs, out_specs, out_shape = [], [], [], []
+    lvls = [(cache.k, cache.v)] + list(zip(cache.ck, cache.cv))
+    for l, (ka, va) in enumerate(lvls):
+        npairs = ka.shape[-2] // 2
+
+        def pair_map(r, tref, oref, l=l, npairs=npairs):
+            return (r, jnp.minimum(tref[r] >> (l + 1), npairs - 1), 0)
+
+        for a, d_ in ((ka, D), (va, Dv)):
+            arrs.append(a)
+            in_specs.append(pl.BlockSpec((1, 2, d_), pair_map))
+            out_specs.append(pl.BlockSpec((1, 2, d_), pair_map))
+            out_shape.append(jax.ShapeDtypeStruct(a.shape, a.dtype))
+
+    row_map = lambda r, tref, oref: (r, 0)
+    out_specs += [pl.BlockSpec((1, D), row_map),
+                  pl.BlockSpec((1, Dv), row_map)]
+    out_shape += [jax.ShapeDtypeStruct((R, D), cache.k.dtype),
+                  jax.ShapeDtypeStruct((R, Dv), cache.v.dtype)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(R,),
+        in_specs=[pl.BlockSpec((1, D), row_map),
+                  pl.BlockSpec((1, Dv), row_map)] + in_specs,
+        out_specs=tuple(out_specs),
+    )
+    # call args: (t_loc, owned, k_new, v_new, *arrs) -> cache operands
+    # start at index 4
+    aliases = {4 + i: i for i in range(2 * nlev)}
+    kernel = functools.partial(_update_partial_kernel, nlev=nlev)
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=tuple(out_shape),
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(t_loc.astype(jnp.int32), owned.astype(jnp.int32), k_new, v_new, *arrs)
+    ck = tuple(outs[2 + 2 * i] for i in range(nlev - 1))
+    cv = tuple(outs[3 + 2 * i] for i in range(nlev - 1))
+    upd = type(cache)(k=outs[0], v=outs[1], ck=ck, cv=cv)
+    return upd, outs[2 * nlev], outs[2 * nlev + 1]

@@ -27,6 +27,15 @@ shrinks it to the largest tile compatible with (L, nr, mode) instead of
 silently falling back to XLA -- kernel benchmarks and parity tests always
 measure what they claim to.  A truly incompatible shape (L not a
 multiple of nr) raises.
+
+Mesh-aware dispatch: inside an ``sp_scope(mesh)`` region
+(``repro.parallel.sp_attention``), kernel-path calls whose sequence
+length shards over the ``data`` axis route through
+``sp_band_attention`` -- each shard runs this module's unmodified
+kernels on its local rows and the boundary blocks arrive via one
+packed ``ppermute`` halo exchange per direction.  Shapes too short to
+keep an ``nr``-row block per shard stay on the single-launch kernel
+(still ``pallas``, never a silent ``jnp`` downgrade).
 """
 from __future__ import annotations
 
@@ -207,7 +216,32 @@ def band_attention(
             return _blocked_sub_jnp(q, k, v, w, nr=nr, ratio=ratio)
         return _blocked_jnp(q, k, v, w, nr=nr, mode=mode)
     if impl in ("pallas", "pallas_interpret"):
+        ctx = _sp_ctx()
+        if ctx is not None and _sp_shardable(L, ctx, nr, mode, ratio):
+            from repro.parallel.sp_attention import sp_band_attention
+            return sp_band_attention(q, k, v, w, nr=nr, mode=mode,
+                                     ratio=ratio, impl=impl, tq=tq,
+                                     mesh=ctx[0], axis=ctx[1])
         tq = resolve_tq(L, nr, tq, mode, ratio)
         return _band_attention_kernel(
             q, k, v, w, nr, mode, tq, ratio, impl == "pallas_interpret")
     raise ValueError(f"unknown impl {impl!r}")
+
+
+def _sp_ctx():
+    """Active sequence-parallel scope, or None (lazy import: parallel ->
+    kernels is the forward direction)."""
+    from repro.parallel.sp_attention import sp_ctx
+    return sp_ctx()
+
+
+def _sp_shardable(L, ctx, nr, mode, ratio) -> bool:
+    """True when (L, mode) keeps at least one whole query block per
+    shard -- the condition for the SP halo-exchange path.  Shorter
+    shapes stay on the single-launch kernel."""
+    d = dict(ctx[0].shape).get(ctx[1], 1)
+    if L % d:
+        return False
+    lloc = L // d
+    blk = nr * ratio if mode == h1d_block.SUB_MODE else nr
+    return lloc % blk == 0 and lloc >= blk

@@ -24,6 +24,14 @@ def make_mesh(shape, axes):
                          **axis_type_kwargs(len(axes)))
 
 
+def use_mesh(mesh):
+    """Version-compat mesh context: ``jax.set_mesh`` (jax >= 0.6) or the
+    ``Mesh`` object's own context manager (0.4.x)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 # TPU v5e-ish hardware constants used by the roofline analysis
 PEAK_FLOPS_BF16 = 197e12      # per chip
 HBM_BW = 819e9                # bytes/s per chip

@@ -33,13 +33,23 @@ def main(argv=None):
                     choices=["jnp", "pallas", "pallas_interpret"],
                     help="h1d decode tick backend (pallas = fused "
                          "single-launch kernels; default: cfg.decode_impl)")
+    ap.add_argument("--sp-data", type=int, default=1,
+                    help="sequence-parallel degree: shard the "
+                         "hierarchical KV cache over an N-way 'data' "
+                         "axis and run the fused decode kernels per "
+                         "shard (shard_map halo exchange)")
     args = ap.parse_args(argv)
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     fns = get_model(cfg)
     params, _ = fns.init(jax.random.PRNGKey(0), cfg)
+    mesh = None
+    if args.sp_data > 1:
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((args.sp_data,), ("data",))
     eng = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
-                      greedy=not args.sample, decode_impl=args.decode_impl)
+                      greedy=not args.sample, decode_impl=args.decode_impl,
+                      mesh=mesh)
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):

@@ -48,6 +48,11 @@ def main(argv=None):
                          "run on the fused kernels for 'pallas')")
     ap.add_argument("--attn-tq", type=int, default=None,
                     help="Pallas query-tile rows (multiple of nr)")
+    ap.add_argument("--sp", action="store_true",
+                    help="sequence-parallel attention: shard L over the "
+                         "'data' axis and run the fused band kernels per "
+                         "shard (shard_map halo exchange); pairs with "
+                         "--attn-impl pallas for long-sequence training")
     args = ap.parse_args(argv)
 
     dshape = tuple(int(x) for x in args.mesh.split("x"))
@@ -68,7 +73,8 @@ def main(argv=None):
                    batch_per_host=args.batch, seed=args.seed)
 
     key = jax.random.PRNGKey(args.seed)
-    with jax.set_mesh(mesh):
+    from repro.launch.mesh import use_mesh
+    with use_mesh(mesh):
         state, specs = init_state(key, cfg, tc)
         psh = param_shardings(mesh, specs)
         state = TrainState(
@@ -81,7 +87,17 @@ def main(argv=None):
             state = ckpt.restore(tc.ckpt_dir, start, state)
             print(f"[restart] resumed from step {start}")
 
-        step_fn = jax.jit(make_train_step(cfg, tc), donate_argnums=(0,))
+        raw_step = make_train_step(cfg, tc)
+        if args.sp:
+            # enter the SP scope while TRACING, so every kernel-path
+            # attention call shards its sequence axis over 'data'
+            from repro.parallel import sp_scope
+
+            def sp_step(state, batch, _inner=raw_step):
+                with sp_scope(mesh, "data"):
+                    return _inner(state, batch)
+            raw_step = sp_step
+        step_fn = jax.jit(raw_step, donate_argnums=(0,))
         saver = ckpt.AsyncCheckpointer(tc.ckpt_dir)
         wd = Watchdog()
         pre = Prefetcher(data, start_step=int(state.step))

@@ -236,10 +236,12 @@ def attn_decode(p, cfg: ModelConfig, x, t, cache, *, layer_global=True):
     if cfg.attention == "h1d" and not local:
         impl = cfg.decode_impl
         if B == 1:
-            # uniform-position fast path: scalar t keeps cache reads as
-            # dynamic-slices on the sharded sequence dim (P21); on the
-            # kernel path it specializes the same fused kernel to a
-            # broadcast scalar t.
+            # uniform-position fast path: scalar t keeps the jnp cache
+            # reads as dynamic-slices on the sharded sequence dim (P21);
+            # the kernel path specializes the same fused kernel to a
+            # broadcast scalar t, and inside an sp_scope(mesh) a
+            # sequence-sharded cache stays fused too (shard_map'd
+            # sharded index maps, parallel/sp_attention -- P26).
             cache = h1d_decode.update_cache_uniform(cache, k1, v1, t[0],
                                                     impl=impl)
             z = h1d_decode.decode_attend_uniform(cache, q1, t[0], nr=cfg.nr,

@@ -57,11 +57,20 @@ class ServeEngine:
     ``decode_impl`` overrides ``cfg.decode_impl`` (``'jnp'`` |
     ``'pallas'`` | ``'pallas_interpret'``): ``'pallas'`` runs each
     decode tick through the fused single-launch hierarchical-KV kernels
-    (``kernels/h1d_decode_kernel``)."""
+    (``kernels/h1d_decode_kernel``).
+
+    ``mesh`` enables sequence-parallel serving: the hierarchical cache
+    shards its sequence axis over ``mesh[sp_axis]`` and every decode
+    tick runs the fused kernels per shard under ``shard_map``
+    (``repro.parallel.sp_attention``) -- the configuration that used to
+    force ``impl='jnp'``.  Requires ``attention='h1d'`` and a padded
+    ``max_len`` of at least ``data_axis_size * nr`` (one level-0 block
+    per shard)."""
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 8,
                  max_len: int = 512, greedy: bool = True, seed: int = 0,
-                 overflow: str = "error", decode_impl: Optional[str] = None):
+                 overflow: str = "error", decode_impl: Optional[str] = None,
+                 mesh=None, sp_axis: str = "data"):
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "ServeEngine targets decoder-only families; enc-dec serving "
@@ -71,6 +80,7 @@ class ServeEngine:
         if decode_impl is not None and decode_impl != cfg.decode_impl:
             cfg = dataclasses.replace(cfg, decode_impl=decode_impl)
         from repro.models.transformer import _stacked_caches
+        from repro.parallel.sp_attention import sp_scope
         self.cfg = cfg
         self.overflow = overflow
         self.params = params
@@ -80,6 +90,23 @@ class ServeEngine:
         self.greedy = greedy
         self.key = jax.random.PRNGKey(seed)
         self._slot_axis = 1 if _stacked_caches(cfg) else 0
+
+        self.mesh = mesh
+        self.sp_axis = sp_axis
+        sp_d = dict(mesh.shape).get(sp_axis, 1) if mesh is not None else 1
+        if sp_d > 1:
+            if cfg.attention != "h1d":
+                raise ValueError(
+                    "SP serving shards the hierarchical cache's sequence "
+                    f"axis; attention={cfg.attention!r} has no such cache")
+            from repro.core import hierarchy as hc
+            Lp = hc.padded_length(max_len, cfg.nr)
+            if Lp < sp_d * cfg.nr or Lp % (sp_d * cfg.nr):
+                raise ValueError(
+                    f"SP serving: padded max_len {Lp} cannot keep one "
+                    f"nr={cfg.nr} block per shard on a {sp_d}-way "
+                    f"'{sp_axis}' axis; use fewer shards or a longer "
+                    f"max_len")
 
         self.caches = self.fns.init_caches(params, cfg, slots, max_len)
         self.tokens = jnp.zeros((slots,), jnp.int32)
@@ -111,11 +138,19 @@ class ServeEngine:
                         and (cfg.attention != "h1d"
                              or cfg.causal_mode == "fine-q"))
 
-        self._decode = jax.jit(
-            lambda p, c, tok, t: self.fns.decode_step(p, cfg, c, tok, t))
-        self._prefill1 = jax.jit(
-            lambda p, batch, n: self.fns.prefill(p, cfg, batch, max_len,
-                                                 true_len=n))
+        # the sp_scope context is entered at TRACE time (jit traces the
+        # wrapper synchronously), so the h1d decode/attention entry
+        # points see the mesh and route through the shard_map'd kernels
+        def _decode_traced(p, c, tok, t):
+            with sp_scope(self.mesh, self.sp_axis):
+                return self.fns.decode_step(p, cfg, c, tok, t)
+
+        def _prefill_traced(p, batch, n):
+            with sp_scope(self.mesh, self.sp_axis):
+                return self.fns.prefill(p, cfg, batch, max_len, true_len=n)
+
+        self._decode = jax.jit(_decode_traced)
+        self._prefill1 = jax.jit(_prefill_traced)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -179,15 +214,27 @@ class ServeEngine:
             batch = {"tokens": jnp.asarray(prompts)}
             logits, caches, pos = self._prefill1(self.params, batch,
                                                  jnp.asarray(ns))
+            dst = free[:g]
             if self.greedy:
                 nxt = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
             else:
-                # sample the first generated token exactly like step():
-                # one key split per batched call, categorical over the
-                # per-row last-true-token logits
-                self.key, k = jax.random.split(self.key)
-                nxt = np.asarray(
-                    jax.random.categorical(k, logits)).astype(np.int32)
+                # Sample the first generated token with PER-ROW keys:
+                # one split per batched call, then each row folds in its
+                # DESTINATION SLOT index (dummy pad rows use indices past
+                # the slot range).  A single categorical over the padded
+                # (gp, V) logits drew one gumbel tensor shaped by gp, so
+                # the same request could sample a DIFFERENT first token
+                # depending on how many dummy rows its bucket happened
+                # to get -- sampling must be invariant to padding.
+                self.key, kbase = jax.random.split(self.key)
+                row_ids = jnp.asarray(
+                    np.array(dst + list(range(self.slots,
+                                              self.slots + gp - g)),
+                             np.int32))
+                keys = jax.vmap(jax.random.fold_in, (None, 0))(kbase,
+                                                               row_ids)
+                nxt = np.asarray(jax.vmap(jax.random.categorical)(
+                    keys, logits)).astype(np.int32)
             # Write the whole group into its slots with ONE tree.map
             # pass (contiguous free slots collapse to a single slice
             # write).  The slot dim (0, or 1 for scanned layer stacks)
@@ -196,7 +243,6 @@ class ServeEngine:
             # r = full_rows // slots == rows per request of the batched
             # prefill cache.
             ax = self._slot_axis
-            dst = free[:g]
             contig = dst == list(range(dst[0], dst[0] + g))
 
             def write(full, one):

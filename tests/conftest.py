@@ -1,0 +1,17 @@
+"""Tier-1 suite configuration.
+
+Cap XLA's backend optimization effort for the test run: the default
+suite is compile-dominated (most tests jit a model or kernel once and
+execute it a handful of times), so the O2-style optimization pipeline
+buys nothing here but wall-clock -- level 0 cuts the suite ~30% on the
+2-vCPU CI host.  This is a compile-time knob only; every parity test
+computes both sides under the same flags and all tolerances are
+unchanged.  A caller-provided ``XLA_FLAGS`` (perf benchmarking, the
+multi-device subprocess tests) is respected as-is.
+
+This must run before the first ``import jax`` anywhere in the test
+session, which pytest guarantees by importing conftest first.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_backend_optimization_level=0")

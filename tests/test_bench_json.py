@@ -1,0 +1,59 @@
+"""Benchmark JSON baselines: schema smoke test.
+
+``benchmarks/bench_kernels.py --json`` and ``bench_decode.py --json``
+write machine-readable perf baselines (BENCH_kernels.json /
+BENCH_decode.json) that tooling diffs across PRs.  This test pins the
+schema of the COMMITTED files so a refactor cannot silently change the
+row format (or forget to commit a baseline) without failing CI.
+"""
+import json
+import os
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+BASELINES = {
+    "BENCH_kernels.json": "kernels",
+    "BENCH_decode.json": "decode",
+}
+
+
+@pytest.mark.parametrize("fname,bench", sorted(BASELINES.items()))
+def test_bench_json_schema(fname, bench):
+    path = os.path.join(ROOT, fname)
+    assert os.path.exists(path), (
+        f"{fname} baseline missing -- regenerate with "
+        f"PYTHONPATH=src python benchmarks/bench_{bench}.py --json")
+    with open(path) as f:
+        payload = json.load(f)
+    assert payload["bench"] == bench
+    assert isinstance(payload["shape"], dict) and payload["shape"]
+    assert isinstance(payload["backend"], str)
+    # baselines must record the XLA env they were measured under, so a
+    # regeneration with different flags is visible in the diff
+    assert "xla_flags" in payload
+    rows = payload["rows"]
+    assert isinstance(rows, list) and rows, "empty benchmark rows"
+    names = set()
+    for row in rows:
+        assert set(row) >= {"name", "us_per_call", "derived"}, row
+        assert isinstance(row["name"], str) and row["name"]
+        assert isinstance(row["us_per_call"], (int, float))
+        assert row["us_per_call"] >= 0.0, row
+        assert isinstance(row["derived"], str)
+        names.add(row["name"])
+    assert len(names) == len(rows), "duplicate benchmark row names"
+
+
+def test_bench_kernels_covers_every_mode():
+    """The kernels baseline must keep one fwd and one fwd+bwd row per
+    banded mode (incl. the shallow/deep 'sub' ratios) so the perf
+    trajectory of each kernel stays diffable."""
+    with open(os.path.join(ROOT, "BENCH_kernels.json")) as f:
+        names = {r["name"] for r in json.load(f)["rows"]}
+    for tag in ("l0_bidir", "l0_causal", "coarse_bidir", "coarse_causal",
+                "sub_r2", "sub_r16"):
+        for suffix in ("fwd", "fwdbwd"):
+            assert any(n.startswith(f"kernel_band_{tag}_")
+                       and n.endswith(suffix) for n in names), (tag, suffix)

@@ -12,7 +12,9 @@ def keys(n, seed=0):
     return jax.random.split(jax.random.PRNGKey(seed), n)
 
 
-@pytest.mark.parametrize("L,nr", [(64, 8), (128, 16), (256, 8)])
+@pytest.mark.parametrize("L,nr", [(64, 8),
+                                  pytest.param(128, 16, marks=pytest.mark.slow),
+                                  pytest.param(256, 8, marks=pytest.mark.slow)])
 def test_decode_matches_train_fine_q(L, nr):
     k1, k2, k3 = keys(3)
     B, G, D, Dv = 2, 2, 8, 8
@@ -42,11 +44,13 @@ def test_prefill_then_decode_continuation():
     ztrain = h1d_attention(q, k, v, nr=nr, causal=True,
                            causal_mode="fine-q")
     cache = prefill_cache(k[:, :Lp], v[:, :Lp], L, nr)
+    upd = jax.jit(update_cache)
+    att = jax.jit(lambda c, qq, tt: decode_attend(c, qq, tt, nr=nr))
     outs = []
     for t in range(Lp, L):
         tt = jnp.full((B,), t, jnp.int32)
-        cache = update_cache(cache, k[:, t], v[:, t], tt)
-        outs.append(decode_attend(cache, q[:, :, t], tt, nr=nr))
+        cache = upd(cache, k[:, t], v[:, t], tt)
+        outs.append(att(cache, q[:, :, t], tt))
     zdec = jnp.stack(outs, axis=2)
     np.testing.assert_allclose(zdec, ztrain[:, :, Lp:], atol=2e-5, rtol=1e-4)
 

@@ -37,46 +37,56 @@ def vjp_pair(mode, q, k, v, w, *, nr=16, tq=128, seed=7):
     return vjp_p(cts), vjp_r(cts)
 
 
-@pytest.mark.parametrize("mode", MODES)
-@pytest.mark.parametrize("padded", [False, True])
+# the padded-w mask path is mode-agnostic: one causal + one bidir
+# padded case run by default, the rest under -m slow
+_ALL_MODE_CASES = [(m, False) for m in MODES] + [
+    ("l0_causal", True), ("coarse_bidir", True)] + [
+    pytest.param(m, True, marks=pytest.mark.slow)
+    for m in MODES if m not in ("l0_causal", "coarse_bidir")]
+
+
+@pytest.mark.parametrize("mode,padded", _ALL_MODE_CASES)
 def test_bwd_parity_all_modes(mode, padded):
-    q, k, v, w = make(1, 2, 256, 32, 32)
+    q, k, v, w = make(1, 2, 128, 16, 16)
     if padded:
-        w = w * (jnp.arange(256) < 201).astype(jnp.float32)[None]
+        w = w * (jnp.arange(128) < 101).astype(jnp.float32)[None]
     gp, gr = vjp_pair(mode, q, k, v, w)
     for name, a, b in zip("qkvw", gp, gr):
         np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-3,
                                    err_msg=f"d{name} mismatch ({mode})")
 
 
-@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("mode", [
+    "l0_causal", "coarse_bidir",
+    pytest.param("l0_bidir", marks=pytest.mark.slow),
+    pytest.param("coarse_causal", marks=pytest.mark.slow)])
 def test_bwd_parity_multi_tile_gqa(mode):
     # 4 query tiles at tq=128 exercises both halo directions of the
     # key-grid kernel; G=3 exercises the in-VMEM group accumulation;
     # dv != d exercises the separate value head width.
-    q, k, v, w = make(2, 3, 512, 16, 48, seed=11)
+    q, k, v, w = make(1, 3, 256, 16, 32, seed=11)
     gp, gr = vjp_pair(mode, q, k, v, w, nr=16)
     for name, a, b in zip("qkvw", gp, gr):
         np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-3,
                                    err_msg=f"d{name} mismatch ({mode})")
 
 
-@pytest.mark.parametrize("tq", [128, 256])
+@pytest.mark.parametrize("tq", [128, pytest.param(256, marks=pytest.mark.slow)])
 def test_bwd_parity_tq_variants(tq):
     # one mode suffices: this test varies only the tile size (the full
     # mode sweep runs in test_bwd_parity_all_modes)
-    q, k, v, w = make(1, 1, 256, 32, 32, seed=3)
+    q, k, v, w = make(1, 1, 256, 16, 16, seed=3)
     for mode in ("l0_causal",):
         gp, gr = vjp_pair(mode, q, k, v, w, tq=tq)
         for a, b in zip(gp, gr):
             np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-3)
 
 
-@pytest.mark.parametrize("nr", [8, 32])
+@pytest.mark.parametrize("nr", [8, pytest.param(32, marks=pytest.mark.slow)])
 def test_bwd_parity_nr_variants(nr):
     # one causal + one bidir mode suffice here: the full mode sweep runs
     # in test_bwd_parity_all_modes; this test only varies nr
-    q, k, v, w = make(1, 1, 256, 16, 16, seed=5)
+    q, k, v, w = make(1, 1, 128, 16, 16, seed=5)
     for mode in ("l0_causal", "coarse_bidir"):
         gp, gr = vjp_pair(mode, q, k, v, w, nr=nr)
         for a, b in zip(gp, gr):
@@ -107,13 +117,21 @@ def sub_vjp_pair(q, k, v, w, *, nr, ratio, tq=128, seed=7):
 # wide layout (nq < tq), nq == tq boundary, deep layout (nq > tq);
 # G=2 exercises the in-VMEM GQA accumulation, multi-tile both grids,
 # dv != d the separate value head width
-@pytest.mark.parametrize("L,nr,ratio,tq", [
-    (512, 16, 2, 128),
-    (512, 16, 8, 128),
-    (512, 16, 16, 128),
-    (1024, 16, 32, 128),
-])
-@pytest.mark.parametrize("padded", [False, True])
+# default: shallow wide + deepest deep layouts, padded only on the
+# shallow one; remaining grid combinations run under -m slow
+_SUB_CASES = [
+    (256, 16, 2, 128, False),
+    (256, 16, 2, 128, True),
+    (512, 16, 16, 128, False),
+    pytest.param(512, 16, 8, 128, False, marks=pytest.mark.slow),
+    pytest.param(512, 16, 8, 128, True, marks=pytest.mark.slow),
+    pytest.param(512, 16, 16, 128, True, marks=pytest.mark.slow),
+    pytest.param(1024, 16, 32, 128, False, marks=pytest.mark.slow),
+    pytest.param(1024, 16, 32, 128, True, marks=pytest.mark.slow),
+]
+
+
+@pytest.mark.parametrize("L,nr,ratio,tq,padded", _SUB_CASES)
 def test_sub_bwd_parity(L, nr, ratio, tq, padded):
     q, k, v, w = make_sub(1, 2, L, ratio, 16, 32, seed=ratio)
     if padded:
@@ -148,13 +166,13 @@ def _count_jnp_level_calls(monkeypatch):
     return calls
 
 
-def test_h1d_fine_q_kernel_complete_L1024(monkeypatch):
-    """Acceptance: fine-q causal fwd+grad at L=1024, nr=16 on the kernel
-    path matches the jnp oracle to 1e-4 AND executes zero
-    ``_level_fine_q`` / ``_blocked_jnp`` calls -- every one of the six
-    hierarchy levels runs fused (level 0 + five 'sub' levels spanning
-    the wide, boundary and deep tilings at tq=128)."""
-    B, G, L, D, nr = 1, 2, 1024, 16, 16
+def test_h1d_fine_q_kernel_complete(monkeypatch):
+    """Acceptance: fine-q causal fwd+grad at L=256, nr=16, tq=64 on the
+    kernel path matches the jnp oracle to 1e-4 AND executes zero
+    ``_level_fine_q`` / ``_blocked_jnp`` calls -- every hierarchy level
+    runs fused, and tq=64 puts the three 'sub' levels on the wide
+    (nq<tq), boundary (nq==tq) and deep (nq>tq) tilings."""
+    B, G, L, D, nr = 1, 2, 256, 16, 16
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(23), 3)
     q = jax.random.normal(k1, (B, G, L, D), jnp.float32)
     k = jax.random.normal(k2, (B, L, D), jnp.float32)
@@ -163,7 +181,7 @@ def test_h1d_fine_q_kernel_complete_L1024(monkeypatch):
     def loss(impl):
         def f(q, k, v):
             z = h1d_attention(q, k, v, nr=nr, causal=True,
-                              causal_mode="fine-q", impl=impl, tq=128)
+                              causal_mode="fine-q", impl=impl, tq=64)
             return jnp.sum(z ** 2)
         return f
 
@@ -188,7 +206,7 @@ def test_h1d_attention_grad_kernel_vs_jnp(causal, cmode):
     """Full-operator gradient through the streaming cross-level combine:
     the kernel path (level-0 + coarse levels on the custom VJP) against
     the blocked-jnp path (plain XLA autodiff).  Slow sweep: the default
-    run covers the same path via test_h1d_fine_q_kernel_complete_L1024
+    run covers the same path via test_h1d_fine_q_kernel_complete
     and the per-mode band parity tests."""
     B, G, L, D, nr = 1, 2, 256, 32, 16
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(17), 3)
@@ -210,7 +228,7 @@ def test_h1d_attention_grad_kernel_vs_jnp(causal, cmode):
                                    err_msg=f"d{name} mismatch")
 
 
-@pytest.mark.parametrize("L", [320, 129])
+@pytest.mark.parametrize("L", [pytest.param(320, marks=pytest.mark.slow), 129])
 def test_local_attention_kernel_path_padding(L):
     """Kernel-path sliding-window attention must pad to the tile unit
     (regression: window-multiple padding tripped the L % tq assert)."""
@@ -244,7 +262,7 @@ def test_train_step_runs_on_kernel_path(monkeypatch):
     calls = _count_jnp_level_calls(monkeypatch)
     state, _ = init_state(jax.random.PRNGKey(0), cfg, tc)
     step = jax.jit(make_train_step(cfg, tc))
-    data = ZipfLM(vocab_size=64, seq_len=128, batch_per_host=2, seed=0)
+    data = ZipfLM(vocab_size=64, seq_len=64, batch_per_host=2, seed=0)
     state, m = step(state, jax.tree.map(jnp.asarray, data.batch(0)))
     assert np.isfinite(float(m["loss"]))
     assert int(state.step) == 1

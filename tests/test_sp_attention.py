@@ -1,0 +1,308 @@
+"""Sequence-parallel kernel path (`parallel/sp_attention`): shard_map +
+halo exchange around the unmodified fused Pallas kernels.
+
+Parity targets the single-device ``impl='pallas_interpret'`` path (the
+exact kernel program), per the SP acceptance bar: band levels and the
+full hierarchy to <= 1e-5, decode-cache updates bit-exact, greedy
+engine tokens identical.
+
+Multi-device cases need fabricated host devices => subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (same pattern as
+test_pipeline_parallel).  Each subprocess bundles several checks to
+amortize the interpreter start-up.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+def _run(script: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    return r.stdout
+
+
+_PRELUDE = textwrap.dedent("""
+    import os, warnings
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=4 "
+                               "--xla_backend_optimization_level=0")
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.launch.mesh import make_mesh
+    from repro.parallel import sp_attention as sp
+""")
+
+
+BAND_SCRIPT = _PRELUDE + textwrap.dedent("""
+    from repro.kernels import band_attention
+
+    B, G, L, D, nr = 2, 2, 128, 16, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (B, G, L, D))
+    k = jax.random.normal(ks[1], (B, L, D))
+    v = jax.random.normal(ks[2], (B, L, D))
+    w = jnp.ones((B, L)).at[:, -5:].set(0.0)        # padded tail
+
+    MODES = [("l0_bidir", 1), ("l0_causal", 1), ("coarse_bidir", 1),
+             ("coarse_causal", 1), ("sub", 2)]
+    refs = {}
+    for mode, ratio in MODES:
+        Lk = L // ratio
+        refs[(mode, ratio)] = band_attention(
+            q, k[:, :Lk], v[:, :Lk], w[:, :Lk], nr=nr, mode=mode,
+            ratio=ratio, impl="pallas_interpret")
+
+    # d=4 makes L/d = 32 < tq hint 128: the tq shrink must keep the
+    # kernel path under sharding (resolve_tq inside the local launch);
+    # d=2 re-checks the bidirectional halo pair at another shard count
+    cases = [(4, MODES), (2, [("l0_bidir", 1)])]
+    for dsz, modes in cases:
+        mesh = make_mesh((dsz,), ("data",))
+        for mode, ratio in modes:
+            Lk = L // ratio
+            got = jax.jit(lambda q, k, v, w, m=mode, r=ratio, ms=mesh:
+                          sp.sp_band_attention(
+                              q, k, v, w, nr=nr, mode=m, ratio=r, tq=128,
+                              impl="pallas_interpret", mesh=ms))(
+                q, k[:, :Lk], v[:, :Lk], w[:, :Lk])
+            err = max(float(jnp.abs(a - b).max())
+                      for a, b in zip(got, refs[(mode, ratio)]))
+            assert err < 1e-5, (dsz, mode, ratio, err)
+    print("BAND_OK")
+
+    # --- GQA dim0 not divisible by the model axis: LOUD fallback ------
+    mesh_dm = make_mesh((2, 2), ("data", "model"))
+    B3 = 3     # batch*kv_heads = 3, model axis = 2 -> cannot shard heads
+    q3 = jax.random.normal(ks[3], (B3, G, L, D))
+    k3, v3, w3 = k[:1].repeat(B3, 0), v[:1].repeat(B3, 0), w[:1].repeat(B3, 0)
+    ref = band_attention(q3, k3, v3, w3, nr=nr, mode="l0_causal",
+                         impl="pallas_interpret")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        got = sp.sp_band_attention(q3, k3, v3, w3, nr=nr, mode="l0_causal",
+                                   impl="pallas_interpret", mesh=mesh_dm)
+    assert any("model" in str(x.message) for x in rec), \\
+        "expected a loud fallback warning"
+    err = max(float(jnp.abs(a - b).max()) for a, b in zip(got, ref))
+    assert err < 1e-5, err
+    print("GQA_FALLBACK_OK")
+""")
+
+
+H1D_SCRIPT = _PRELUDE + textwrap.dedent("""
+    from repro.core import h1d_attention
+
+    B, G, L, D, nr = 1, 2, 128, 16, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, G, L, D))
+    k = jax.random.normal(ks[1], (B, L, D))
+    v = jax.random.normal(ks[2], (B, L, D))
+    w = jnp.ones((B, L)).at[:, -5:].set(0.0)
+
+    # L/d = 32 with nr=16 -> levels 0-1 run local kernels, level 2 goes
+    # through the gathered deep path
+    mesh4 = make_mesh((4,), ("data",))
+    for causal, cmode in ((True, "fine-q"), (False, "fine-q"),
+                          (True, "coarse-q")):
+        ref = h1d_attention(q, k, v, nr=nr, causal=causal,
+                            causal_mode=cmode, kv_weight=w,
+                            impl="pallas_interpret")
+        got = jax.jit(lambda q, k, v, w, c=causal, m=cmode:
+                      sp.sp_h1d_attention(
+                          q, k, v, nr=nr, causal=c, causal_mode=m,
+                          kv_weight=w, impl="pallas_interpret",
+                          mesh=mesh4))(q, k, v, w)
+        err = float(jnp.abs(got - ref).max())
+        assert err < 1e-5, (causal, cmode, err)
+    print("H1D_OK")
+
+    # --- gradients flow through the halo exchange (training path) -----
+    # tiny shape: L/d = 16 with nr=8 still covers local kernels (levels
+    # 0-1), the gathered deep level AND the custom-VJP backward kernels
+    Lg, nrg = 64, 8
+    qg, kg, vg = q[:, :, :Lg, :8], k[:, :Lg, :8], v[:, :Lg, :8]
+    wg = jnp.ones((B, Lg))
+    def loss(fn):
+        return lambda *a: jnp.sum(fn(*a) ** 2)
+    g_sp = jax.jit(jax.grad(loss(lambda q, k, v: sp.sp_h1d_attention(
+        q, k, v, nr=nrg, causal=True, kv_weight=wg,
+        impl="pallas_interpret", mesh=mesh4)), argnums=(0, 1, 2)))(qg, kg, vg)
+    g_ref = jax.jit(jax.grad(loss(lambda q, k, v: h1d_attention(
+        q, k, v, nr=nrg, causal=True, kv_weight=wg,
+        impl="pallas_interpret")), argnums=(0, 1, 2)))(qg, kg, vg)
+    for a, b in zip(g_sp, g_ref):
+        err = float(jnp.abs(a - b).max() / (1.0 + jnp.abs(b).max()))
+        assert err < 1e-5, err
+    print("GRAD_OK")
+
+    # --- sp_scope dispatch: h1d_attention routes itself under SP ------
+    # trace-only check: the jaxpr must contain the SP collectives
+    with sp.sp_scope(mesh4):
+        jaxpr = str(jax.make_jaxpr(lambda q, k, v: h1d_attention(
+            q, k, v, nr=nr, causal=True, kv_weight=w,
+            impl="pallas_interpret"))(q, k, v))
+    assert ("shard_map" in jaxpr) or ("ppermute" in jaxpr), jaxpr[:2000]
+    without = str(jax.make_jaxpr(lambda q, k, v: h1d_attention(
+        q, k, v, nr=nr, causal=True, kv_weight=w,
+        impl="pallas_interpret"))(q, k, v))
+    assert "ppermute" not in without
+    print("DISPATCH_OK")
+""")
+
+
+DECODE_SCRIPT = _PRELUDE + textwrap.dedent("""
+    from repro.core import h1d_decode as hd
+
+    B, G, Lmax, D, nr = 6, 2, 256, 16, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    cache = hd.prefill_cache(jax.random.normal(ks[0], (B, Lmax, D)),
+                             jax.random.normal(ks[1], (B, Lmax, D)),
+                             Lmax, nr)
+    q = jax.random.normal(ks[2], (B, G, D))
+    # includes t == Lmax: out of range -- defensive parity with the
+    # single-chip kernel's clamping (no shard may zero the deep levels)
+    t = jnp.asarray([0, 15, 16, 130, 255, 256], jnp.int32)
+
+    IMPL = "pallas_interpret"
+    for dsz in (2, 4):
+        mesh = make_mesh((dsz,), ("data",))
+        z_ref = hd.decode_attend(cache, q, t, nr=nr, impl=IMPL)
+        z_sp = jax.jit(lambda c, qq, tt, ms=mesh: sp.sp_decode_attend(
+            c, qq, tt, nr=nr, impl=IMPL, mesh=ms))(cache, q, t)
+        assert float(jnp.abs(z_sp - z_ref).max()) < 1e-5
+
+        kn = jax.random.normal(ks[3], (B, D))
+        vn = jax.random.normal(ks[4], (B, D))
+        c_ref = hd.update_cache(cache, kn, vn, t, impl=IMPL)
+        c_sp = jax.jit(lambda c, a, b, tt, ms=mesh: sp.sp_update_cache(
+            c, a, b, tt, impl=IMPL, mesh=ms))(cache, kn, vn, t)
+        for a, b in zip(jax.tree.leaves(c_sp), jax.tree.leaves(c_ref)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("DECODE_OK")
+
+    # scoped dispatch of the uniform (scalar-t) path -- the shape that
+    # was explicitly single-chip before this layer
+    mesh = make_mesh((4,), ("data",))
+    with sp.sp_scope(mesh):
+        zu = hd.decode_attend_uniform(cache, q, jnp.int32(130), nr=nr,
+                                      impl=IMPL)
+    zu_ref = hd.decode_attend_uniform(cache, q, jnp.int32(130), nr=nr,
+                                      impl=IMPL)
+    assert float(jnp.abs(zu - zu_ref).max()) < 1e-5
+    print("UNIFORM_OK")
+""")
+
+
+ENGINE_SCRIPT = _PRELUDE + textwrap.dedent("""
+    from repro.configs import get_smoke_config
+    from repro.models import get_model
+    from repro.serve import ServeEngine, Request
+
+    cfg = get_smoke_config("llama3.2-1b")
+    fns = get_model(cfg)
+    params, _ = fns.init(jax.random.PRNGKey(0), cfg)
+
+    def run(mesh, slots):
+        eng = ServeEngine(cfg, params, slots=slots, max_len=64,
+                          decode_impl="pallas_interpret", mesh=mesh)
+        rng = np.random.default_rng(0)
+        reqs = []
+        for i in range(slots):
+            p = rng.integers(0, cfg.vocab_size,
+                             size=int(rng.integers(6, 20))).astype(np.int32)
+            r = Request(uid=i, prompt=p, max_new_tokens=6)
+            reqs.append(r)
+            eng.submit(r)
+        eng.run()
+        return [r.out_tokens for r in reqs]
+
+    # greedy tokens must be IDENTICAL to the single-device kernel path;
+    # slots=3 exercises a non-power-of-two slot count, slots=1 the
+    # uniform long-context path
+    ref3 = run(None, 3)
+    assert run(make_mesh((2,), ("data",)), 3) == ref3
+    ref1 = run(None, 1)
+    assert run(make_mesh((4,), ("data",)), 1) == ref1
+    print("ENGINE_OK")
+
+    # too many shards for the cache -> loud error, not a wrong answer
+    try:
+        ServeEngine(cfg, params, slots=1, max_len=16,
+                    decode_impl="pallas_interpret",
+                    mesh=make_mesh((4,), ("data",)))
+    except ValueError as e:
+        assert "shard" in str(e)
+        print("GUARD_OK")
+    else:
+        raise AssertionError("expected ValueError for unshardable max_len")
+""")
+
+
+def test_sp_band_parity_and_gqa_fallback():
+    out = _run(BAND_SCRIPT)
+    assert "BAND_OK" in out and "GQA_FALLBACK_OK" in out, out
+
+
+def test_sp_hierarchy_parity_and_grads():
+    out = _run(H1D_SCRIPT)
+    for tag in ("H1D_OK", "GRAD_OK", "DISPATCH_OK"):
+        assert tag in out, out
+
+
+def test_sp_decode_parity():
+    out = _run(DECODE_SCRIPT)
+    assert "DECODE_OK" in out and "UNIFORM_OK" in out, out
+
+
+def test_sp_engine_greedy_tokens_identical():
+    out = _run(ENGINE_SCRIPT)
+    assert "ENGINE_OK" in out and "GUARD_OK" in out, out
+
+
+def test_sp_scope_noop_without_mesh():
+    """sp_scope(None) and a 1-way axis are inert: plain single-device
+    dispatch, no shard_map in the jaxpr."""
+    from repro.parallel import sp_scope, sp_ctx
+    with sp_scope(None):
+        assert sp_ctx() is None
+    mesh = jax.make_mesh((1,), ("data",))
+    with sp_scope(mesh):
+        assert sp_ctx() is None
+
+
+def test_sp_one_way_passthrough_and_validation():
+    """A 1-way mesh is a passthrough to the single-launch kernel, and
+    unshardable shapes raise informative errors instead of computing a
+    wrong answer."""
+    from repro.parallel import sp_attention as sp
+    mesh = jax.make_mesh((1,), ("data",))
+    B, G, L, D, nr = 1, 1, 64, 8, 8
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, G, L, D))
+    k = jax.random.normal(ks[1], (B, L, D))
+    v = jax.random.normal(ks[2], (B, L, D))
+    w = jnp.ones((B, L))
+    from repro.kernels import band_attention
+    ref = band_attention(q, k, v, w, nr=nr, mode="l0_causal",
+                         impl="pallas_interpret")
+    got = sp.sp_band_attention(q, k, v, w, nr=nr, mode="l0_causal",
+                               impl="pallas_interpret", mesh=mesh)
+    for a, b in zip(got, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6)
+    # shardability validation is pure shape math -- exercise it directly
+    with pytest.raises(ValueError, match="fewer shards"):
+        sp._validate_sp_shape(32, 8, 16, "test")   # L/d = 4 < nr
+    assert sp.sp_sharded_levels(256, 16, 4) == 3   # fine + 2 coarse
+    assert sp.sp_sharded_levels(64, 16, 4) == 1    # fine only
+    assert sp.sp_sharded_levels(32, 16, 4) == 0    # too short to shard
