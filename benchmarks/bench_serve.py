@@ -1,0 +1,195 @@
+"""Serve-path benchmark: continuous batching under synthetic Poisson
+traffic, dense slot cache vs paged cache pool at FIXED cache HBM.
+
+Workload: ``--requests`` arrivals with exponential inter-arrival times
+(measured in engine ticks, seeded), each prompt = one SHARED prefix of
+``--prefix`` tokens (the system-prompt pattern that paged prefix
+sharing exploits) plus a unique tail.  Both engines run the identical
+request list; reported per engine:
+
+* tokens/s (wall-clock) and us per generated token;
+* p50 / p99 request latency in engine ticks (completion - arrival);
+* peak admitted concurrency;
+* paged only: pool occupancy peak + sharing / COW / eviction /
+  preemption counters.
+
+The headline comparison fixes the cache-HBM budget at the DENSE
+engine's cache footprint and gives the paged engine whatever pool fits
+the same bytes: prefix sharing + on-demand page allocation admit >= 2x
+the concurrent requests (EXPERIMENTS.md P27).
+
+``--json out.json`` (default name BENCH_serve.json via ``--json``
+alone) writes every row as machine-readable JSON so the serve perf
+trajectory across PRs can be diffed by tooling.
+"""
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from .common import emit
+
+ARCH = "llama3.2-1b"
+MAX_LEN = 128
+DENSE_SLOTS = 2
+PAGED_SLOTS = 8
+NEW_TOKENS = 8
+
+
+def _build(cfg, params, paged, pool_pages, decode_impl=None):
+    from repro.serve import ServeEngine
+    kw = dict(slots=PAGED_SLOTS if paged else DENSE_SLOTS,
+              max_len=MAX_LEN, decode_impl=decode_impl)
+    if paged:
+        kw.update(paged=True, pool_pages=pool_pages, lookahead=4)
+    return ServeEngine(cfg, params, **kw)
+
+
+def _workload(cfg, n, prefix_len, seed=0, rate=2.0):
+    """(arrival_tick, prompt, max_new) triples; shared prefix + unique
+    tail, Poisson arrivals at ``rate`` requests/tick."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, prefix_len).astype(np.int32)
+    t = 0.0
+    out = []
+    for i in range(n):
+        t += rng.exponential(1.0 / rate)
+        tail = rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(4, 8))).astype(np.int32)
+        out.append((int(t), np.concatenate([prefix, tail]), NEW_TOKENS))
+    return out
+
+
+def _drive(eng, workload):
+    """Tick loop with arrivals; returns (wall_s, ticks, latencies,
+    peak_concurrency, peak_occupancy, total_tokens)."""
+    from repro.serve import Request
+    reqs = [Request(uid=i, prompt=p.copy(), max_new_tokens=m)
+            for i, (_, p, m) in enumerate(workload)]
+    arrivals = [a for a, _, _ in workload]
+    done_at = {}
+    pending = list(range(len(reqs)))
+    tick = 0
+    peak_c = 0
+    peak_occ = 0.0
+    t0 = time.perf_counter()
+    submitted = set()
+    while pending or eng.queue or eng.active.any():
+        while pending and arrivals[pending[0]] <= tick:
+            submitted.add(pending[0])
+            eng.submit(reqs[pending.pop(0)])
+        eng.step()
+        peak_c = max(peak_c, int(eng.active.sum()))
+        if eng.pool is not None:
+            peak_occ = max(peak_occ, eng.pool.occupancy())
+        # done = has left both the queue and every slot (covers early
+        # termination via stop tokens or a full cache, where
+        # len(out_tokens) never reaches max_new_tokens)
+        in_flight = {id(e.req) for e in eng.queue}
+        in_flight |= {id(r) for r in eng.req if r is not None}
+        for i in submitted:
+            if i not in done_at and id(reqs[i]) not in in_flight:
+                done_at[i] = tick
+        tick += 1
+    wall = time.perf_counter() - t0
+    lat = np.array([done_at[i] - arrivals[i] for i in range(len(reqs))])
+    total = sum(len(r.out_tokens) for r in reqs)
+    return wall, tick, lat, peak_c, peak_occ, total, \
+        [r.out_tokens for r in reqs]
+
+
+def run(json_path=None, requests=12, prefix_len=64):
+    from repro.configs import get_smoke_config
+    from repro.models import get_model
+    from repro.serve import paged_cache as pc
+
+    cfg = get_smoke_config(ARCH)
+    fns = get_model(cfg)
+    params, _ = fns.init(jax.random.PRNGKey(0), cfg)
+    wl = _workload(cfg, requests, prefix_len)
+
+    rows = []
+
+    def record(name, us, derived):
+        emit(name, us, derived)
+        rows.append({"name": name, "us_per_call": round(us, 1),
+                     "derived": derived})
+
+    # fixed-HBM budget: the dense engine's total cache bytes
+    dense = _build(cfg, params, paged=False, pool_pages=None)
+    dense_bytes = pc.pool_bytes(dense.caches)
+    # largest paged pool that fits the same bytes (the hierarchy's
+    # coarse pools ride along, so usable fine pages exceed the naive
+    # slots * Lmax/nr equivalence)
+    pool_pages = 4 * DENSE_SLOTS * (MAX_LEN // cfg.nr)
+    while pool_pages > 1:
+        probe = _build(cfg, params, paged=True, pool_pages=pool_pages)
+        if pc.pool_bytes(probe.caches) <= dense_bytes:
+            break
+        pool_pages -= 1
+    del probe
+
+    wall, ticks, lat, conc_d, _, total_d, out_d = _drive(dense, wl)
+    record("serve_dense_tok_s", wall / max(total_d, 1) * 1e6,
+           f"tok_s={total_d / wall:.1f} ticks={ticks} "
+           f"concurrency={conc_d}")
+    record("serve_dense_latency", float(np.percentile(lat, 50)) * 1e6,
+           f"p50_ticks={np.percentile(lat, 50):.0f} "
+           f"p99_ticks={np.percentile(lat, 99):.0f}")
+
+    paged = _build(cfg, params, paged=True, pool_pages=pool_pages)
+    wall, ticks, lat, conc_p, occ, total_p, out_p = _drive(paged, wl)
+    st = paged.pool.stats
+    record("serve_paged_tok_s", wall / max(total_p, 1) * 1e6,
+           f"tok_s={total_p / wall:.1f} ticks={ticks} "
+           f"concurrency={conc_p} pool_occupancy_peak={occ:.2f}")
+    record("serve_paged_latency", float(np.percentile(lat, 50)) * 1e6,
+           f"p50_ticks={np.percentile(lat, 50):.0f} "
+           f"p99_ticks={np.percentile(lat, 99):.0f}")
+    record("serve_paged_pool", 0.0,
+           f"pages={pool_pages} shared={st.shared_maps} "
+           f"cow={st.cow_copies} evict={st.evictions} "
+           f"preempt={paged.preemptions}")
+    record("serve_concurrency_fixed_hbm", 0.0,
+           f"dense={conc_d} paged={conc_p} "
+           f"ratio={conc_p / max(conc_d, 1):.1f} "
+           f"hbm_bytes={dense_bytes}")
+    # greedy parity guard: the baseline must never record a paged
+    # engine that drifts from the dense oracle
+    match = out_d == out_p
+    record("serve_paged_token_parity", 0.0, f"identical={match}")
+    assert match, "paged token stream diverged from dense oracle"
+    assert conc_p >= 2 * conc_d, (
+        f"paged concurrency {conc_p} < 2x dense {conc_d} at fixed HBM")
+
+    if json_path:
+        payload = {"bench": "serve",
+                   "shape": {"arch": ARCH, "max_len": MAX_LEN,
+                             "nr": cfg.nr, "requests": requests,
+                             "prefix_len": prefix_len,
+                             "dense_slots": DENSE_SLOTS,
+                             "paged_slots": PAGED_SLOTS,
+                             "new_tokens": NEW_TOKENS},
+                   "backend": jax.default_backend(),
+                   "xla_flags": os.environ.get("XLA_FLAGS", ""),
+                   "rows": rows}
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {json_path} ({len(rows)} rows)")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", nargs="?", const="BENCH_serve.json",
+                    default=None, metavar="PATH",
+                    help="also write rows as JSON (default name "
+                         "BENCH_serve.json)")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--prefix", type=int, default=64)
+    args = ap.parse_args()
+    run(json_path=args.json, requests=args.requests,
+        prefix_len=args.prefix)

@@ -8,6 +8,8 @@ roofline reports.  Prints ``name,us_per_call,derived`` CSV rows.
   scaling  -- run-time vs L: the O(L) vs O(L^2) claim (section 7)
   kernels  -- banded block-attention kernel microbench + allclose
   decode   -- serving tick (hierarchical-KV update + attend) tokens/s
+  serve    -- continuous batching under Poisson traffic: dense slots vs
+              paged cache pool at fixed HBM (tok/s, p50/p99, occupancy)
   roofline -- summary of artifacts/roofline (if the dry-run ran)
 """
 import argparse
@@ -52,7 +54,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,scaling,kernels,"
-                         "decode,roofline")
+                         "decode,serve,roofline")
     args, _ = ap.parse_known_args()
     want = set(args.only.split(",")) if args.only else None
 
@@ -68,6 +70,9 @@ def main() -> None:
     if on("decode"):
         from benchmarks.bench_decode import run as r
         jobs.append(("decode", r))
+    if on("serve"):
+        from benchmarks.bench_serve import run as r
+        jobs.append(("serve", r))
     if on("scaling"):
         from benchmarks.bench_scaling import run as r
         jobs.append(("scaling", r))

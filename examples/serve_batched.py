@@ -1,9 +1,17 @@
 """Batched serving demo: continuous batching with hierarchical KV caches.
 
     PYTHONPATH=src python examples/serve_batched.py --arch llama3.2-1b
+    PYTHONPATH=src python examples/serve_batched.py --paged --pool-pages 24
 
 Uses the reduced smoke config (random weights) to demonstrate the engine:
 8 requests over 4 slots, greedy decoding, O(nr log L) attention per step.
+
+``--paged`` swaps the dense per-slot caches for the paged hierarchical
+cache pool (serve/paged_cache.py): requests sharing the demo's common
+prompt prefix map the same physical pages (fine blocks AND their coarse
+ancestor rows), pages are copy-on-write, and an undersized pool preempts
+and requeues the newest request instead of failing -- same greedy tokens,
+a fraction of the cache HBM.
 """
 import argparse
 import time
@@ -26,20 +34,31 @@ def main():
                     choices=["jnp", "pallas", "pallas_interpret"],
                     help="h1d decode tick backend (pallas = fused "
                          "single-launch kernels)")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the paged cache pool with prefix "
+                         "sharing + copy-on-write")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="pool size in nr-row pages (small values "
+                         "exercise eviction/preemption)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
     fns = get_model(cfg)
     params, _ = fns.init(jax.random.PRNGKey(0), cfg)
     eng = ServeEngine(cfg, params, slots=args.slots, max_len=128,
-                      decode_impl=args.decode_impl)
+                      decode_impl=args.decode_impl, paged=args.paged,
+                      pool_pages=args.pool_pages)
 
     rng = np.random.default_rng(0)
+    # a shared system-prompt prefix makes the paged pool's prefix
+    # sharing visible in the stats line
+    prefix = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
     reqs = []
     for i in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab_size,
-                              size=rng.integers(8, 24)).astype(np.int32)
-        r = Request(uid=i, prompt=prompt, max_new_tokens=args.new_tokens)
+        tail = rng.integers(0, cfg.vocab_size,
+                            size=rng.integers(4, 16)).astype(np.int32)
+        r = Request(uid=i, prompt=np.concatenate([prefix, tail]),
+                    max_new_tokens=args.new_tokens)
         reqs.append(r)
         eng.submit(r)
 
@@ -52,6 +71,12 @@ def main():
     total = sum(len(r.out_tokens) for r in reqs)
     print(f"served {len(reqs)} requests / {total} tokens in {dt:.2f}s "
           f"({ticks} engine ticks, {total / dt:.1f} tok/s on CPU)")
+    if args.paged:
+        st = eng.pool.stats
+        print(f"paged pool: shared_maps={st.shared_maps} "
+              f"cow={st.cow_copies} evictions={st.evictions} "
+              f"preemptions={eng.preemptions} "
+              f"fresh_pages={st.fresh_pages}")
     for r in reqs[:3]:
         print(f"  req {r.uid}: prompt[:6]={r.prompt[:6].tolist()} "
               f"-> out={r.out_tokens[:8]}...")

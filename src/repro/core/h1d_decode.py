@@ -296,6 +296,149 @@ def decode_attend(cache: H1DCache, q, t, *, nr: int,
 
 
 # ---------------------------------------------------------------------------
+# paged cache pool (serving-memory subsystem, serve/paged_cache.py)
+# ---------------------------------------------------------------------------
+# The dense H1DCache pins Lmax rows per row-slot.  The paged layout
+# replaces each level's (R, L_l, D) slab with a POOL of nr-row pages
+# (NP_l, nr, D) plus host-side per-request page tables; the decode entry
+# points below take the physical page row of every block they touch as a
+# small per-tick indirection table (one column per band / level), so the
+# math is the dense oracle's with the block reads/writes routed through
+# the tables.  Pools are host-local (no sp_scope dispatch): the serving
+# engine forbids mesh+paged at construction.
+
+
+class PagedH1DCache(NamedTuple):
+    """Per-layer paged pools.  ``k``/``v``: (NP0, nr, D/Dv) fine pages;
+    ``ck[l-1]``/``cv[l-1]``: (NP_l, nr, ...) level-l coarse pages.  A
+    "page" here is one pool row: ``nr`` consecutive level-l rows of ONE
+    cache row (batch*kv-head).  Logical (slot, level, block) -> pool row
+    mapping lives in ``serve.paged_cache.PagePool`` (host)."""
+    k: jnp.ndarray
+    v: jnp.ndarray
+    ck: Tuple[jnp.ndarray, ...]
+    cv: Tuple[jnp.ndarray, ...]
+
+
+class PageTables(NamedTuple):
+    """Per-tick device indirection tables (host-built, jit arguments).
+
+    ``attend``: (R, 2 + levels) int32 -- physical pool rows for the own
+    level-0 page, the previous level-0 page, and each level's ``I_l - 1``
+    page (columns for masked-out bands hold any in-range row).
+    ``update``: (R, 1 + levels) int32 -- physical pool rows of the
+    token's ancestor pages (column l holds the page of row ``t >> l``);
+    inactive engine rows point at a trash page."""
+    attend: jnp.ndarray
+    update: jnp.ndarray
+
+
+def init_paged_pool(num_pages, nr: int, D: int, Dv: int,
+                    dtype=jnp.float32) -> PagedH1DCache:
+    """Zeroed pools.  ``num_pages``: sequence of per-level pool sizes
+    (index 0 = fine, index l = coarse level l); its length fixes the
+    number of hierarchy levels."""
+    k = jnp.zeros((num_pages[0], nr, D), dtype)
+    v = jnp.zeros((num_pages[0], nr, Dv), dtype)
+    ck = tuple(jnp.zeros((n, nr, D), dtype) for n in num_pages[1:])
+    cv = tuple(jnp.zeros((n, nr, Dv), dtype) for n in num_pages[1:])
+    return PagedH1DCache(k=k, v=v, ck=ck, cv=cv)
+
+
+def update_cache_paged(pool: PagedH1DCache, k_new, v_new, t, utab, *,
+                       impl: str = "jnp") -> PagedH1DCache:
+    """Paged batched append.  ``k_new``: (R, D), ``v_new``: (R, Dv),
+    ``t``: (R,) global positions, ``utab``: (R, 1 + levels) physical
+    page rows (see :class:`PageTables`).  Same ancestor-chain math as
+    ``update_cache``: the level-l row ``t >> l`` becomes the pairwise
+    mean/sum of the freshly updated level-(l-1) sibling pair -- which
+    lives in the level-(l-1) page just written (clearing bit 0 of
+    ``t >> (l-1)`` never crosses a page boundary for nr >= 2)."""
+    if impl != "jnp":
+        dk, interpret = _decode_kernels(impl)
+        return dk.update_cache_paged(pool, k_new, v_new, t, utab,
+                                     interpret=interpret)
+    t = jnp.asarray(t, jnp.int32)
+    utab = jnp.asarray(utab, jnp.int32)
+    nr = pool.k.shape[-2]
+    row0 = t % nr
+    k = pool.k.at[utab[:, 0], row0].set(k_new)
+    v = pool.v.at[utab[:, 0], row0].set(v_new)
+    ck, cv = [], []
+    base = row0 & ~1
+    pair_k = jnp.stack([k[utab[:, 0], base], k[utab[:, 0], base + 1]])
+    pair_v = jnp.stack([v[utab[:, 0], base], v[utab[:, 0], base + 1]])
+    for l, (ckl, cvl) in enumerate(zip(pool.ck, pool.cv), start=1):
+        rowl = (t >> l) % nr
+        ckl = ckl.at[utab[:, l], rowl].set(pair_k.mean(0))
+        cvl = cvl.at[utab[:, l], rowl].set(pair_v.sum(0))
+        ck.append(ckl)
+        cv.append(cvl)
+        if l < len(pool.ck):
+            base = rowl & ~1
+            pair_k = jnp.stack([ckl[utab[:, l], base],
+                                ckl[utab[:, l], base + 1]])
+            pair_v = jnp.stack([cvl[utab[:, l], base],
+                                cvl[utab[:, l], base + 1]])
+    return PagedH1DCache(k=k, v=v, ck=tuple(ck), cv=tuple(cv))
+
+
+def decode_attend_paged(pool: PagedH1DCache, q, t, bidx, *, nr: int,
+                        softmax_scale=None, impl: str = "jnp") -> jnp.ndarray:
+    """Paged batched single-token attention.  ``q``: (R, G, D); ``t``:
+    (R,) global positions; ``bidx``: (R, 2 + levels) physical page rows
+    (see :class:`PageTables`).  Same bands, masks and single-max
+    weighted-LSE combine as ``decode_attend`` -- the page tables only
+    relocate the block reads."""
+    if impl != "jnp":
+        dk, interpret = _decode_kernels(impl)
+        return dk.decode_attend_paged(pool, q, t, bidx, nr=nr,
+                                      softmax_scale=softmax_scale,
+                                      interpret=interpret)
+    f32 = jnp.float32
+    R, G, D = q.shape
+    scale = softmax_scale if softmax_scale is not None else 1 / math.sqrt(D)
+    qs = q.astype(f32) * scale
+    t = jnp.asarray(t, jnp.int32)
+    bidx = jnp.asarray(bidx, jnp.int32)
+    M = 1 + len(pool.ck)
+
+    logits, values, weights = [], [], []
+
+    def band(keys, vals, mask, wgt):
+        s = jnp.einsum("bgd,bkd->bgk", qs, keys.astype(f32),
+                       preferred_element_type=f32)
+        logits.append(jnp.where(mask[:, None, :], s, NEG_INF))
+        values.append(vals.astype(f32))
+        weights.append(jnp.where(mask, wgt, 0.0))
+
+    blk0 = t // nr
+    pos = blk0[:, None] * nr + jnp.arange(nr)[None, :]
+    ones = jnp.ones((R, nr), f32)
+    band(pool.k[bidx[:, 0]], pool.v[bidx[:, 0]], pos <= t[:, None], ones)
+    band(pool.k[bidx[:, 1]], pool.v[bidx[:, 1]],
+         jnp.broadcast_to((blk0 >= 1)[:, None], (R, nr)), ones)
+    for l in range(1, M):
+        span = nr << l
+        Il = t // span
+        first_half_q = (t % span) < (span // 2)
+        key_last_half = jnp.arange(nr) >= nr // 2
+        mask = (Il >= 1)[:, None] & ~(first_half_q[:, None]
+                                      & key_last_half[None, :])
+        band(pool.ck[l - 1][bidx[:, 1 + l]], pool.cv[l - 1][bidx[:, 1 + l]],
+             mask, jnp.full((R, nr), float(1 << l), f32))
+
+    s = jnp.concatenate(logits, axis=-1)                  # (R, G, K)
+    vcat = jnp.concatenate(values, axis=-2)               # (R, K, Dv)
+    wcat = jnp.concatenate(weights, axis=-1)              # (R, K)
+    m = jnp.maximum(s.max(-1, keepdims=True), -1e30)
+    a = jnp.exp(s - m)
+    num = jnp.einsum("bgk,bkv->bgv", a, vcat)
+    den = jnp.einsum("bgk,bk->bg", a, wcat)
+    return (num / jnp.maximum(den, 1e-9)[..., None]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # uniform-position fast path (single-sequence / long-context decode)
 # ---------------------------------------------------------------------------
 # When every batch row decodes the same position (B=1 with kv-heads folded,

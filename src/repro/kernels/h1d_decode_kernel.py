@@ -25,6 +25,14 @@ rows with kv-heads folded in, the ``core.h1d_decode`` cache layout):
 Both kernels are bit-faithful to the ``impl='jnp'`` oracle in
 ``core.h1d_decode`` (same masks, same single-max softmax, same pairwise
 mean/sum order); ``tests/test_decode_kernel.py`` sweeps the parity.
+
+Two PAGED variants (:func:`decode_attend_paged` /
+:func:`update_cache_paged`) serve the block-pool cache of
+``serve/paged_cache.py``: same bodies, same single-launch structure, but
+the BlockSpec index maps read physical page rows from one
+scalar-prefetched indirection table per level (the host walks the page
+tables; the kernels never see logical block indices).  Two SP variants
+(``*_partial``) serve sequence-sharded caches (DESIGN.md section 7).
 """
 from __future__ import annotations
 
@@ -344,6 +352,141 @@ def update_cache_fused(cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
     ck = tuple(outs[2 + 2 * i] for i in range(nlev - 1))
     cv = tuple(outs[3 + 2 * i] for i in range(nlev - 1))
     return type(cache)(k=outs[0], v=outs[1], ck=ck, cv=cv)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (scalar-prefetched page-table indirection)
+# ---------------------------------------------------------------------------
+
+def _attend_paged_kernel(t_ref, bidx_ref, *rest, **kw):
+    """Paged variant of :func:`_attend_kernel`: the body is IDENTICAL --
+    masks and the weighted-LSE combine depend only on the global
+    position ``t`` -- the page indirection lives entirely in the
+    BlockSpec index maps, which read physical page rows from the
+    scalar-prefetched ``bidx`` table instead of computing block indices
+    from ``t``."""
+    return _attend_kernel(t_ref, *rest, **kw)
+
+
+def decode_attend_paged(pool, q: jnp.ndarray, t: jnp.ndarray,
+                        bidx: jnp.ndarray, *, nr: int, softmax_scale=None,
+                        interpret: bool = False) -> jnp.ndarray:
+    """Fused single-token attention over a PAGED hierarchical KV pool.
+
+    ``pool`` is a ``core.h1d_decode.PagedH1DCache``: per level a pool of
+    ``nr``-row pages, fine ``k``/``v`` (NP0, nr, D/Dv) and coarse
+    ``ck[l-1]``/``cv[l-1]`` (NP_l, nr, ...).  ``q``: (R, G, D); ``t``:
+    (R,) global positions; ``bidx``: (R, 2 + levels) int32 physical page
+    rows -- column 0 the own level-0 page, column 1 the previous level-0
+    page, column 1+l the level-l page ``I_l - 1`` (host-side page-table
+    walk; invalid bands carry any in-range page, the in-kernel masks
+    zero them exactly like the dense kernel).  ONE launch on the (R,)
+    grid, one ``nr``-row HBM read per band -- the dense cache's
+    ``decode_attend_fused`` contract, with the block-index maps
+    generalized to one scalar-prefetched indirection table per level.
+    """
+    hc = _hc()
+    R, G, D = q.shape
+    Dv = pool.v.shape[-1]
+    levels = len(pool.ck)
+    nbands = 2 + levels
+    assert bidx.shape == (R, nbands), (bidx.shape, R, nbands)
+    scale = softmax_scale if softmax_scale is not None else 1 / math.sqrt(D)
+
+    def band_map(band):
+        return lambda r, tref, bref: (bref[r, band], 0, 0)
+
+    maps = [band_map(b) for b in range(nbands)]
+    k_arrs = [pool.k, pool.k] + list(pool.ck)
+    v_arrs = [pool.v, pool.v] + list(pool.cv)
+
+    in_specs = [pl.BlockSpec((1, G, D), lambda r, tref, bref: (r, 0, 0))]
+    in_specs += [pl.BlockSpec((1, nr, D), mp) for mp in maps]
+    in_specs += [pl.BlockSpec((1, nr, Dv), mp) for mp in maps]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(R,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, G, Dv), lambda r, tref, bref: (r, 0, 0)),
+    )
+    kernel = functools.partial(_attend_paged_kernel, nr=nr, nbands=nbands,
+                               scale=float(scale), neg_inf=hc.NEG_INF)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, G, Dv), jnp.float32),
+        interpret=interpret,
+    )(t.astype(jnp.int32), bidx.astype(jnp.int32), q, *k_arrs, *v_arrs)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# paged ancestor update
+# ---------------------------------------------------------------------------
+
+def _update_paged_kernel(t_ref, utab_ref, *rest, **kw):
+    """Paged variant of :func:`_update_kernel`: identical body (the
+    within-pair row select and the carried mean/sum use only ``t``);
+    the sibling-pair location comes from the prefetched ``utab`` page
+    table via the BlockSpec index maps."""
+    return _update_kernel(t_ref, *rest, **kw)
+
+
+def update_cache_paged(pool, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                       t: jnp.ndarray, utab: jnp.ndarray, *,
+                       interpret: bool = False):
+    """Fused batched append into a PAGED hierarchical KV pool.
+
+    ``k_new``: (R, D), ``v_new``: (R, Dv), ``t``: (R,) global positions,
+    ``utab``: (R, 1 + levels) int32 physical page rows -- column ``l``
+    is the page holding the token's level-l ancestor row ``t >> l``
+    (the engine COWs / allocates these pages before the tick, and points
+    inactive rows at a per-level trash page so their writes are inert).
+    Within the page the sibling pair sits at local pair index
+    ``(t >> (l+1)) mod (nr/2)``.  Every pool operand is aliased
+    input->output (in-place scatter), same as ``update_cache_fused``."""
+    R, D = k_new.shape
+    Dv = v_new.shape[-1]
+    nr = pool.k.shape[-2]
+    nlev = 1 + len(pool.ck)
+    assert utab.shape == (R, nlev), (utab.shape, R, nlev)
+
+    arrs, in_specs, out_specs, out_shape = [], [], [], []
+    lvls = [(pool.k, pool.v)] + list(zip(pool.ck, pool.cv))
+    for l, (ka, va) in enumerate(lvls):
+
+        def pair_map(r, tref, uref, l=l):
+            return (uref[r, l], (tref[r] >> (l + 1)) & (nr // 2 - 1), 0)
+
+        for a, d_ in ((ka, D), (va, Dv)):
+            arrs.append(a)
+            in_specs.append(pl.BlockSpec((1, 2, d_), pair_map))
+            out_specs.append(pl.BlockSpec((1, 2, d_), pair_map))
+            out_shape.append(jax.ShapeDtypeStruct(a.shape, a.dtype))
+
+    row_map = lambda r, tref, uref: (r, 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(R,),
+        in_specs=[pl.BlockSpec((1, D), row_map),
+                  pl.BlockSpec((1, Dv), row_map)] + in_specs,
+        out_specs=tuple(out_specs),
+    )
+    # call args: (t, utab, k_new, v_new, *arrs) -> pool operands start
+    # at index 4
+    aliases = {4 + i: i for i in range(2 * nlev)}
+    kernel = functools.partial(_update_paged_kernel, nlev=nlev)
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=tuple(out_shape),
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(t.astype(jnp.int32), utab.astype(jnp.int32), k_new, v_new, *arrs)
+    ck = tuple(outs[2 + 2 * i] for i in range(nlev - 1))
+    cv = tuple(outs[3 + 2 * i] for i in range(nlev - 1))
+    return type(pool)(k=outs[0], v=outs[1], ck=ck, cv=cv)
 
 
 # ---------------------------------------------------------------------------

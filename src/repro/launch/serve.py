@@ -38,6 +38,23 @@ def main(argv=None):
                          "hierarchical KV cache over an N-way 'data' "
                          "axis and run the fused decode kernels per "
                          "shard (shard_map halo exchange)")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the paged hierarchical cache pool "
+                         "(prefix sharing + copy-on-write + preemption; "
+                         "serve/paged_cache.py) instead of one dense "
+                         "max-len cache per slot")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="paged pool size in nr-row level-0 pages "
+                         "(default: dense-equivalent slots*Lmax/nr)")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="continuous-batching per-tick token budget "
+                         "(decode slots + admitted prefill chunks)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="admit long prompts on their first N tokens; "
+                         "the tail streams through decode ticks")
+    ap.add_argument("--lookahead", type=int, default=0,
+                    help="admission skip-ahead window past a "
+                         "head-of-queue that does not fit")
     args = ap.parse_args(argv)
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
@@ -49,7 +66,10 @@ def main(argv=None):
         mesh = make_mesh((args.sp_data,), ("data",))
     eng = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
                       greedy=not args.sample, decode_impl=args.decode_impl,
-                      mesh=mesh)
+                      mesh=mesh, paged=args.paged, pool_pages=args.pool_pages,
+                      token_budget=args.token_budget,
+                      prefill_chunk=args.prefill_chunk,
+                      lookahead=args.lookahead)
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):
@@ -65,6 +85,10 @@ def main(argv=None):
     total = sum(len(r.out_tokens) for r in reqs)
     print(f"[serve] {len(reqs)} requests, {total} tokens, {dt:.2f}s "
           f"({total/dt:.1f} tok/s)")
+    if args.paged:
+        st = eng.pool.stats
+        print(f"[serve] paged: shared={st.shared_maps} cow={st.cow_copies} "
+              f"evict={st.evictions} preempt={eng.preemptions}")
     return reqs
 
 

@@ -221,9 +221,15 @@ def init_decode_cache(cfg: ModelConfig, B: int, Lmax: int, *, layer_global=True,
     }
 
 
-def attn_decode(p, cfg: ModelConfig, x, t, cache, *, layer_global=True):
+def attn_decode(p, cfg: ModelConfig, x, t, cache, *, layer_global=True,
+                page_tables=None):
     """Single-token decode.  x: (B, 1, d); t: (B,) current position.
-    Returns (out (B, 1, d), new_cache)."""
+    Returns (out (B, 1, d), new_cache).
+
+    ``page_tables`` (``core.h1d_decode.PageTables``) switches the h1d
+    path to the PAGED cache pool: ``cache`` is then a ``PagedH1DCache``
+    of nr-row pages and the per-tick indirection tables route every
+    block read/write (serve/paged_cache.py builds them host-side)."""
     B = x.shape[0]
     hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     G = hq // hkv
@@ -235,7 +241,13 @@ def attn_decode(p, cfg: ModelConfig, x, t, cache, *, layer_global=True):
 
     if cfg.attention == "h1d" and not local:
         impl = cfg.decode_impl
-        if B == 1:
+        if page_tables is not None:
+            tt = jnp.repeat(t, hkv, axis=0)
+            cache = h1d_decode.update_cache_paged(
+                cache, k1, v1, tt, page_tables.update, impl=impl)
+            z = h1d_decode.decode_attend_paged(
+                cache, q1, tt, page_tables.attend, nr=cfg.nr, impl=impl)
+        elif B == 1:
             # uniform-position fast path: scalar t keeps the jnp cache
             # reads as dynamic-slices on the sharded sequence dim (P21);
             # the kernel path specializes the same fused kernel to a

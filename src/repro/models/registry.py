@@ -24,7 +24,11 @@ class ModelFns(NamedTuple):
                             #   (B,) vector for batched in-bucket
                             #   admission) when tokens are right-padded
                             #   to a length bucket
-    decode_step: Callable   # (params, cfg, caches, token, t) -> (logits, caches)
+    decode_step: Callable   # (params, cfg, caches, token, t) -> (logits,
+                            #   caches); decoder-only stacks also accept
+                            #   page_tables= (core.h1d_decode.PageTables)
+                            #   to run h1d layers on the paged serve
+                            #   cache pool (serve/paged_cache.py)
     init_caches: Callable   # (params, cfg, B, Lmax) -> caches
 
 

@@ -317,13 +317,15 @@ def _block_prefill(p, cfg, kind, h, positions, Lmax, *, layer_global=True):
     return h + m, cache
 
 
-def _block_decode(p, cfg, kind, h, t, cache, *, layer_global=True):
+def _block_decode(p, cfg, kind, h, t, cache, *, layer_global=True,
+                  page_tables=None):
     if kind == "ssm":
         out, st = mamba2_decode(p["mixer"], cfg, rmsnorm_apply(p["ln"], h),
                                 cache)
         return h + out, st
     a, cache = attn_decode(p["attn"], cfg, rmsnorm_apply(p["ln1"], h), t,
-                           cache, layer_global=layer_global)
+                           cache, layer_global=layer_global,
+                           page_tables=page_tables)
     h = h + a
     if kind == "moe":
         m, _ = moe_apply(p["moe"], cfg, rmsnorm_apply(p["ln2"], h),
@@ -405,9 +407,16 @@ def lm_prefill(params, cfg: ModelConfig, tokens, Lmax: int, *,
     return logits, caches, next_pos
 
 
-def lm_decode_step(params, cfg: ModelConfig, caches, token, t):
+def lm_decode_step(params, cfg: ModelConfig, caches, token, t, *,
+                   page_tables=None):
     """One decode step.  token: (B,) int32; t: (B,) positions.
-    Returns (logits (B, V), new_caches)."""
+    Returns (logits (B, V), new_caches).
+
+    ``page_tables`` (``core.h1d_decode.PageTables``) switches the h1d
+    attention layers onto the paged cache pool (``caches`` leaves are
+    then ``PagedH1DCache`` pools); every layer writes the same
+    positions, so ONE table pair serves the whole stack and rides
+    through the layer scan as a closure, not a scanned operand."""
     B = token.shape[0]
     h = _embed_tokens(params, cfg, token[:, None])
 
@@ -416,7 +425,8 @@ def lm_decode_step(params, cfg: ModelConfig, caches, token, t):
 
         def body(hh, xs):
             lp, cache = xs
-            hh, cache = _block_decode(lp, cfg, kind, hh, t, cache)
+            hh, cache = _block_decode(lp, cfg, kind, hh, t, cache,
+                                      page_tables=page_tables)
             return hh, cache
 
         h, caches = jax.lax.scan(body, h, (params["layers"], caches))
@@ -431,7 +441,8 @@ def lm_decode_step(params, cfg: ModelConfig, caches, token, t):
                   if stacked else params["layers"][i])
             kind = block_kind(cfg, i)
             h, cache = _block_decode(lp, cfg, kind, h, t, caches[ci],
-                                     layer_global=cfg.layer_uses_global_attn(i))
+                                     layer_global=cfg.layer_uses_global_attn(i),
+                                     page_tables=page_tables)
             new_caches.append(cache)
             ci += 1
             if cfg.family == "hybrid" and cfg.layer_is_attn(i):

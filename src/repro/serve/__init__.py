@@ -1,2 +1,4 @@
-"""Batched serving engine with hierarchical KV caches."""
+"""Batched serving engine with hierarchical KV caches (dense slot
+cache or paged cache pool + continuous-batching scheduler)."""
 from .engine import ServeEngine, Request
+from .scheduler import ContinuousBatchingScheduler, QueueEntry

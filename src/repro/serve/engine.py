@@ -1,18 +1,25 @@
-"""Batched serving engine: fixed-slot continuous batching over the
-unified model API (prefill + single-token decode with hierarchical KV
-caches).
+"""Batched serving engine: continuous batching over the unified model
+API (prefill + single-token decode with hierarchical KV caches).
 
 Design points for scale (DESIGN.md):
 * decode state is a pure pytree -- slots join/leave by writing rows, the
   jit'd step never retraces;
+* admission is planned per tick by a continuous-batching scheduler
+  (``serve/scheduler.py``): per-tick token budget, chunked prefill
+  (long prompts stream their tail through the regular decode ticks),
+  bounded lookahead past a head-of-queue that does not fit, and
+  requeue-on-preemption -- with the default knobs reproducing the
+  legacy FIFO bucket grouping exactly;
 * admission pads prompts to power-of-two length buckets, so prefill
   compiles O(log max_len) shapes, not one per distinct prompt length,
-  and admits ALL queued requests sharing a bucket in one batched
+  and admits ALL planned requests sharing a bucket in one batched
   prefill call (per-row ``true_len``, row count padded to a power of
   two) so admission cost amortizes under load while the prefill jit
   cache stays O(log slots * log max_len);
 * prompts longer than ``max_len - 1`` are rejected (or tail-truncated)
   at ``submit`` -- see ``ServeEngine.overflow``;
+* generation ends at ``max_new_tokens``, a full cache, or any of the
+  request's ``stop_tokens`` (the stop token is kept in ``out_tokens``);
 * finished slots are frozen (their ``pos`` stops advancing) so the
   clamped cache writes of an idle slot never walk out of range;
 * per-tick bookkeeping reads a host-side numpy mirror of the slot
@@ -22,6 +29,12 @@ Design points for scale (DESIGN.md):
   with ``decode_impl='pallas'`` the whole tick's attend runs as ONE
   fused kernel launch (and the ancestor update as one more), so
   long-context decode cost is flat in practice;
+* ``paged=True`` swaps the per-slot dense cache for the PAGED pool
+  (``serve/paged_cache.py``): HBM is bounded by ``pool_pages``, not
+  ``slots * max_len``, pages are prefix-shared across requests with
+  copy-on-write, and pool exhaustion preempts the newest request
+  (requeued; swap-mode page snapshots restore it bit-exact) instead of
+  failing -- the dense slot path stays as the bit-parity oracle;
 * the engine is deployment-shaped (request queue, slot map, step loop)
   while staying single-host here; the multi-pod serve driver shards the
   slot dim over DP axes (launch/serve.py).
@@ -29,13 +42,14 @@ Design points for scale (DESIGN.md):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import ModelConfig, get_model
+from .scheduler import ContinuousBatchingScheduler, QueueEntry
 
 
 @dataclasses.dataclass
@@ -43,6 +57,7 @@ class Request:
     uid: int
     prompt: np.ndarray           # (S,) int32
     max_new_tokens: int = 32
+    stop_tokens: Optional[Sequence[int]] = None
     out_tokens: Optional[List[int]] = None
 
 
@@ -65,12 +80,28 @@ class ServeEngine:
     (``repro.parallel.sp_attention``) -- the configuration that used to
     force ``impl='jnp'``.  Requires ``attention='h1d'`` and a padded
     ``max_len`` of at least ``data_axis_size * nr`` (one level-0 block
-    per shard)."""
+    per shard).
+
+    ``paged=True`` serves from the paged hierarchical cache pool
+    (``serve/paged_cache.py``): per-layer pools of ``pool_pages``
+    nr-row pages (plus proportionally sized coarse-level pools) replace
+    the ``slots * max_len`` dense slabs.  Requires ``attention='h1d'``
+    without sliding-window layers and is host-local (``mesh`` must be
+    None).  ``prefix_sharing`` maps bit-identical prompt-prefix pages
+    (and their coarse ancestors) once across requests, copy-on-write.
+    ``token_budget`` / ``lookahead`` / ``prefill_chunk`` tune the
+    continuous-batching scheduler for either path."""
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 8,
                  max_len: int = 512, greedy: bool = True, seed: int = 0,
                  overflow: str = "error", decode_impl: Optional[str] = None,
-                 mesh=None, sp_axis: str = "data"):
+                 mesh=None, sp_axis: str = "data", paged: bool = False,
+                 pool_pages: Optional[int] = None, prefix_sharing: bool = True,
+                 token_budget: Optional[int] = None, lookahead: int = 0,
+                 prefill_chunk: Optional[int] = None,
+                 preempt_mode: str = "swap"):
+        if preempt_mode not in ("swap", "recompute"):
+            raise ValueError(f"unknown preempt_mode {preempt_mode!r}")
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "ServeEngine targets decoder-only families; enc-dec serving "
@@ -90,6 +121,7 @@ class ServeEngine:
         self.greedy = greedy
         self.key = jax.random.PRNGKey(seed)
         self._slot_axis = 1 if _stacked_caches(cfg) else 0
+        self._stacked = _stacked_caches(cfg)
 
         self.mesh = mesh
         self.sp_axis = sp_axis
@@ -108,7 +140,38 @@ class ServeEngine:
                     f"'{sp_axis}' axis; use fewer shards or a longer "
                     f"max_len")
 
-        self.caches = self.fns.init_caches(params, cfg, slots, max_len)
+        self.sched = ContinuousBatchingScheduler(
+            token_budget=token_budget, lookahead=lookahead,
+            prefill_chunk=prefill_chunk)
+
+        self.paged = paged
+        self.pool = None
+        if paged:
+            from . import paged_cache as pc
+            if mesh is not None:
+                raise ValueError("paged serving is host-local: the page "
+                                 "tables are host state; use either "
+                                 "paged=True or mesh=, not both")
+            if (cfg.attention != "h1d" or cfg.sliding_window > 0
+                    or cfg.global_every > 0
+                    or cfg.family not in ("dense", "moe", "vlm")):
+                raise ValueError(
+                    "paged serving requires a uniform h1d attention stack "
+                    f"(family={cfg.family!r}, attention={cfg.attention!r}, "
+                    f"sliding_window={cfg.sliding_window}, "
+                    f"global_every={cfg.global_every})")
+            self._pc = pc
+            from repro.core import hierarchy as hc
+            Lp = hc.padded_length(max_len, cfg.nr)
+            if pool_pages is None:
+                pool_pages = slots * (Lp // cfg.nr)   # dense-equivalent
+            self.pool = pc.PagePool(slots=slots, max_len=max_len,
+                                    nr=cfg.nr, pool_pages=pool_pages)
+            self.prefix_sharing = prefix_sharing
+            self.preempt_mode = preempt_mode
+            self.caches = pc.init_paged_caches(cfg, self.pool)
+        else:
+            self.caches = self.fns.init_caches(params, cfg, slots, max_len)
         self.tokens = jnp.zeros((slots,), jnp.int32)
         self.pos = jnp.zeros((slots,), jnp.int32)
         # host-side mirror of ``pos``: the decode loop reads positions
@@ -117,9 +180,16 @@ class ServeEngine:
         self.pos_host = np.zeros((slots,), np.int64)
         self.active = np.zeros((slots,), bool)
         self.req: List[Optional[Request]] = [None] * slots
-        # queued (request, admitted-prompt) pairs: the prompt copy may be
-        # tail-truncated (overflow='truncate') without touching req.prompt
-        self.queue: List[Tuple[Request, np.ndarray]] = []
+        # chunked prefill: tokens still to stream through decode ticks
+        # per slot (outputs discarded while non-empty)
+        self.feed: List[List[int]] = [[] for _ in range(slots)]
+        # admission prompt per slot (preemption rebuilds the resume
+        # prompt from it) and admission serial (preemption victim order)
+        self._admitted: List[Optional[np.ndarray]] = [None] * slots
+        self._admit_serial: Dict[int, int] = {}
+        self._serial = 0
+        self.preemptions = 0
+        self.queue: List[QueueEntry] = []
 
         # Prompt length bucketing: right-pad prompts to the next power of
         # two (capped at max_len) so _prefill1 compiles O(log max_len)
@@ -145,11 +215,15 @@ class ServeEngine:
             with sp_scope(self.mesh, self.sp_axis):
                 return self.fns.decode_step(p, cfg, c, tok, t)
 
+        def _decode_paged_traced(p, c, tok, t, tabs):
+            return self.fns.decode_step(p, cfg, c, tok, t, page_tables=tabs)
+
         def _prefill_traced(p, batch, n):
             with sp_scope(self.mesh, self.sp_axis):
                 return self.fns.prefill(p, cfg, batch, max_len, true_len=n)
 
-        self._decode = jax.jit(_decode_traced)
+        self._decode = jax.jit(_decode_paged_traced if paged
+                               else _decode_traced)
         self._prefill1 = jax.jit(_prefill_traced)
 
     # ------------------------------------------------------------------
@@ -174,7 +248,7 @@ class ServeEngine:
                     f"the prompt or construct the engine with "
                     f"overflow='truncate'")
         req.out_tokens = []
-        self.queue.append((req, prompt))
+        self.queue.append(QueueEntry(req=req, prompt=prompt))
 
     def _bucket_len(self, S: int) -> int:
         """Padded prompt length: next power of two capped at max_len
@@ -183,58 +257,106 @@ class ServeEngine:
             return S
         return max(S, min(1 << max(S - 1, 0).bit_length(), self.max_len))
 
+    def _stopped(self, req: Request, tok: int) -> bool:
+        return bool(req.stop_tokens) and tok in req.stop_tokens
+
+    # -- admission -----------------------------------------------------
+    def _can_admit_fn(self) -> Callable[[QueueEntry], bool]:
+        """Admission feasibility for the scheduler.  The paged probe
+        commits its per-level net page need on success, so entries
+        planned earlier in the SAME tick count against later ones (the
+        scheduler only calls it once per picked entry)."""
+        if not self.paged:
+            return lambda e: True
+        planned = [0] * self.pool.M
+
+        def can(e: QueueEntry) -> bool:
+            chunk = e.prompt[:self.sched.chunk_len(len(e.prompt))]
+            need = self.pool.net_need(np.asarray(chunk, np.int32),
+                                      share=self.prefix_sharing)
+            if all(need[l] + planned[l] <= self.pool.available(l)
+                   for l in range(self.pool.M)):
+                for l in range(self.pool.M):
+                    planned[l] += need[l]
+                return True
+            return False
+
+        return can
+
     def _admit(self):
-        """Prefill queued requests into free slots.  Requests are taken
-        in FIFO order and grouped by padded-length bucket: every queued
-        request sharing the head-of-queue's bucket (up to the number of
-        free slots) prefills in ONE batched ``_prefill1`` call with a
-        per-row ``true_len`` vector, so admission under load costs one
-        forward per bucket instead of one per request.  The row count is
+        """Plan this tick's admissions with the scheduler and run one
+        batched prefill per planned bucket group.  Swap-preempted
+        entries restore first (no prefill needed, their pages scatter
+        straight back), scanned over the same lookahead window."""
+        free = [s for s in range(self.slots) if not self.active[s]]
+        if not free or not self.queue:
+            return
+        j = 0
+        while free and j < min(len(self.queue), self.sched.lookahead + 1):
+            entry = self.queue[j]
+            if entry.restore is not None and self._try_restore(entry,
+                                                               free[0]):
+                free.pop(0)
+                self.queue.pop(j)
+            else:
+                j += 1
+        if not free or not self.queue:
+            return
+        can = self._can_admit_fn()
+        groups, self.queue = self.sched.plan(
+            self.queue, len(free), int(self.active.sum()),
+            self._bucket_len,
+            lambda e: e.restore is None and can(e))
+        for group in groups:
+            self._admit_group(group, free)
+
+    def _admit_group(self, group, free: List[int]):
+        """One batched prefill: every entry in ``group`` shares the
+        padded chunk-length bucket ``group.bucket``.  The row count is
         padded to a power of two as well (dummy rows discarded), keeping
         the prefill jit cache at O(log slots * log max_len) shapes."""
-        while self.queue:
-            free = [s for s in range(self.slots) if not self.active[s]]
-            if not free:
+        g = len(group.entries)
+        Lb = group.bucket
+        gp = 1 << (g - 1).bit_length()       # pow2 row count
+        prompts = np.zeros((gp, Lb), np.int32)
+        ns = np.ones((gp,), np.int32)        # dummy rows: true_len 1
+        for i, chunk in enumerate(group.chunks):
+            prompts[i, :len(chunk)] = chunk
+            ns[i] = len(chunk)
+        batch = {"tokens": jnp.asarray(prompts)}
+        logits, caches, pos = self._prefill1(self.params, batch,
+                                             jnp.asarray(ns))
+        dst = free[:g]
+        del free[:g]
+
+        kept = [True] * g
+        if self.paged:
+            kept = self._paged_admit_writes(group, dst, caches)
+            if not any(kept):
                 return
-            Lb = self._bucket_len(len(self.queue[0][1]))
-            group: List[Request] = []
-            plist: List[np.ndarray] = []
-            while (self.queue and len(group) < len(free)
-                   and self._bucket_len(len(self.queue[0][1])) == Lb):
-                r, p = self.queue.pop(0)
-                group.append(r)
-                plist.append(p)
-            g = len(group)
-            gp = 1 << (g - 1).bit_length()       # pow2 row count
-            prompts = np.zeros((gp, Lb), np.int32)
-            ns = np.ones((gp,), np.int32)        # dummy rows: true_len 1
-            for i, p in enumerate(plist):
-                prompts[i, :len(p)] = p
-                ns[i] = len(p)
-            batch = {"tokens": jnp.asarray(prompts)}
-            logits, caches, pos = self._prefill1(self.params, batch,
-                                                 jnp.asarray(ns))
-            dst = free[:g]
-            if self.greedy:
-                nxt = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
-            else:
-                # Sample the first generated token with PER-ROW keys:
-                # one split per batched call, then each row folds in its
-                # DESTINATION SLOT index (dummy pad rows use indices past
-                # the slot range).  A single categorical over the padded
-                # (gp, V) logits drew one gumbel tensor shaped by gp, so
-                # the same request could sample a DIFFERENT first token
-                # depending on how many dummy rows its bucket happened
-                # to get -- sampling must be invariant to padding.
-                self.key, kbase = jax.random.split(self.key)
-                row_ids = jnp.asarray(
-                    np.array(dst + list(range(self.slots,
-                                              self.slots + gp - g)),
-                             np.int32))
-                keys = jax.vmap(jax.random.fold_in, (None, 0))(kbase,
-                                                               row_ids)
-                nxt = np.asarray(jax.vmap(jax.random.categorical)(
-                    keys, logits)).astype(np.int32)
+
+        if self.greedy:
+            nxt = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
+        else:
+            # Sample the first generated token with PER-ROW keys:
+            # one split per batched call, then each row folds in its
+            # DESTINATION SLOT index (dummy pad rows use indices past
+            # the slot range).  A single categorical over the padded
+            # (gp, V) logits drew one gumbel tensor shaped by gp, so
+            # the same request could sample a DIFFERENT first token
+            # depending on how many dummy rows its bucket happened
+            # to get -- sampling must be invariant to padding.
+            self.key, kbase = jax.random.split(self.key)
+            row_ids = jnp.asarray(
+                np.array(dst + list(range(self.slots,
+                                          self.slots + gp - g)),
+                         np.int32))
+            keys = jax.vmap(jax.random.fold_in, (None, 0))(kbase,
+                                                           row_ids)
+            nxt = np.asarray(jax.vmap(jax.random.categorical)(
+                keys, logits)).astype(np.int32)
+
+        if not self.paged:
             # Write the whole group into its slots with ONE tree.map
             # pass (contiguous free slots collapse to a single slice
             # write).  The slot dim (0, or 1 for scanned layer stacks)
@@ -262,36 +384,223 @@ class ServeEngine:
                 return full.at[tuple(idx)].set(one[tuple(src)])
 
             self.caches = jax.tree.map(write, self.caches, caches)
-            # batched token/pos scatter: 2 dispatches per group, not 2g
-            idx = jnp.asarray(np.array(dst, np.int32))
-            self.tokens = self.tokens.at[idx].set(jnp.asarray(nxt[:g]))
-            self.pos = self.pos.at[idx].set(jnp.asarray(ns[:g]))
-            for i, req in enumerate(group):
-                s = dst[i]
-                self.pos_host[s] = int(ns[i])
+        # batched token/pos scatter: 2 dispatches per group, not 2g
+        slot_w: List[int] = []
+        tok_w: List[int] = []
+        pos_w: List[int] = []
+        for i, entry in enumerate(group.entries):
+            if not kept[i]:
+                continue
+            s = dst[i]
+            req = entry.req
+            chunk_n = int(ns[i])
+            self.pos_host[s] = chunk_n
+            self._admitted[s] = entry.prompt
+            slot_w.append(s)
+            pos_w.append(chunk_n)
+            remainder = list(entry.prompt[chunk_n:].tolist())
+            if entry.resume_token is not None:
+                # preemption-resume: the next input was already sampled
+                # before the preemption -- never re-sample it
+                remainder.append(int(entry.resume_token))
+            if remainder:
+                # chunked prefill (or resume): the next input token is
+                # known; the prefill's sampled token is discarded and
+                # the tail streams through the decode ticks
+                tok_w.append(remainder[0])
+                self.feed[s] = remainder[1:]
                 self.req[s] = req
-                req.out_tokens.append(int(nxt[i]))
-                # done-check at admission: the first sampled token may
-                # already satisfy max_new_tokens (or the prompt already
-                # fills the cache) -- the slot then never activates, so
-                # no decode tick is wasted and max_new_tokens is a hard
-                # cap (regression: every request used to get >= 2
-                # tokens).
-                done = (len(req.out_tokens) >= req.max_new_tokens
-                        or int(ns[i]) >= self.max_len - 1)
-                if done:
-                    self.req[s] = None
-                else:
-                    self.active[s] = True
+                self.active[s] = True
+                self._serial += 1
+                self._admit_serial[s] = self._serial
+                continue
+            tok_w.append(int(nxt[i]))
+            self.feed[s] = []
+            self.req[s] = req
+            req.out_tokens.append(int(nxt[i]))
+            # done-check at admission: the first sampled token may
+            # already satisfy max_new_tokens, a stop token, or a full
+            # cache -- the slot then never activates, so no decode tick
+            # is wasted and max_new_tokens is a hard cap (regression:
+            # every request used to get >= 2 tokens).
+            done = (len(req.out_tokens) >= req.max_new_tokens
+                    or chunk_n >= self.max_len - 1
+                    or self._stopped(req, int(nxt[i])))
+            if done:
+                self._release(s)
+            else:
+                self.active[s] = True
+                self._serial += 1
+                self._admit_serial[s] = self._serial
+        idx = jnp.asarray(np.array(slot_w, np.int32))
+        self.tokens = self.tokens.at[idx].set(
+            jnp.asarray(np.array(tok_w, np.int32)))
+        self.pos = self.pos.at[idx].set(
+            jnp.asarray(np.array(pos_w, np.int32)))
 
+    def _paged_admit_writes(self, group, dst, caches) -> List[bool]:
+        """Map pool pages for every entry (prefix-sharing aware) and
+        scatter the freshly prefilled blocks into the registry-missed
+        pages.  An entry the pool cannot hold (availability-estimate
+        races inside one tick) is unwound and requeued at the head.
+        Returns the per-entry kept mask; dense prefill rows keep their
+        original indices, so no remapping is needed for the scatter."""
+        pc = self._pc
+        writes = []
+        kept = [False] * len(group.entries)
+        failed = []
+        for i, (entry, chunk) in enumerate(zip(group.entries,
+                                               group.chunks)):
+            s = dst[i]
+            try:
+                w = self.pool.admit(s, np.asarray(chunk, np.int32),
+                                    share=self.prefix_sharing)
+                writes.append((i, w))
+                kept[i] = True
+            except pc.PoolExhausted:
+                self.pool.release_slot(s)
+                failed.append(entry)
+        # requeue unwound entries as a block, preserving arrival order
+        # (per-entry insert(0, ...) reversed them)
+        self.queue[:0] = failed
+        if writes:
+            self.caches = pc.scatter_prefill(
+                self.caches, caches, writes, self.cfg.num_kv_heads,
+                self.cfg.nr, self._stacked)
+        return kept
+
+    # -- release / preemption ------------------------------------------
+    def _release(self, s: int):
+        """Finish a slot: free paged pages, clear bookkeeping."""
+        self.active[s] = False
+        self.req[s] = None
+        self.feed[s] = []
+        self._admitted[s] = None
+        self._admit_serial.pop(s, None)
+        if self.paged:
+            self.pool.release_slot(s)
+
+    def _preempt(self, victim: int):
+        """Evict a running request from its slot (pool pressure) and
+        requeue it at the HEAD.
+
+        ``preempt_mode='swap'`` (default) snapshots the victim's pages
+        to host memory and restores them bit-exact at re-admission --
+        greedy token streams stay IDENTICAL to the dense engine's.
+        ``'recompute'`` folds generated tokens into a resume prompt and
+        re-prefills on re-admission (no host memory, but the recomputed
+        cache matches the decode-built one only to ~1e-6, so greedy
+        continuations may drift at argmax near-ties); the already
+        sampled next input rides along as ``resume_token`` so non-greedy
+        requests never re-roll it."""
+        req = self.req[victim]
+        base = self._admitted[victim]
+        if self.preempt_mode == "swap":
+            snap = self._pc.snapshot_slot(self.caches, self.pool, victim,
+                                          self.cfg.num_kv_heads,
+                                          self._stacked)
+            tok = int(np.asarray(self.tokens)[victim])
+            entry = QueueEntry(
+                req=req, prompt=base,
+                restore={"pos": int(self.pos_host[victim]), "tok": tok,
+                         "feed": list(self.feed[victim]), "pages": snap})
+        elif req.out_tokens:
+            prompt = np.concatenate(
+                [base, np.asarray(req.out_tokens[:-1], np.int32)])
+            entry = QueueEntry(req=req, prompt=prompt.astype(np.int32),
+                               resume_token=int(req.out_tokens[-1]))
+        else:
+            # recompute mode, still prefilling: redo the whole prompt
+            entry = QueueEntry(req=req, prompt=base)
+        self.queue.insert(0, entry)
+        self._release(victim)
+        self.preemptions += 1
+
+    def _try_restore(self, entry: QueueEntry, s: int) -> bool:
+        """Swap-in a preempted entry into free slot ``s``; False when
+        the pool cannot hold its pages yet."""
+        pc = self._pc
+        snap = entry.restore["pages"]
+        need = {l: len(b) for l, (b, _, _) in snap.items()}
+        if any(n > self.pool.available(l) for l, n in need.items()):
+            return False
+        try:
+            self.caches = pc.restore_slot(self.caches, self.pool, s, snap,
+                                          self.cfg.num_kv_heads,
+                                          self._stacked)
+        except pc.PoolExhausted:       # estimate raced; unwind
+            self.pool.release_slot(s)
+            return False
+        self.req[s] = entry.req
+        self._admitted[s] = entry.prompt
+        self.feed[s] = list(entry.restore["feed"])
+        self.pos_host[s] = entry.restore["pos"]
+        idx = jnp.asarray(np.array([s], np.int32))
+        self.tokens = self.tokens.at[idx].set(int(entry.restore["tok"]))
+        self.pos = self.pos.at[idx].set(int(entry.restore["pos"]))
+        self.active[s] = True
+        self._serial += 1
+        self._admit_serial[s] = self._serial
+        return True
+
+    def _paged_prepare(self):
+        """Allocate / COW this tick's write-set pages for every active
+        slot, preempting the newest request on pool exhaustion."""
+        pc = self._pc
+        copies: Dict[int, List[Tuple[int, int]]] = {}
+
+        def flush():
+            # preemption snapshots read self.caches: pending COW /
+            # zero-init copies (possibly the victim's own) must land
+            # first or the snapshot captures stale page bytes
+            nonlocal copies
+            if copies:
+                self.caches = pc.apply_copies(self.caches, copies,
+                                              self.cfg.num_kv_heads,
+                                              self._stacked)
+                copies = {}
+
+        order = sorted((serial, s) for s, serial in
+                       self._admit_serial.items())
+        for _, s in order:
+            if not self.active[s]:
+                continue
+            while True:
+                try:
+                    self.pool.prepare_tick(s, int(self.pos_host[s]),
+                                           copies)
+                    break
+                except pc.PoolExhausted:
+                    victim = self.sched.choose_victim(self._admit_serial)
+                    if victim == s and len(self._admit_serial) == 1:
+                        raise RuntimeError(
+                            "page pool exhausted with a single active "
+                            "request; increase pool_pages") from None
+                    flush()
+                    self._preempt(victim)
+                    if victim == s:    # newest == self: requeued, move on
+                        break
+        flush()
+
+    # -- tick ----------------------------------------------------------
     def step(self) -> int:
         """One engine tick: admit + one decode step for all active slots.
         Returns number of active slots."""
         self._admit()
         if not self.active.any():
             return 0
-        logits, self.caches = self._decode(self.params, self.caches,
-                                           self.tokens, self.pos)
+        if self.paged:
+            self._paged_prepare()
+            if not self.active.any():        # everything preempted
+                return 0
+            tabs = self.pool.build_tables(self.pos_host, self.active,
+                                          self.cfg.num_kv_heads)
+            logits, self.caches = self._decode(self.params, self.caches,
+                                               self.tokens, self.pos,
+                                               tabs)
+        else:
+            logits, self.caches = self._decode(self.params, self.caches,
+                                               self.tokens, self.pos)
         if self.greedy:
             nxt = jnp.argmax(logits, -1).astype(jnp.int32)
         else:
@@ -307,16 +616,28 @@ class ServeEngine:
         self.pos = self.pos + jnp.asarray(act)
         self.pos_host += act     # mirrors the device update exactly
         nxt_host = np.asarray(nxt)
+        feed_idx: List[int] = []
+        feed_tok: List[int] = []
         for s in range(self.slots):
             if not self.active[s]:
+                continue
+            if self.feed[s]:
+                # chunked prefill in flight: the model just absorbed one
+                # prompt token; the next input is known, logits dropped
+                feed_idx.append(s)
+                feed_tok.append(self.feed[s].pop(0))
                 continue
             req = self.req[s]
             req.out_tokens.append(int(nxt_host[s]))
             done = (len(req.out_tokens) >= req.max_new_tokens
-                    or int(self.pos_host[s]) >= self.max_len - 1)
+                    or int(self.pos_host[s]) >= self.max_len - 1
+                    or self._stopped(req, int(nxt_host[s])))
             if done:
-                self.active[s] = False
-                self.req[s] = None
+                self._release(s)
+        if feed_idx:
+            self.tokens = self.tokens.at[jnp.asarray(
+                np.array(feed_idx, np.int32))].set(
+                jnp.asarray(np.array(feed_tok, np.int32)))
         return int(self.active.sum())
 
     def run(self) -> None:

@@ -1,0 +1,570 @@
+"""Paged hierarchical KV-cache pool: vLLM-style block-pool memory
+management specialized to the H-Matrix cache layout (DESIGN.md
+section 8).
+
+The dense serving cache pins ``Lmax`` rows (plus the coarse pyramid)
+per slot, so HBM -- not FLOPs -- caps concurrency.  This module carves
+every level of the hierarchical cache into PAGES of ``nr`` level-l rows
+and manages them with:
+
+* a host-side allocator (:class:`PagePool`): per-level free lists,
+  per-request page tables, refcounts;
+* hierarchical prefix sharing: a page's content is a pure function of
+  the token prefix up to the end of its span (clamped to the prompt),
+  so a registry keyed by ``(level, block, clamped_len, prefix_hash)``
+  lets requests with a common prompt prefix map the SAME physical pages
+  -- including each shared subtree's ancestor rows, which are pairwise
+  means/sums of the same prefix and therefore bit-identical too;
+* copy-on-write: pages are COW'd lazily on the first divergent write
+  (the per-tick ancestor update touches exactly one page per level --
+  the one whose span contains ``t``), so identical prompts share even
+  their incomplete frontier pages until generation actually diverges;
+* eviction: pages whose refcount drops to zero but that remain in the
+  prefix registry park on an LRU list and are reclaimed on demand;
+* preemption hooks: when the pool is exhausted the engine releases a
+  victim's pages via :func:`PagePool.release_slot` and requeues it
+  (recompute-on-resume, ``serve/scheduler.py``).
+
+Two logical pages per level are reserved: ``ZERO`` (page 0, never
+written -- fresh decode pages are initialized by copying it, which keeps
+paged pools bit-identical to the zero-initialized dense cache) and
+``TRASH`` (page 1 -- inactive engine rows point their update tables at
+it, making their in-kernel writes inert without any extra masking).
+
+Physical layout: a logical page covers all ``Hkv`` kv-head rows of its
+request, so the device pools have ``num_pages * Hkv`` pool rows and
+logical page ``p`` owns rows ``[p*Hkv, (p+1)*Hkv)``; the tick tables
+handed to the kernels are already physical (``page * Hkv + head``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hierarchy as hc
+from repro.core import h1d_decode as hd
+
+
+class PoolExhausted(RuntimeError):
+    """Raised by the allocator when a level's free list and evictable
+    list are both empty; the engine answers with preemption."""
+
+    def __init__(self, level: int):
+        super().__init__(f"page pool exhausted at level {level}")
+        self.level = level
+
+
+ZERO = 0      # reserved all-zeros page (never written)
+TRASH = 1     # reserved write sink for inactive engine rows
+
+
+@dataclasses.dataclass
+class PoolStats:
+    cow_copies: int = 0
+    evictions: int = 0
+    shared_maps: int = 0
+    fresh_pages: int = 0
+
+
+class PagePool:
+    """Host-side allocator for the paged hierarchical cache.
+
+    All bookkeeping is numpy/python -- the device only ever sees the
+    zeroed pools, batched page copies, prefill scatters, and the small
+    per-tick indirection tables.
+    """
+
+    def __init__(self, *, slots: int, max_len: int, nr: int,
+                 pool_pages: int, coarse_pages: Optional[Sequence[int]] = None):
+        self.nr = nr
+        self.Lp = hc.padded_length(max_len, nr)
+        self.M = max(hc.num_levels(self.Lp, nr), 1)   # levels incl. fine
+        self.slots = slots
+        # logical blocks per level: level l rows (Lp >> l) in nr-row pages
+        self.nblocks = [(self.Lp >> l) // nr for l in range(self.M)]
+        if pool_pages < 1:
+            raise ValueError("pool_pages must be >= 1")
+        sizes = [min(pool_pages, slots * self.nblocks[0])]
+        for l in range(1, self.M):
+            if coarse_pages is not None:
+                sizes.append(coarse_pages[l - 1])
+            else:
+                # keep capacity proportional to the fine pool but never
+                # below one page per slot (every request needs >= 1 page
+                # per level regardless of its length)
+                sizes.append(min(max(slots, pool_pages >> l),
+                                 slots * self.nblocks[l]))
+        self.num_pages = [s + 2 for s in sizes]          # + ZERO/TRASH
+        self.free: List[List[int]] = [
+            list(range(n - 1, 1, -1)) for n in self.num_pages]
+        self.refcount = [np.zeros(n, np.int32) for n in self.num_pages]
+        self.table = [np.full((slots, nb), -1, np.int32)
+                      for nb in self.nblocks]
+        # prefix-sharing registry: key -> (level, page); the reverse map
+        # tells a writer whether its exclusively-owned page is still
+        # advertised (and must be unregistered before mutation)
+        self.registry: Dict[tuple, Tuple[int, int]] = {}
+        self.key_of: Dict[Tuple[int, int], tuple] = {}
+        # refcount-0 pages kept alive only by the registry, LRU order
+        self.evictable: "OrderedDict[Tuple[int, int], None]" = OrderedDict()
+        self.stats = PoolStats()
+
+    # -- capacity ------------------------------------------------------
+    def usable(self, l: int) -> int:
+        return self.num_pages[l] - 2
+
+    def used(self, l: int) -> int:
+        ev = sum(1 for (ll, _) in self.evictable if ll == l)
+        return self.usable(l) - len(self.free[l]) - ev
+
+    def available(self, l: int) -> int:
+        """Pages obtainable without preemption (free + evictable)."""
+        return self.usable(l) - self.used(l)
+
+    def occupancy(self) -> float:
+        tot = sum(self.usable(l) for l in range(self.M))
+        return sum(self.used(l) for l in range(self.M)) / max(tot, 1)
+
+    def pages_needed(self, S: int) -> List[int]:
+        """Per-level page count covering an S-token prompt."""
+        return [max(1, -(-S // (self.nr << l))) for l in range(self.M)]
+
+    def net_need(self, tokens: np.ndarray, *,
+                 share: bool = True) -> List[int]:
+        """Per-level page need for this prompt, net of prefix-registry
+        hits (pages an admission would actually have to allocate)."""
+        if not share:
+            return self.pages_needed(len(tokens))
+        return [sum(1 for key in keys if key not in self.registry)
+                for keys in self._span_keys(tokens)]
+
+    def can_admit(self, tokens: np.ndarray, *, share: bool = True) -> bool:
+        """Conservative availability probe: needed-minus-shared per
+        level against free + evictable."""
+        return all(nn <= self.available(l) for l, nn in
+                   enumerate(self.net_need(tokens, share=share)))
+
+    # -- registry / refcount internals ---------------------------------
+    def _span_keys(self, tokens: np.ndarray) -> List[List[tuple]]:
+        """Registry keys for every (level, block) the prompt covers:
+        ``(l, blk, clamped_len, digest)`` where the digest is a CHAINED
+        sha1 over the prefix bytes -- each level hashes the prompt once
+        (O(S) per level, not O(S^2/nr) re-hashes per span), and a
+        cryptographic digest makes a cross-prompt collision (which
+        would silently serve another request's KV pages) a non-event,
+        unlike Python's 64-bit ``hash``."""
+        S = len(tokens)
+        out: List[List[tuple]] = []
+        for l, need in enumerate(self.pages_needed(S)):
+            span = self.nr << l
+            h = hashlib.sha1()
+            keys = []
+            for blk in range(need):
+                n = min((blk + 1) * span, S)
+                h.update(tokens[blk * span:n].tobytes())
+                keys.append((l, blk, n, h.copy().digest()))
+            out.append(keys)
+        return out
+
+    def _alloc(self, l: int) -> int:
+        if self.free[l]:
+            return self.free[l].pop()
+        for key2 in self.evictable:            # LRU: oldest first
+            if key2[0] == l:
+                self._unregister(l, key2[1])
+                self.evictable.pop(key2)
+                self.stats.evictions += 1
+                return key2[1]
+        raise PoolExhausted(l)
+
+    def _unregister(self, l: int, page: int) -> None:
+        key = self.key_of.pop((l, page), None)
+        if key is not None:
+            self.registry.pop(key, None)
+
+    def _map(self, slot: int, l: int, blk: int, page: int) -> None:
+        self.table[l][slot, blk] = page
+        if self.refcount[l][page] == 0:
+            self.evictable.pop((l, page), None)
+        self.refcount[l][page] += 1
+
+    def _decref(self, l: int, page: int) -> None:
+        self.refcount[l][page] -= 1
+        assert self.refcount[l][page] >= 0
+        if self.refcount[l][page] == 0:
+            if (l, page) in self.key_of:
+                self.evictable[(l, page)] = None       # park, reclaimable
+            else:
+                self.free[l].append(page)
+
+    # -- request lifecycle ---------------------------------------------
+    def admit(self, slot: int, tokens: np.ndarray, *,
+              share: bool = True) -> Dict[int, List[Tuple[int, int]]]:
+        """Map pages covering the prompt into ``slot``'s tables.
+
+        Returns per level the ``(block, page)`` pairs that MISSED the
+        prefix registry -- the engine scatters the dense prefill output
+        into exactly those pages (registry hits reuse the existing
+        physical page, content already bit-identical).
+
+        TRANSACTIONAL: on :class:`PoolExhausted` every map AND every
+        registration this call made is rolled back before re-raising.
+        Leaving a failed admission's registrations behind is a
+        correctness bug, not a leak -- the pages' content is only
+        written by the engine's scatter AFTER a successful admit, so a
+        stale key would serve GARBAGE to the next prompt that hashes to
+        it (typically the same request retrying next tick).
+        """
+        assert not (self.table[0][slot] >= 0).any(), "slot not released"
+        span_keys = self._span_keys(tokens) if share else None
+        writes: Dict[int, List[Tuple[int, int]]] = {}
+        placed: List[Tuple[int, int, int, Optional[tuple]]] = []
+        try:
+            for l, need in enumerate(self.pages_needed(len(tokens))):
+                wl = []
+                for blk in range(need):
+                    key = span_keys[l][blk] if share else None
+                    hit = self.registry.get(key) if share else None
+                    if hit is not None:
+                        self._map(slot, l, blk, hit[1])
+                        placed.append((l, blk, hit[1], None))
+                        self.stats.shared_maps += 1
+                    else:
+                        p = self._alloc(l)
+                        self._map(slot, l, blk, p)
+                        self.stats.fresh_pages += 1
+                        wl.append((blk, p))
+                        placed.append((l, blk, p, key))
+                        if share:
+                            self.registry[key] = (l, p)
+                            self.key_of[(l, p)] = key
+                writes[l] = wl
+        except PoolExhausted:
+            for l, blk, p, key in placed:
+                if key is not None:
+                    self._unregister(l, p)
+                self.table[l][slot, blk] = -1
+                self._decref(l, p)
+            raise
+        return writes
+
+    def release_slot(self, slot: int) -> None:
+        """Drop all of a slot's mappings (finish or preemption).
+        Registered pages survive on the evictable LRU for future
+        prefix hits; private pages return to the free lists."""
+        for l in range(self.M):
+            row = self.table[l][slot]
+            for blk in np.nonzero(row >= 0)[0]:
+                self._decref(l, int(row[blk]))
+            row[:] = -1
+
+    def prepare_tick(self, slot: int, t: int,
+                     copies: Dict[int, List[Tuple[int, int]]]) -> None:
+        """Make the write-set of position ``t`` (one page per level: the
+        page whose span contains ``t``) present and private.
+
+        Fresh pages are zero-initialized by a ZERO-page copy; shared
+        pages are COW'd; exclusively-owned pages still advertised in the
+        prefix registry are unregistered (their content is about to
+        change).  Device copies accumulate into ``copies`` (level ->
+        list of (src_page, dst_page)) so a retry after
+        :class:`PoolExhausted` + preemption never loses copies already
+        scheduled."""
+        for l in range(self.M):
+            blk = t // (self.nr << l)
+            p = int(self.table[l][slot, blk])
+            if p < 0:
+                np_ = self._alloc(l)
+                self._map(slot, l, blk, np_)
+                self.stats.fresh_pages += 1
+                copies.setdefault(l, []).append((ZERO, np_))
+            elif self.refcount[l][p] > 1:
+                np_ = self._alloc(l)
+                copies.setdefault(l, []).append((p, np_))
+                self.table[l][slot, blk] = -1
+                self._decref(l, p)
+                self._map(slot, l, blk, np_)
+                self.stats.cow_copies += 1
+            elif (l, p) in self.key_of:
+                self._unregister(l, p)
+
+    # -- per-tick device tables ----------------------------------------
+    def build_tables(self, pos: np.ndarray, active: np.ndarray,
+                     Hkv: int) -> hd.PageTables:
+        """Physical indirection tables for one decode tick.
+
+        ``pos``: (slots,) host positions; ``active``: (slots,) bool.
+        Inactive rows point at TRASH everywhere (attend output is
+        discarded, update writes are inert)."""
+        nr, M = self.nr, self.M
+        R = self.slots * Hkv
+        nbands = 2 + (M - 1)
+        attend = np.full((R, nbands), TRASH * Hkv, np.int32)
+        update = np.full((R, M), TRASH * Hkv, np.int32)
+        heads = np.arange(Hkv, dtype=np.int32)
+        for s in range(self.slots):
+            rows = slice(s * Hkv, (s + 1) * Hkv)
+            attend[rows] += heads[:, None]
+            update[rows] += heads[:, None]
+            if not active[s]:
+                continue
+            t = int(pos[s])
+            b0 = t // nr
+            pages = np.empty((nbands,), np.int32)
+            pages[0] = self.table[0][s, b0]
+            pages[1] = self.table[0][s, b0 - 1] if b0 >= 1 else TRASH
+            for l in range(1, M):
+                Il = t // (nr << l)
+                pages[1 + l] = (self.table[l][s, Il - 1] if Il >= 1
+                                else TRASH)
+            upages = np.array(
+                [self.table[l][s, t // (nr << l)] for l in range(M)],
+                np.int32)
+            assert (pages >= 0).all() and (upages >= 0).all(), \
+                (s, t, pages, upages)
+            attend[rows] = pages[None, :] * Hkv + heads[:, None]
+            update[rows] = upages[None, :] * Hkv + heads[:, None]
+        return hd.PageTables(attend=jnp.asarray(attend),
+                             update=jnp.asarray(update))
+
+
+# ---------------------------------------------------------------------------
+# device-side pool construction and data movement
+# ---------------------------------------------------------------------------
+
+def init_paged_caches(cfg, pool: PagePool):
+    """Model-level paged caches mirroring ``lm_init_decode_caches``:
+    one :class:`~repro.core.h1d_decode.PagedH1DCache` per layer, leaves
+    stacked over layers for scan-able stacks (the engine's slot axis
+    then being 1, as for the dense cache)."""
+    from repro.models.transformer import _stacked_caches
+    Hkv, Dh = cfg.num_kv_heads, cfg.head_dim
+    rows = [n * Hkv for n in pool.num_pages]
+    one = hd.init_paged_pool(rows, pool.nr, Dh, Dh, cfg.jdtype)
+    if _stacked_caches(cfg):
+        return jax.tree.map(
+            lambda x: jnp.zeros((cfg.num_layers,) + x.shape, x.dtype), one)
+    return [one for _ in range(cfg.num_layers)]
+
+
+def _per_level(cache: hd.PagedH1DCache, fn) -> hd.PagedH1DCache:
+    """Apply ``fn(level, k_arr, v_arr) -> (k, v)`` to every level."""
+    k, v = fn(0, cache.k, cache.v)
+    ck, cv = [], []
+    for i, (a, b) in enumerate(zip(cache.ck, cache.cv)):
+        a2, b2 = fn(i + 1, a, b)
+        ck.append(a2)
+        cv.append(b2)
+    return hd.PagedH1DCache(k=k, v=v, ck=tuple(ck), cv=tuple(cv))
+
+
+def _map_layers(caches, stacked: bool, fn):
+    if stacked:
+        return fn(caches)
+    return [fn(c) for c in caches]
+
+
+def apply_copies(caches, copies: Dict[int, List[Tuple[int, int]]],
+                 Hkv: int, stacked: bool):
+    """Batched page copies (COW + zero-init): for each level, one
+    gather/scatter over the expanded physical rows.  ``copies`` maps
+    level -> [(src_page, dst_page)].
+
+    A mid-tick preemption can free a page that already has a pending
+    copy and hand it to a later allocation, which schedules its own
+    copy to the SAME destination -- scatter order over duplicate indices
+    is undefined, so only the LAST copy per destination is kept (the
+    stale one targeted a page its owner no longer holds)."""
+    if not copies:
+        return caches
+    idx = {}
+    for l, pairs in copies.items():
+        last = {d: s for s, d in pairs}          # last writer per dst
+        pairs = [(s, d) for d, s in last.items()]
+        src = np.concatenate([np.arange(Hkv) + s * Hkv for s, _ in pairs])
+        dst = np.concatenate([np.arange(Hkv) + d * Hkv for _, d in pairs])
+        idx[l] = (jnp.asarray(src), jnp.asarray(dst))
+
+    def per_level(l, ka, va):
+        if l not in idx:
+            return ka, va
+        src, dst = idx[l]
+        if stacked:
+            return (ka.at[:, dst].set(ka[:, src]),
+                    va.at[:, dst].set(va[:, src]))
+        return ka.at[dst].set(ka[src]), va.at[dst].set(va[src])
+
+    return _map_layers(caches, stacked,
+                       lambda c: _per_level(c, per_level))
+
+
+def scatter_prefill(caches, dense_caches,
+                    writes: List[Tuple[int, Dict[int, List[Tuple[int, int]]]]],
+                    Hkv: int, nr: int, stacked: bool):
+    """Copy freshly prefilled cache blocks into their allocated pages.
+
+    ``dense_caches``: the group-prefill H1DCache (rows ``gp * Hkv``);
+    ``writes``: per admitted request ``(dense_row_index, level ->
+    [(block, page)])`` as returned by :func:`PagePool.admit`."""
+    idx: Dict[int, Tuple[list, list, list]] = {}
+    for i, per_level_writes in writes:
+        for l, pairs in per_level_writes.items():
+            rows, blks, dst = idx.setdefault(l, ([], [], []))
+            for blk, page in pairs:
+                for h in range(Hkv):
+                    rows.append(i * Hkv + h)
+                    blks.append(blk)
+                    dst.append(page * Hkv + h)
+    if not idx:
+        return caches
+    jidx = {l: tuple(jnp.asarray(np.asarray(a, np.int32)) for a in v)
+            for l, v in idx.items()}
+
+    def per_layer(pool_c, dense_c):
+        dlv = [(dense_c.k, dense_c.v)] + list(zip(dense_c.ck, dense_c.cv))
+
+        def per_level(l, ka, va):
+            if l not in jidx:
+                return ka, va
+            rows, blks, dst = jidx[l]
+            dk, dv = dlv[l]
+
+            def put(pool_arr, dense_arr):
+                if stacked:
+                    NL, Rr, Ll, D = dense_arr.shape
+                    blkd = dense_arr.reshape(NL, Rr, Ll // nr, nr, D)
+                    return pool_arr.at[:, dst].set(blkd[:, rows, blks])
+                Rr, Ll, D = dense_arr.shape
+                blkd = dense_arr.reshape(Rr, Ll // nr, nr, D)
+                return pool_arr.at[dst].set(blkd[rows, blks])
+
+            return put(ka, dk), put(va, dv)
+
+        return _per_level(pool_c, per_level)
+
+    if stacked:
+        return per_layer(caches, dense_caches)
+    return [per_layer(c, d) for c, d in zip(caches, dense_caches)]
+
+
+def snapshot_slot(caches, pool: PagePool, slot: int, Hkv: int,
+                  stacked: bool) -> Dict[int, Tuple[np.ndarray, np.ndarray,
+                                                    np.ndarray]]:
+    """Swap-out a slot's mapped pages to host memory (preemption mode
+    'swap'): per level ``(blocks, k_content, v_content)`` where the
+    content arrays carry all layers (stacked leading dim) and all
+    ``Hkv`` page rows per block -- enough to restore the slot bit-exact
+    later, unlike recompute-resume whose re-prefill only matches the
+    decode-built cache to ~1e-6."""
+    snap: Dict[int, Tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
+    layers = [caches] if stacked else list(caches)
+
+    for l in range(pool.M):
+        blks = np.nonzero(pool.table[l][slot] >= 0)[0]
+        if len(blks) == 0:
+            continue
+        rows = np.concatenate(
+            [np.arange(Hkv) + int(pool.table[l][slot, b]) * Hkv
+             for b in blks])
+        rj = jnp.asarray(rows)
+
+        def lvl_arrays(c):
+            return ((c.k, c.v) if l == 0
+                    else (c.ck[l - 1], c.cv[l - 1]))
+
+        if stacked:
+            ka, va = lvl_arrays(caches)
+            ks = np.asarray(ka[:, rj])
+            vs = np.asarray(va[:, rj])
+        else:
+            ks = np.stack([np.asarray(lvl_arrays(c)[0][rj])
+                           for c in layers])
+            vs = np.stack([np.asarray(lvl_arrays(c)[1][rj])
+                           for c in layers])
+        snap[l] = (blks.astype(np.int64), ks, vs)
+    return snap
+
+
+def restore_slot(caches, pool: PagePool, slot: int, snap, Hkv: int,
+                 stacked: bool):
+    """Swap-in a preempted slot: allocate private pages for every
+    snapshotted block (no registry sharing -- decode-written content is
+    only ~1e-6-equal to a prefill of the same tokens, and restore must
+    be bit-exact), map them, and scatter the saved bytes back.  Raises
+    :class:`PoolExhausted` (caller unwinds with ``release_slot``)."""
+    per_level_rows = {}
+    for l, (blks, _, _) in snap.items():
+        dst = []
+        for b in blks:
+            p = pool._alloc(l)
+            pool._map(slot, l, int(b), p)
+            dst.append(p)
+        per_level_rows[l] = np.concatenate(
+            [np.arange(Hkv) + p * Hkv for p in dst])
+
+    def per_layer(c, li):
+        def per_level(l, ka, va):
+            if l not in snap:
+                return ka, va
+            _, ks, vs = snap[l]
+            dst = jnp.asarray(per_level_rows[l])
+            if stacked:
+                return (ka.at[:, dst].set(jnp.asarray(ks)),
+                        va.at[:, dst].set(jnp.asarray(vs)))
+            return (ka.at[dst].set(jnp.asarray(ks[li])),
+                    va.at[dst].set(jnp.asarray(vs[li])))
+        return _per_level(c, per_level)
+
+    if stacked:
+        return per_layer(caches, 0)
+    return [per_layer(c, li) for li, c in enumerate(caches)]
+
+
+def gather_slot_cache(caches, pool: PagePool, slot: int, Hkv: int,
+                      stacked: bool):
+    """Reconstruct a slot's DENSE H1DCache from its page tables
+    (unmapped blocks read as zeros, exactly the dense engine's initial
+    state).  Used by the parity tests and debugging tooling."""
+    nr, Lp = pool.nr, pool.Lp
+
+    def per_layer(pool_c):
+        lvls = [(pool_c.k, pool_c.v)] + list(zip(pool_c.ck, pool_c.cv))
+        outs = []
+        for l, (ka, va) in enumerate(lvls):
+            Ll = Lp >> l
+            shp = (ka.shape[0], Hkv, Ll, ka.shape[-1]) if stacked else \
+                  (Hkv, Ll, ka.shape[-1])
+            dk = np.zeros(shp, ka.dtype)
+            dv = np.zeros(shp[:-1] + (va.shape[-1],), va.dtype)
+            kh = np.asarray(ka)
+            vh = np.asarray(va)
+            for blk in np.nonzero(pool.table[l][slot] >= 0)[0]:
+                page = int(pool.table[l][slot, blk])
+                rows = slice(page * Hkv, (page + 1) * Hkv)
+                cols = slice(blk * nr, (blk + 1) * nr)
+                if stacked:           # (NL, Hkv, nr, D) pool rows
+                    dk[:, :, cols] = kh[:, rows]
+                    dv[:, :, cols] = vh[:, rows]
+                else:
+                    dk[:, cols] = kh[rows]
+                    dv[:, cols] = vh[rows]
+            outs.append((dk, dv))
+        k, v = outs[0]
+        ck = tuple(o[0] for o in outs[1:])
+        cv = tuple(o[1] for o in outs[1:])
+        return hd.H1DCache(k=jnp.asarray(k), v=jnp.asarray(v),
+                           ck=jax.tree.map(jnp.asarray, ck),
+                           cv=jax.tree.map(jnp.asarray, cv))
+
+    return _map_layers(caches, stacked, per_layer)
+
+
+def pool_bytes(caches) -> int:
+    """Total HBM footprint of the paged pools (all layers/levels)."""
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(caches))

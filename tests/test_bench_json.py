@@ -16,6 +16,7 @@ ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 BASELINES = {
     "BENCH_kernels.json": "kernels",
     "BENCH_decode.json": "decode",
+    "BENCH_serve.json": "serve",
 }
 
 
@@ -44,6 +45,32 @@ def test_bench_json_schema(fname, bench):
         assert isinstance(row["derived"], str)
         names.add(row["name"])
     assert len(names) == len(rows), "duplicate benchmark row names"
+
+
+def test_bench_serve_covers_both_engines():
+    """The serve baseline must keep the dense-vs-paged comparison
+    diffable: throughput + latency per engine, the fixed-HBM
+    concurrency headline, pool counters, and the token-parity guard --
+    and its shape block must pin the workload knobs (incl. the
+    shared-prefix length) so a regenerated baseline with a different
+    workload is visible in the diff."""
+    with open(os.path.join(ROOT, "BENCH_serve.json")) as f:
+        payload = json.load(f)
+    names = {r["name"] for r in payload["rows"]}
+    for want in ("serve_dense_tok_s", "serve_paged_tok_s",
+                 "serve_dense_latency", "serve_paged_latency",
+                 "serve_paged_pool", "serve_concurrency_fixed_hbm",
+                 "serve_paged_token_parity"):
+        assert want in names, want
+    for knob in ("max_len", "nr", "requests", "prefix_len",
+                 "dense_slots", "paged_slots"):
+        assert knob in payload["shape"], knob
+    parity = next(r for r in payload["rows"]
+                  if r["name"] == "serve_paged_token_parity")
+    assert "identical=True" in parity["derived"]
+    ratio = next(r for r in payload["rows"]
+                 if r["name"] == "serve_concurrency_fixed_hbm")
+    assert float(ratio["derived"].split("ratio=")[1].split()[0]) >= 2.0
 
 
 def test_bench_kernels_covers_every_mode():

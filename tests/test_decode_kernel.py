@@ -144,3 +144,89 @@ def test_attn_decode_layer_kernel_path(B):
     for a, b in zip(jax.tree.leaves(cache_j), jax.tree.leaves(cache_k)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# paged (page-table-indexed) kernel variants
+# ---------------------------------------------------------------------------
+
+def _identity_paged(dense, R, Lmax, nr):
+    """Carve a dense cache into an identity-mapped pool: page
+    ``r * nblocks_l + j`` holds row-r's level-l block j, so paged
+    results must equal the dense cache's exactly."""
+    M = hd.hc.num_levels(Lmax, nr)
+    nbl = [(Lmax >> l) // nr for l in range(M)]
+    D, Dv = dense.k.shape[-1], dense.v.shape[-1]
+    pool = hd.PagedH1DCache(
+        k=dense.k.reshape(R * nbl[0], nr, D),
+        v=dense.v.reshape(R * nbl[0], nr, Dv),
+        ck=tuple(a.reshape(R * nbl[l + 1], nr, D)
+                 for l, a in enumerate(dense.ck)),
+        cv=tuple(a.reshape(R * nbl[l + 1], nr, Dv)
+                 for l, a in enumerate(dense.cv)))
+    return pool, nbl
+
+
+def _identity_tables(ts, nbl, nr, M):
+    R = len(ts)
+    bidx = np.zeros((R, 2 + (M - 1)), np.int32)
+    utab = np.zeros((R, M), np.int32)
+    for r, t in enumerate(ts):
+        b0 = t // nr
+        bidx[r, 0] = r * nbl[0] + b0
+        bidx[r, 1] = r * nbl[0] + max(b0 - 1, 0)
+        for l in range(1, M):
+            bidx[r, 1 + l] = r * nbl[l] + max(t // (nr << l) - 1, 0)
+        for l in range(M):
+            utab[r, l] = r * nbl[l] + (t >> l) // nr
+    return jnp.asarray(bidx), jnp.asarray(utab)
+
+
+@pytest.mark.parametrize("Lmax,nr,G", [(256, 16, 1), (128, 8, 4)])
+def test_paged_attend_parity(Lmax, nr, G):
+    """decode_attend_paged (jnp oracle AND fused kernel) == the dense
+    decode_attend on an identity page layout, incl. boundary/quadrant
+    positions and GQA groups."""
+    ts = _interesting_ts(Lmax, nr)
+    R, D = len(ts), 16
+    cache = _cache(R, Lmax, D, D, nr, seed=Lmax)
+    pool, nbl = _identity_paged(cache, R, Lmax, nr)
+    M = hd.hc.num_levels(Lmax, nr)
+    bidx, _ = _identity_tables(ts, nbl, nr, M)
+    q = jax.random.normal(_keys(1, seed=2)[0], (R, G, D))
+    t = jnp.asarray(ts)
+    z_dense = hd.decode_attend(cache, q, t, nr=nr)
+    z_jnp = hd.decode_attend_paged(pool, q, t, bidx, nr=nr)
+    np.testing.assert_array_equal(np.asarray(z_jnp), np.asarray(z_dense))
+    z_ker = jax.jit(lambda p, qq, tt, bb: hd.decode_attend_paged(
+        p, qq, tt, bb, nr=nr, impl=IMPL))(pool, q, t, bidx)
+    np.testing.assert_allclose(z_ker, z_dense, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("Lmax,nr", [(256, 16), (128, 8)])
+def test_paged_update_parity_bit_exact(Lmax, nr):
+    """update_cache_paged must be BIT-exact against the dense ancestor
+    update (jnp oracle and fused kernel), including chained sequential
+    writes through the carried pair mean/sum."""
+    ts = _interesting_ts(Lmax, nr, n_extra=2)
+    R, D = len(ts), 16
+    cache = _cache(R, Lmax, D, D, nr, seed=nr)
+    pool, nbl = _identity_paged(cache, R, Lmax, nr)
+    M = hd.hc.num_levels(Lmax, nr)
+    k1, k2 = _keys(2, seed=5)
+    t = jnp.asarray(ts)
+    for step in range(3):          # chained writes t, t+1, t+2
+        tt = jnp.minimum(t + step, Lmax - 1)
+        _, utab = _identity_tables(np.asarray(tt), nbl, nr, M)
+        kn = jax.random.normal(jax.random.fold_in(k1, step), (R, D))
+        vn = jax.random.normal(jax.random.fold_in(k2, step), (R, D))
+        cache = hd.update_cache(cache, kn, vn, tt)
+        pool_j = hd.update_cache_paged(pool, kn, vn, tt, utab)
+        pool_k = jax.jit(lambda p, a, b, c, u: hd.update_cache_paged(
+            p, a, b, c, u, impl=IMPL))(pool, kn, vn, tt, utab)
+        for a, b in zip(jax.tree.leaves(pool_j), jax.tree.leaves(pool_k)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        pool = pool_j
+        flat, _ = _identity_paged(cache, R, Lmax, nr)
+        for a, b in zip(jax.tree.leaves(flat), jax.tree.leaves(pool)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -264,6 +264,58 @@ def test_admit_sampling_invariant_to_bucket_padding():
     assert first_token(3) == alone
 
 
+def test_stop_tokens_end_generation_early_greedy():
+    """Request.stop_tokens must end generation before max_new_tokens on
+    the greedy path (previously max_new_tokens / a full cache were the
+    only stop conditions).  The stop token is kept in out_tokens."""
+    cfg = get_smoke_config("llama3.2-1b")
+    fns = get_model(cfg)
+    params, _ = fns.init(jax.random.PRNGKey(12), cfg)
+    prompt = ((np.arange(11) * 3) % cfg.vocab_size).astype(np.int32)
+    free = manual_greedy(cfg, params, prompt, 8, max_len=64)
+    # first position whose token value has no earlier occurrence, so
+    # the truncated stream is unambiguous
+    stop_at = next(k for k in range(1, 8) if free[k] not in free[:k])
+    eng = ServeEngine(cfg, params, slots=1, max_len=64)
+    req = Request(uid=0, prompt=prompt.copy(), max_new_tokens=8,
+                  stop_tokens=[free[stop_at]])
+    eng.submit(req)
+    eng.run()
+    assert req.out_tokens == free[:stop_at + 1]
+    # stop token sampled AT ADMISSION must also terminate immediately
+    req2 = Request(uid=1, prompt=prompt.copy(), max_new_tokens=8,
+                   stop_tokens=[free[0]])
+    eng.submit(req2)
+    eng.run()
+    assert req2.out_tokens == free[:1]
+
+
+def test_stop_tokens_end_generation_early_sampled():
+    """Stop-token termination must also cover the sampled path (both
+    the admission sample and per-step samples), reproducibly via the
+    engine seed."""
+    cfg = get_smoke_config("llama3.2-1b")
+    fns = get_model(cfg)
+    params, _ = fns.init(jax.random.PRNGKey(13), cfg)
+    prompt = ((np.arange(9) * 7) % cfg.vocab_size).astype(np.int32)
+
+    def sample_run(stop_tokens):
+        eng = ServeEngine(cfg, params, slots=1, max_len=64, greedy=False,
+                          seed=21)
+        req = Request(uid=0, prompt=prompt.copy(), max_new_tokens=8,
+                      stop_tokens=stop_tokens)
+        eng.submit(req)
+        eng.run()
+        return req.out_tokens
+
+    free = sample_run(None)
+    assert len(free) == 8
+    stop_at = next(k for k in range(1, 8) if free[k] not in free[:k])
+    stopped = sample_run([free[stop_at]])
+    # same seed => identical sample stream up to (and incl.) the stop
+    assert stopped == free[:stop_at + 1]
+
+
 def test_submit_overflow_policy():
     """Prompts longer than max_len - 1 must be rejected (default) or
     tail-truncated (overflow='truncate'); silent admission used to build
