@@ -18,6 +18,14 @@ engine's cache footprint and gives the paged engine whatever pool fits
 the same bytes: prefix sharing + on-demand page allocation admit >= 2x
 the concurrent requests (EXPERIMENTS.md P27).
 
+The same fixed-HBM budget is then handed to the int8-quantized pool
+(``cache_dtype='int8'``, per-row scales): ~3x the pages of the fp32
+pool, so another >= 1.5x concurrency on top of the fp32 paged engine --
+reported together with the quality side of that trade as a
+concurrency-vs-quality curve: greedy token-match rate vs the dense
+fp32 oracle, per-level max dequantization error on real cache content,
+and cache bytes per dtype (EXPERIMENTS.md P28).
+
 ``--json out.json`` (default name BENCH_serve.json via ``--json``
 alone) writes every row as machine-readable JSON so the serve perf
 trajectory across PRs can be diffed by tooling.
@@ -36,15 +44,19 @@ ARCH = "llama3.2-1b"
 MAX_LEN = 128
 DENSE_SLOTS = 2
 PAGED_SLOTS = 8
+INT8_SLOTS = 16
 NEW_TOKENS = 8
 
 
-def _build(cfg, params, paged, pool_pages, decode_impl=None):
+def _build(cfg, params, paged, pool_pages, decode_impl=None,
+           cache_dtype=None, slots=None):
     from repro.serve import ServeEngine
-    kw = dict(slots=PAGED_SLOTS if paged else DENSE_SLOTS,
-              max_len=MAX_LEN, decode_impl=decode_impl)
+    if slots is None:
+        slots = PAGED_SLOTS if paged else DENSE_SLOTS
+    kw = dict(slots=slots, max_len=MAX_LEN, decode_impl=decode_impl)
     if paged:
-        kw.update(paged=True, pool_pages=pool_pages, lookahead=4)
+        kw.update(paged=True, pool_pages=pool_pages, lookahead=4,
+                  cache_dtype=cache_dtype)
     return ServeEngine(cfg, params, **kw)
 
 
@@ -121,16 +133,24 @@ def run(json_path=None, requests=12, prefix_len=64):
     # fixed-HBM budget: the dense engine's total cache bytes
     dense = _build(cfg, params, paged=False, pool_pages=None)
     dense_bytes = pc.pool_bytes(dense.caches)
-    # largest paged pool that fits the same bytes (the hierarchy's
-    # coarse pools ride along, so usable fine pages exceed the naive
-    # slots * Lmax/nr equivalence)
-    pool_pages = 4 * DENSE_SLOTS * (MAX_LEN // cfg.nr)
-    while pool_pages > 1:
-        probe = _build(cfg, params, paged=True, pool_pages=pool_pages)
-        if pc.pool_bytes(probe.caches) <= dense_bytes:
-            break
-        pool_pages -= 1
-    del probe
+
+    def _paged_bytes(pages, quant_levels=0):
+        """Cache bytes for a paged pool WITHOUT building an engine
+        (pool geometry alone fixes the footprint)."""
+        pool = pc.PagePool(slots=PAGED_SLOTS, max_len=MAX_LEN, nr=cfg.nr,
+                           pool_pages=pages, quant_levels=quant_levels)
+        return pc.pool_bytes(pc.init_paged_caches(cfg, pool))
+
+    def _fit_pages(quant_levels=0, start=1):
+        """Largest pool that fits the dense budget (the hierarchy's
+        coarse pools ride along, so usable fine pages exceed the naive
+        slots * Lmax/nr equivalence; int8 pools fit ~3x more)."""
+        pages = start
+        while _paged_bytes(pages + 1, quant_levels) <= dense_bytes:
+            pages += 1
+        return pages
+
+    pool_pages = _fit_pages(quant_levels=0)
 
     wall, ticks, lat, conc_d, _, total_d, out_d = _drive(dense, wl)
     record("serve_dense_tok_s", wall / max(total_d, 1) * 1e6,
@@ -165,6 +185,72 @@ def run(json_path=None, requests=12, prefix_len=64):
     assert conc_p >= 2 * conc_d, (
         f"paged concurrency {conc_p} < 2x dense {conc_d} at fixed HBM")
 
+    # --- int8 quantized pool at the SAME fixed HBM budget ----------------
+    # (concurrency-vs-quality curve: what the extra pages buy, what the
+    # quantization costs)
+    import jax.numpy as jnp
+    from repro.core import quantization as qz
+
+    int8_pages = _fit_pages(quant_levels=-1, start=pool_pages)
+    quant = _build(cfg, params, paged=True, pool_pages=int8_pages,
+                   cache_dtype="int8", slots=INT8_SLOTS)
+    wall, ticks, lat, conc_q, occ_q, total_q, out_q = _drive(quant, wl)
+    stq = quant.pool.stats
+    record("serve_paged_int8_tok_s", wall / max(total_q, 1) * 1e6,
+           f"tok_s={total_q / wall:.1f} ticks={ticks} "
+           f"concurrency={conc_q} pool_occupancy_peak={occ_q:.2f}")
+    record("serve_paged_int8_latency", float(np.percentile(lat, 50)) * 1e6,
+           f"p50_ticks={np.percentile(lat, 50):.0f} "
+           f"p99_ticks={np.percentile(lat, 99):.0f}")
+    record("serve_paged_int8_pool", 0.0,
+           f"pages={int8_pages} shared={stq.shared_maps} "
+           f"cow={stq.cow_copies} evict={stq.evictions} "
+           f"preempt={quant.preemptions}")
+
+    # quality: greedy token-match rate vs the dense fp32 oracle
+    tot = sum(len(w) for w in out_d)
+    hit = sum(1 for a, b in zip(out_q, out_d)
+              for x, y in zip(a, b) if x == y)
+    rate = hit / max(tot, 1)
+    record("serve_quality_int8_match", 0.0,
+           f"match_rate={rate:.4f} tokens={tot}")
+    assert rate >= 0.99, (
+        f"int8 token-match rate {rate:.4f} < 0.99 vs dense oracle")
+
+    # quality: per-level max dequantization error on the REAL cache
+    # content the dense run produced (coarse k rows are pairwise means
+    # -> shrinking dynamic range; coarse v rows are pairwise sums)
+    cs = dense.caches if isinstance(dense.caches, list) else [dense.caches]
+    lvl_err = []
+    for l in range(1 + len(cs[0].ck)):
+        e = 0.0
+        for c in cs:
+            for x in ((c.k, c.v) if l == 0
+                      else (c.ck[l - 1], c.cv[l - 1])):
+                x = jnp.asarray(x)
+                q8, s8 = qz.quantize_int8(x, axis=-1)
+                e = max(e, float(jnp.max(jnp.abs(
+                    qz.dequantize_int8(q8, s8) - x))))
+        lvl_err.append(e)
+    record("serve_quality_int8_dequant", 0.0,
+           " ".join(f"l{l}_max_abs_err={e:.2e}"
+                    for l, e in enumerate(lvl_err)))
+
+    # quality: cache bytes per storage dtype at the shared budget
+    record("serve_quality_hbm_bytes", 0.0,
+           f"dense_fp32={dense_bytes} "
+           f"paged_fp32={_paged_bytes(pool_pages)} "
+           f"paged_int8={_paged_bytes(int8_pages, -1)} "
+           f"fp32_pages={pool_pages} int8_pages={int8_pages}")
+
+    record("serve_concurrency_int8_fixed_hbm", 0.0,
+           f"fp32_paged={conc_p} int8_paged={conc_q} "
+           f"ratio={conc_q / max(conc_p, 1):.2f} "
+           f"hbm_bytes={dense_bytes}")
+    assert conc_q >= 1.5 * conc_p, (
+        f"int8 concurrency {conc_q} < 1.5x fp32 paged {conc_p} "
+        "at fixed HBM")
+
     if json_path:
         payload = {"bench": "serve",
                    "shape": {"arch": ARCH, "max_len": MAX_LEN,
@@ -172,6 +258,7 @@ def run(json_path=None, requests=12, prefix_len=64):
                              "prefix_len": prefix_len,
                              "dense_slots": DENSE_SLOTS,
                              "paged_slots": PAGED_SLOTS,
+                             "int8_slots": INT8_SLOTS,
                              "new_tokens": NEW_TOKENS},
                    "backend": jax.default_backend(),
                    "xla_flags": os.environ.get("XLA_FLAGS", ""),

@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python examples/serve_batched.py --arch llama3.2-1b
     PYTHONPATH=src python examples/serve_batched.py --paged --pool-pages 24
+    PYTHONPATH=src python examples/serve_batched.py --paged --cache-dtype int8
 
 Uses the reduced smoke config (random weights) to demonstrate the engine:
 8 requests over 4 slots, greedy decoding, O(nr log L) attention per step.
@@ -40,6 +41,10 @@ def main():
     ap.add_argument("--pool-pages", type=int, default=None,
                     help="pool size in nr-row pages (small values "
                          "exercise eviction/preemption)")
+    ap.add_argument("--cache-dtype", default=None,
+                    choices=["fp32", "int8"],
+                    help="paged page storage dtype (int8: per-row "
+                         "scales, ~4x pages at fixed HBM)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -47,7 +52,8 @@ def main():
     params, _ = fns.init(jax.random.PRNGKey(0), cfg)
     eng = ServeEngine(cfg, params, slots=args.slots, max_len=128,
                       decode_impl=args.decode_impl, paged=args.paged,
-                      pool_pages=args.pool_pages)
+                      pool_pages=args.pool_pages,
+                      cache_dtype=args.cache_dtype)
 
     rng = np.random.default_rng(0)
     # a shared system-prompt prefix makes the paged pool's prefix

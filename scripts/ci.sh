@@ -24,10 +24,12 @@ python -m pytest -q --durations=0 "$@" | tee "$report"
 echo "== per-test budget =="
 python scripts/check_test_budget.py "$report" --budget 60
 
-echo "== examples smoke (serve_batched, dense + paged) =="
+echo "== examples smoke (serve_batched, dense + paged + int8) =="
 # tiny-config end-to-end smokes, held to the same 60 s budget each
 timeout 60 python examples/serve_batched.py \
     --requests 4 --slots 2 --new-tokens 4 > /dev/null
 timeout 60 python examples/serve_batched.py --paged --pool-pages 24 \
     --requests 4 --slots 2 --new-tokens 4 > /dev/null
+timeout 60 python examples/serve_batched.py --paged --cache-dtype int8 \
+    --pool-pages 24 --requests 4 --slots 2 --new-tokens 4 > /dev/null
 echo "examples OK"

@@ -12,6 +12,8 @@ from .h1d_decode import (
     decode_attend_uniform,
 )
 from . import hierarchy
+from . import quantization
+from .quantization import quantize_int8, dequantize_int8
 
 __all__ = [
     "h1d_attention",
@@ -28,4 +30,7 @@ __all__ = [
     "update_cache_uniform",
     "decode_attend_uniform",
     "hierarchy",
+    "quantization",
+    "quantize_int8",
+    "dequantize_int8",
 ]

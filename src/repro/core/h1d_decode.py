@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 
 from . import hierarchy as hc
+from . import quantization as qz
 
 NEG_INF = hc.NEG_INF
 
@@ -345,15 +346,84 @@ def init_paged_pool(num_pages, nr: int, D: int, Dv: int,
     return PagedH1DCache(k=k, v=v, ck=ck, cv=cv)
 
 
-def update_cache_paged(pool: PagedH1DCache, k_new, v_new, t, utab, *,
-                       impl: str = "jnp") -> PagedH1DCache:
+class QuantPagedH1DCache(NamedTuple):
+    """Quantized paged pools: same page geometry as
+    :class:`PagedH1DCache`, but any subset of levels stores its pages in
+    int8 with one float32 symmetric absmax scale PER CACHED ROW
+    (``core.quantization``, axis=-1), i.e. scale arrays of shape
+    ``(NP_l, nr)`` riding next to the ``(NP_l, nr, D)`` data.  Scale
+    arrays exist for EVERY level so the pytree structure is independent
+    of which levels are quantized (fp32 levels carry all-ones scales
+    that are never read) -- which levels ARE quantized is a static
+    property of the array dtypes (:func:`quant_level_flags`), so jit
+    retraces only when the quantization config changes."""
+    k: jnp.ndarray
+    v: jnp.ndarray
+    ck: Tuple[jnp.ndarray, ...]
+    cv: Tuple[jnp.ndarray, ...]
+    ksc: jnp.ndarray              # (NP0, nr) f32 per-row scales for k
+    vsc: jnp.ndarray              # (NP0, nr)
+    cksc: Tuple[jnp.ndarray, ...]  # (NP_l, nr) per coarse level
+    cvsc: Tuple[jnp.ndarray, ...]
+
+
+def quant_level_flags(pool: QuantPagedH1DCache) -> Tuple[bool, ...]:
+    """Per-level "is int8" flags (index 0 = fine), read off the array
+    dtypes -- static under jit."""
+    return tuple(bool(a.dtype == jnp.int8) for a in (pool.k, *pool.ck))
+
+
+def init_quant_paged_pool(num_pages, nr: int, D: int, Dv: int,
+                          dtype=jnp.float32,
+                          quant=None) -> QuantPagedH1DCache:
+    """Zeroed quantized pools.  ``quant``: per-level bool sequence
+    (index 0 = fine); ``None`` quantizes every level.  Scales init to
+    1.0 so zero pages dequantize to exact zeros."""
+    M = len(num_pages)
+    if quant is None:
+        quant = (True,) * M
+
+    def data(n, d, is_q):
+        return jnp.zeros((n, nr, d), jnp.int8 if is_q else dtype)
+
+    def sc(n):
+        return jnp.ones((n, nr), jnp.float32)
+
+    return QuantPagedH1DCache(
+        k=data(num_pages[0], D, quant[0]),
+        v=data(num_pages[0], Dv, quant[0]),
+        ck=tuple(data(n, D, quant[l])
+                 for l, n in enumerate(num_pages[1:], 1)),
+        cv=tuple(data(n, Dv, quant[l])
+                 for l, n in enumerate(num_pages[1:], 1)),
+        ksc=sc(num_pages[0]), vsc=sc(num_pages[0]),
+        cksc=tuple(sc(n) for n in num_pages[1:]),
+        cvsc=tuple(sc(n) for n in num_pages[1:]),
+    )
+
+
+def update_cache_paged(pool, k_new, v_new, t, utab, *,
+                       impl: str = "jnp"):
     """Paged batched append.  ``k_new``: (R, D), ``v_new``: (R, Dv),
     ``t``: (R,) global positions, ``utab``: (R, 1 + levels) physical
     page rows (see :class:`PageTables`).  Same ancestor-chain math as
     ``update_cache``: the level-l row ``t >> l`` becomes the pairwise
     mean/sum of the freshly updated level-(l-1) sibling pair -- which
     lives in the level-(l-1) page just written (clearing bit 0 of
-    ``t >> (l-1)`` never crosses a page boundary for nr >= 2)."""
+    ``t >> (l-1)`` never crosses a page boundary for nr >= 2).
+
+    A :class:`QuantPagedH1DCache` pool routes to the quantized variants:
+    each level's sibling pair is dequantized, the new row substituted,
+    and the 2-row pair REwritten through quantize (fresh per-row scales)
+    -- the ancestor carry uses the pre-quantization f32 pair so the
+    hierarchy invariants (mean/sum of the *stored* children up to one
+    quantization step) hold at every level."""
+    if isinstance(pool, QuantPagedH1DCache):
+        if impl != "jnp":
+            dk, interpret = _decode_kernels(impl)
+            return dk.update_cache_paged_quant(pool, k_new, v_new, t, utab,
+                                               interpret=interpret)
+        return _update_cache_paged_quant_jnp(pool, k_new, v_new, t, utab)
     if impl != "jnp":
         dk, interpret = _decode_kernels(impl)
         return dk.update_cache_paged(pool, k_new, v_new, t, utab,
@@ -383,13 +453,72 @@ def update_cache_paged(pool: PagedH1DCache, k_new, v_new, t, utab, *,
     return PagedH1DCache(k=k, v=v, ck=tuple(ck), cv=tuple(cv))
 
 
-def decode_attend_paged(pool: PagedH1DCache, q, t, bidx, *, nr: int,
+def _update_cache_paged_quant_jnp(pool: QuantPagedH1DCache, k_new, v_new,
+                                  t, utab) -> QuantPagedH1DCache:
+    """jnp oracle for the quantized paged append.  Unlike the fp32 path
+    (single-row level-0 write), EVERY level rewrites its full 2-row
+    sibling pair -- requantizing the untouched sibling in place -- which
+    is exactly what the fused kernel does, so the two are bit-exact on
+    the int8 payload AND the scales."""
+    t = jnp.asarray(t, jnp.int32)
+    utab = jnp.asarray(utab, jnp.int32)
+    nr = pool.k.shape[-2]
+    f32 = jnp.float32
+    quant = quant_level_flags(pool)
+    ks = [pool.k] + list(pool.ck)
+    vs = [pool.v] + list(pool.cv)
+    kscs = [pool.ksc] + list(pool.cksc)
+    vscs = [pool.vsc] + list(pool.cvsc)
+    carry_k = jnp.asarray(k_new, f32)
+    carry_v = jnp.asarray(v_new, f32)
+    two = jnp.arange(2)
+    for l in range(len(ks)):
+        rowl = (t >> l) % nr
+        page = utab[:, l]
+        rows2 = (rowl & ~1)[:, None] + two[None, :]          # (R, 2)
+        pk = ks[l][page[:, None], rows2].astype(f32)         # (R, 2, D)
+        pv = vs[l][page[:, None], rows2].astype(f32)
+        if quant[l]:
+            pk = pk * kscs[l][page[:, None], rows2][..., None]
+            pv = pv * vscs[l][page[:, None], rows2][..., None]
+        sel = (two[None, :] == ((t >> l) & 1)[:, None])[..., None]
+        pk = jnp.where(sel, carry_k[:, None, :], pk)
+        pv = jnp.where(sel, carry_v[:, None, :], pv)
+        if quant[l]:
+            qk, sk = qz.quantize_int8(pk, axis=-1)
+            qv, sv = qz.quantize_int8(pv, axis=-1)
+            ks[l] = ks[l].at[page[:, None], rows2].set(qk)
+            vs[l] = vs[l].at[page[:, None], rows2].set(qv)
+            kscs[l] = kscs[l].at[page[:, None], rows2].set(sk[..., 0])
+            vscs[l] = vscs[l].at[page[:, None], rows2].set(sv[..., 0])
+        else:
+            ks[l] = ks[l].at[page[:, None], rows2].set(pk.astype(ks[l].dtype))
+            vs[l] = vs[l].at[page[:, None], rows2].set(pv.astype(vs[l].dtype))
+        carry_k = pk.mean(axis=1)
+        carry_v = pv.sum(axis=1)
+    return QuantPagedH1DCache(
+        k=ks[0], v=vs[0], ck=tuple(ks[1:]), cv=tuple(vs[1:]),
+        ksc=kscs[0], vsc=vscs[0],
+        cksc=tuple(kscs[1:]), cvsc=tuple(vscs[1:]))
+
+
+def decode_attend_paged(pool, q, t, bidx, *, nr: int,
                         softmax_scale=None, impl: str = "jnp") -> jnp.ndarray:
     """Paged batched single-token attention.  ``q``: (R, G, D); ``t``:
     (R,) global positions; ``bidx``: (R, 2 + levels) physical page rows
     (see :class:`PageTables`).  Same bands, masks and single-max
     weighted-LSE combine as ``decode_attend`` -- the page tables only
-    relocate the block reads."""
+    relocate the block reads.  A :class:`QuantPagedH1DCache` pool
+    dequantizes each gathered page row with its per-row scale before
+    the band math; everything downstream is identical."""
+    if isinstance(pool, QuantPagedH1DCache):
+        if impl != "jnp":
+            dk, interpret = _decode_kernels(impl)
+            return dk.decode_attend_paged_quant(pool, q, t, bidx, nr=nr,
+                                                softmax_scale=softmax_scale,
+                                                interpret=interpret)
+        return _decode_attend_paged_quant_jnp(pool, q, t, bidx, nr=nr,
+                                              softmax_scale=softmax_scale)
     if impl != "jnp":
         dk, interpret = _decode_kernels(impl)
         return dk.decode_attend_paged(pool, q, t, bidx, nr=nr,
@@ -431,6 +560,62 @@ def decode_attend_paged(pool: PagedH1DCache, q, t, bidx, *, nr: int,
     s = jnp.concatenate(logits, axis=-1)                  # (R, G, K)
     vcat = jnp.concatenate(values, axis=-2)               # (R, K, Dv)
     wcat = jnp.concatenate(weights, axis=-1)              # (R, K)
+    m = jnp.maximum(s.max(-1, keepdims=True), -1e30)
+    a = jnp.exp(s - m)
+    num = jnp.einsum("bgk,bkv->bgv", a, vcat)
+    den = jnp.einsum("bgk,bk->bg", a, wcat)
+    return (num / jnp.maximum(den, 1e-9)[..., None]).astype(q.dtype)
+
+
+def _decode_attend_paged_quant_jnp(pool: QuantPagedH1DCache, q, t, bidx, *,
+                                   nr: int, softmax_scale=None):
+    """jnp oracle for quantized paged attention: the fp32 band math with
+    per-row dequantization at the gathers."""
+    f32 = jnp.float32
+    R, G, D = q.shape
+    scale = softmax_scale if softmax_scale is not None else 1 / math.sqrt(D)
+    qs = q.astype(f32) * scale
+    t = jnp.asarray(t, jnp.int32)
+    bidx = jnp.asarray(bidx, jnp.int32)
+    M = 1 + len(pool.ck)
+    quant = quant_level_flags(pool)
+
+    def deq(arr, sc, idx, is_q):
+        x = arr[idx].astype(f32)
+        return x * sc[idx][..., None] if is_q else x
+
+    logits, values, weights = [], [], []
+
+    def band(keys, vals, mask, wgt):
+        s = jnp.einsum("bgd,bkd->bgk", qs, keys,
+                       preferred_element_type=f32)
+        logits.append(jnp.where(mask[:, None, :], s, NEG_INF))
+        values.append(vals)
+        weights.append(jnp.where(mask, wgt, 0.0))
+
+    blk0 = t // nr
+    pos = blk0[:, None] * nr + jnp.arange(nr)[None, :]
+    ones = jnp.ones((R, nr), f32)
+    band(deq(pool.k, pool.ksc, bidx[:, 0], quant[0]),
+         deq(pool.v, pool.vsc, bidx[:, 0], quant[0]),
+         pos <= t[:, None], ones)
+    band(deq(pool.k, pool.ksc, bidx[:, 1], quant[0]),
+         deq(pool.v, pool.vsc, bidx[:, 1], quant[0]),
+         jnp.broadcast_to((blk0 >= 1)[:, None], (R, nr)), ones)
+    for l in range(1, M):
+        span = nr << l
+        Il = t // span
+        first_half_q = (t % span) < (span // 2)
+        key_last_half = jnp.arange(nr) >= nr // 2
+        mask = (Il >= 1)[:, None] & ~(first_half_q[:, None]
+                                      & key_last_half[None, :])
+        band(deq(pool.ck[l - 1], pool.cksc[l - 1], bidx[:, 1 + l], quant[l]),
+             deq(pool.cv[l - 1], pool.cvsc[l - 1], bidx[:, 1 + l], quant[l]),
+             mask, jnp.full((R, nr), float(1 << l), f32))
+
+    s = jnp.concatenate(logits, axis=-1)
+    vcat = jnp.concatenate(values, axis=-2)
+    wcat = jnp.concatenate(weights, axis=-1)
     m = jnp.maximum(s.max(-1, keepdims=True), -1e30)
     a = jnp.exp(s - m)
     num = jnp.einsum("bgk,bkv->bgv", a, vcat)

@@ -1,0 +1,63 @@
+"""Shared symmetric int8 quantization.
+
+One rounding rule for every int8 surface in the repo -- the paged
+KV-cache pages (``serve/paged_cache.py`` + the quantized decode
+kernels) and the cross-pod gradient compressor
+(``optim/compression.py``) both call these helpers, so a change to the
+scale floor or the rounding mode shows up in ONE place and is pinned by
+``tests/test_optim.py::test_int8_rounding_shared_across_call_sites``.
+
+The scheme is plain symmetric absmax quantization:
+
+    scale = max(|x|) / 127        (floored at EPS so all-zero tensors
+                                   quantize to q=0, scale=EPS/127)
+    q     = clip(round(x / scale), -127, 127)  as int8
+    deq   = float32(q) * scale
+
+``round`` is jnp.round = round-half-to-even, which is what both call
+sites historically used; -128 is never produced, keeping the code
+symmetric (q(-x) == -q(x)) and the dequantized range balanced.
+
+``axis`` selects the scale granularity: ``None`` gives one scale per
+tensor (the gradient-compression wire format), an int/tuple gives one
+scale per slice along the remaining axes (the KV-cache uses
+``axis=-1``: one scale per cached row, so a single outlier token cannot
+wash out its page-mates' precision).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple, Union
+
+import jax.numpy as jnp
+
+QMAX = 127.0
+# The scale is computed as ``amax * (1/127)`` -- a multiply by this
+# f32-rounded constant, NOT a divide: XLA's fast-math pipeline rewrites
+# divides-by-constant into reciprocal multiplies inside fused kernels
+# but not in eagerly dispatched ops, so a divide here would leave the
+# jnp oracle and the Pallas kernels one ulp apart on the stored scales.
+RECIP_QMAX = 1.0 / 127.0
+# Scale floor: keeps x/scale finite for all-zero inputs.  Small enough
+# that any real activation/gradient dominates it.
+EPS = 1e-12
+
+Axis = Optional[Union[int, Tuple[int, ...]]]
+
+
+def int8_scale(x, axis: Axis = None):
+    """Symmetric absmax scale of ``x`` over ``axis`` (keepdims)."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return jnp.maximum(amax, EPS) * RECIP_QMAX
+
+
+def quantize_int8(x, axis: Axis = None):
+    """Returns ``(q int8, scale f32)``.  ``scale`` keeps reduced dims
+    (size 1) when ``axis`` is given, so ``q * scale`` broadcasts back."""
+    x = jnp.asarray(x, jnp.float32)
+    scale = int8_scale(x, axis=axis)
+    q = jnp.clip(jnp.round(x / scale), -QMAX, QMAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale

@@ -55,18 +55,34 @@ def _hc():
     return hc
 
 
+def _qz():
+    """Lazy ``core.quantization`` import (same cycle as :func:`_hc`);
+    the kernels inline its rounding rule but source QMAX/EPS here so the
+    int8 wire format has one definition."""
+    from repro.core import quantization as qz
+    return qz
+
+
 # ---------------------------------------------------------------------------
 # fused decode attention
 # ---------------------------------------------------------------------------
 
 def _attend_kernel(t_ref, q_ref, *refs, nr: int, nbands: int, scale: float,
-                   neg_inf: float):
+                   neg_inf: float, quant=()):
     """One grid step = one cache row: q (1, G, D) against ``nbands``
     nr-key bands (own, prev, coarse levels 1..M-1), weighted-LSE
-    combined entirely in VMEM."""
+    combined entirely in VMEM.
+
+    ``quant`` (per-band bools, empty = all fp) marks int8 bands: their
+    K/V blocks arrive as int8 pages and are dequantized in VMEM with the
+    per-row scale blocks appended after the V refs (k-scales for the
+    quantized bands in band order, then v-scales)."""
+    nq = sum(quant)
     k_refs = refs[:nbands]
     v_refs = refs[nbands:2 * nbands]
-    o_ref = refs[2 * nbands]
+    ksc_refs = refs[2 * nbands:2 * nbands + nq]
+    vsc_refs = refs[2 * nbands + nq:2 * nbands + 2 * nq]
+    o_ref = refs[2 * nbands + 2 * nq]
     r = pl.program_id(0)
     t = t_ref[r]
     f32 = jnp.float32
@@ -76,8 +92,14 @@ def _attend_kernel(t_ref, q_ref, *refs, nr: int, nbands: int, scale: float,
     b0 = t // nr
 
     logits, values, weights = [], [], []
+    si = 0
     for band in range(nbands):
         kb = k_refs[band][0].astype(f32)                 # (nr, D)
+        vb = v_refs[band][0].astype(f32)                 # (nr, Dv)
+        if quant and quant[band]:
+            kb = kb * ksc_refs[si][0][:, None]
+            vb = vb * vsc_refs[si][0][:, None]
+            si += 1
         s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
                                 preferred_element_type=f32)   # (G, nr)
         if band == 0:          # own level-0 block, causal within the block
@@ -96,7 +118,7 @@ def _attend_kernel(t_ref, q_ref, *refs, nr: int, nbands: int, scale: float,
             mask = (Il >= 1) & ~(first_half_q & key_last_half)
             wgt = jnp.full((1, nr), float(1 << l), f32)
         logits.append(jnp.where(mask, s, neg_inf))
-        values.append(v_refs[band][0].astype(f32))       # (nr, Dv)
+        values.append(vb)
         weights.append(jnp.where(mask, wgt, 0.0))
 
     s_all = jnp.concatenate(logits, axis=-1)             # (G, K)
@@ -421,6 +443,75 @@ def decode_attend_paged(pool, q: jnp.ndarray, t: jnp.ndarray,
     return out.astype(q.dtype)
 
 
+def decode_attend_paged_quant(pool, q: jnp.ndarray, t: jnp.ndarray,
+                              bidx: jnp.ndarray, *, nr: int,
+                              softmax_scale=None,
+                              interpret: bool = False) -> jnp.ndarray:
+    """Quantized-pool variant of :func:`decode_attend_paged`.
+
+    ``pool`` is a ``core.h1d_decode.QuantPagedH1DCache``: int8 pages for
+    any subset of levels, with per-row f32 scales ``(NP_l, nr)``.  The
+    scales ride the SAME scalar-prefetched ``bidx`` indirection as the
+    pages -- one extra ``(1, nr)`` scale block per quantized band, whose
+    index map reads the identical table column -- and the dequantize
+    (one multiply per gathered row) happens in VMEM right before the
+    QK^T dot.  Still one launch on the (R,) grid; fp32 levels of a
+    mixed-precision pool skip the scale operands entirely (which levels
+    are quantized is static in the array dtypes)."""
+    hc = _hc()
+    R, G, D = q.shape
+    Dv = pool.v.shape[-1]
+    levels = len(pool.ck)
+    nbands = 2 + levels
+    assert bidx.shape == (R, nbands), (bidx.shape, R, nbands)
+    scale = softmax_scale if softmax_scale is not None else 1 / math.sqrt(D)
+
+    lvl_quant = tuple(bool(a.dtype == jnp.int8) for a in (pool.k, *pool.ck))
+    band_lvl = [0, 0] + list(range(1, 1 + levels))
+    quant = tuple(lvl_quant[band_lvl[b]] for b in range(nbands))
+
+    def band_map(band):
+        return lambda r, tref, bref: (bref[r, band], 0, 0)
+
+    def band_map_sc(band):
+        return lambda r, tref, bref: (bref[r, band], 0)
+
+    maps = [band_map(b) for b in range(nbands)]
+    k_arrs = [pool.k, pool.k] + list(pool.ck)
+    v_arrs = [pool.v, pool.v] + list(pool.cv)
+    ksc_all = [pool.ksc, pool.ksc] + list(pool.cksc)
+    vsc_all = [pool.vsc, pool.vsc] + list(pool.cvsc)
+    sc_arrs, sc_specs = [], []
+    for scs in (ksc_all, vsc_all):         # k-scales first, then v-scales
+        for b in range(nbands):
+            if quant[b]:
+                sc_arrs.append(scs[b])
+                sc_specs.append(pl.BlockSpec((1, nr), band_map_sc(b)))
+
+    in_specs = [pl.BlockSpec((1, G, D), lambda r, tref, bref: (r, 0, 0))]
+    in_specs += [pl.BlockSpec((1, nr, D), mp) for mp in maps]
+    in_specs += [pl.BlockSpec((1, nr, Dv), mp) for mp in maps]
+    in_specs += sc_specs
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(R,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, G, Dv), lambda r, tref, bref: (r, 0, 0)),
+    )
+    kernel = functools.partial(_attend_paged_kernel, nr=nr, nbands=nbands,
+                               scale=float(scale), neg_inf=hc.NEG_INF,
+                               quant=quant)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, G, Dv), jnp.float32),
+        interpret=interpret,
+    )(t.astype(jnp.int32), bidx.astype(jnp.int32), q,
+      *k_arrs, *v_arrs, *sc_arrs)
+    return out.astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # paged ancestor update
 # ---------------------------------------------------------------------------
@@ -487,6 +578,147 @@ def update_cache_paged(pool, k_new: jnp.ndarray, v_new: jnp.ndarray,
     ck = tuple(outs[2 + 2 * i] for i in range(nlev - 1))
     cv = tuple(outs[3 + 2 * i] for i in range(nlev - 1))
     return type(pool)(k=outs[0], v=outs[1], ck=ck, cv=cv)
+
+
+def _update_paged_quant_kernel(t_ref, utab_ref, knew_ref, vnew_ref, *refs,
+                               nlev: int, quant, qmax: float, recip: float,
+                               eps: float):
+    """Quantized variant of :func:`_update_kernel`: at each int8 level
+    the 2-row sibling pair is dequantized with its per-row scales, the
+    new row substituted, and the pair REquantized in place (fresh absmax
+    scales -- the same rounding as ``core.quantization.quantize_int8``,
+    inlined so it runs on the VMEM-resident pair).  The ancestor carry
+    is the PRE-quantization f32 pair mean/sum, so quantization error
+    does not compound up the hierarchy within a tick."""
+    nq = sum(quant)
+    in_data = refs[:2 * nlev]
+    in_sc = refs[2 * nlev:2 * nlev + 2 * nq]
+    out_data = refs[2 * nlev + 2 * nq:4 * nlev + 2 * nq]
+    out_sc = refs[4 * nlev + 2 * nq:]
+    r = pl.program_id(0)
+    t = t_ref[r]
+    f32 = jnp.float32
+    sel_row = jax.lax.broadcasted_iota(jnp.int32, (2, 1), 0)
+
+    new_k = knew_ref[...].astype(f32)                    # (1, D)
+    new_v = vnew_ref[...].astype(f32)                    # (1, Dv)
+    si = 0
+    for l in range(nlev):
+        sel = sel_row == ((t >> l) & 1)
+        kd = in_data[2 * l][0].astype(f32)               # (2, D)
+        vd = in_data[2 * l + 1][0].astype(f32)
+        if quant[l]:
+            kd = kd * in_sc[2 * si][0][:, None]
+            vd = vd * in_sc[2 * si + 1][0][:, None]
+        pk = jnp.where(sel, new_k, kd)
+        pv = jnp.where(sel, new_v, vd)
+        if quant[l]:
+            ksc = jnp.maximum(jnp.max(jnp.abs(pk), axis=1, keepdims=True),
+                              eps) * recip
+            vsc = jnp.maximum(jnp.max(jnp.abs(pv), axis=1, keepdims=True),
+                              eps) * recip
+            out_data[2 * l][0] = jnp.clip(jnp.round(pk / ksc),
+                                          -qmax, qmax).astype(jnp.int8)
+            out_data[2 * l + 1][0] = jnp.clip(jnp.round(pv / vsc),
+                                              -qmax, qmax).astype(jnp.int8)
+            out_sc[2 * si][0] = ksc[:, 0]
+            out_sc[2 * si + 1][0] = vsc[:, 0]
+            si += 1
+        else:
+            out_data[2 * l][0] = pk.astype(out_data[2 * l].dtype)
+            out_data[2 * l + 1][0] = pv.astype(out_data[2 * l + 1].dtype)
+        if l + 1 < nlev:
+            new_k = pk.mean(axis=0, keepdims=True)       # Eq. 25/26
+            new_v = pv.sum(axis=0, keepdims=True)        # Eq. 27
+
+
+def update_cache_paged_quant(pool, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                             t: jnp.ndarray, utab: jnp.ndarray, *,
+                             interpret: bool = False):
+    """Fused batched append into a QUANTIZED paged pool
+    (``core.h1d_decode.QuantPagedH1DCache``).
+
+    Same single-launch in-place scatter as :func:`update_cache_paged`;
+    each quantized level additionally carries a ``(1, 2)`` per-row scale
+    block whose index map reads the SAME ``utab`` column / pair index as
+    its data block, aliased input->output so both the int8 pair and its
+    two scales rewrite in place.  fp32 levels of a mixed pool pass their
+    scale arrays through untouched (never kernel operands)."""
+    qz = _qz()
+    R, D = k_new.shape
+    Dv = v_new.shape[-1]
+    nr = pool.k.shape[-2]
+    nlev = 1 + len(pool.ck)
+    assert utab.shape == (R, nlev), (utab.shape, R, nlev)
+    quant = tuple(bool(a.dtype == jnp.int8) for a in (pool.k, *pool.ck))
+
+    data_arrs, data_in, data_out, data_shape = [], [], [], []
+    sc_arrs, sc_in, sc_out, sc_shape = [], [], [], []
+    lvls = ([(pool.k, pool.v, pool.ksc, pool.vsc)]
+            + list(zip(pool.ck, pool.cv, pool.cksc, pool.cvsc)))
+    for l, (ka, va, ksa, vsa) in enumerate(lvls):
+
+        def pair_map(r, tref, uref, l=l):
+            return (uref[r, l], (tref[r] >> (l + 1)) & (nr // 2 - 1), 0)
+
+        def pair_map_sc(r, tref, uref, l=l):
+            return (uref[r, l], (tref[r] >> (l + 1)) & (nr // 2 - 1))
+
+        for a, d_ in ((ka, D), (va, Dv)):
+            data_arrs.append(a)
+            data_in.append(pl.BlockSpec((1, 2, d_), pair_map))
+            data_out.append(pl.BlockSpec((1, 2, d_), pair_map))
+            data_shape.append(jax.ShapeDtypeStruct(a.shape, a.dtype))
+        if quant[l]:
+            for a in (ksa, vsa):
+                sc_arrs.append(a)
+                sc_in.append(pl.BlockSpec((1, 2), pair_map_sc))
+                sc_out.append(pl.BlockSpec((1, 2), pair_map_sc))
+                sc_shape.append(jax.ShapeDtypeStruct(a.shape, a.dtype))
+
+    row_map = lambda r, tref, uref: (r, 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(R,),
+        in_specs=[pl.BlockSpec((1, D), row_map),
+                  pl.BlockSpec((1, Dv), row_map)] + data_in + sc_in,
+        out_specs=tuple(data_out + sc_out),
+    )
+    # call args: (t, utab, k_new, v_new, *data_arrs, *sc_arrs) -> pool
+    # operands start at index 4; outputs mirror the input order.
+    nio = 2 * nlev + 2 * sum(quant)
+    aliases = {4 + i: i for i in range(nio)}
+    kernel = functools.partial(_update_paged_quant_kernel, nlev=nlev,
+                               quant=quant, qmax=qz.QMAX,
+                               recip=qz.RECIP_QMAX, eps=qz.EPS)
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=tuple(data_shape + sc_shape),
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(t.astype(jnp.int32), utab.astype(jnp.int32), k_new, v_new,
+      *data_arrs, *sc_arrs)
+    data = outs[:2 * nlev]
+    scs = outs[2 * nlev:]
+    ksc_out, vsc_out = [], []
+    all_ks = [pool.ksc] + list(pool.cksc)
+    all_vs = [pool.vsc] + list(pool.cvsc)
+    si = 0
+    for l in range(nlev):
+        if quant[l]:
+            ksc_out.append(scs[2 * si])
+            vsc_out.append(scs[2 * si + 1])
+            si += 1
+        else:
+            ksc_out.append(all_ks[l])
+            vsc_out.append(all_vs[l])
+    return type(pool)(
+        k=data[0], v=data[1],
+        ck=tuple(data[2 + 2 * i] for i in range(nlev - 1)),
+        cv=tuple(data[3 + 2 * i] for i in range(nlev - 1)),
+        ksc=ksc_out[0], vsc=vsc_out[0],
+        cksc=tuple(ksc_out[1:]), cvsc=tuple(vsc_out[1:]))
 
 
 # ---------------------------------------------------------------------------

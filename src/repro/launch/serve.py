@@ -46,6 +46,14 @@ def main(argv=None):
     ap.add_argument("--pool-pages", type=int, default=None,
                     help="paged pool size in nr-row level-0 pages "
                          "(default: dense-equivalent slots*Lmax/nr)")
+    ap.add_argument("--cache-dtype", default=None,
+                    choices=["fp32", "int8"],
+                    help="paged KV-page storage dtype (int8: symmetric "
+                         "per-row scales, ~4x pages at fixed HBM; "
+                         "requires --paged)")
+    ap.add_argument("--quant-levels", type=int, default=None,
+                    help="with --cache-dtype int8: quantize hierarchy "
+                         "levels [0, n) only (default -1 = all levels)")
     ap.add_argument("--token-budget", type=int, default=None,
                     help="continuous-batching per-tick token budget "
                          "(decode slots + admitted prefill chunks)")
@@ -67,6 +75,8 @@ def main(argv=None):
     eng = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
                       greedy=not args.sample, decode_impl=args.decode_impl,
                       mesh=mesh, paged=args.paged, pool_pages=args.pool_pages,
+                      cache_dtype=args.cache_dtype,
+                      quant_levels=args.quant_levels,
                       token_budget=args.token_budget,
                       prefill_chunk=args.prefill_chunk,
                       lookahead=args.lookahead)

@@ -229,7 +229,12 @@ def attn_decode(p, cfg: ModelConfig, x, t, cache, *, layer_global=True,
     ``page_tables`` (``core.h1d_decode.PageTables``) switches the h1d
     path to the PAGED cache pool: ``cache`` is then a ``PagedH1DCache``
     of nr-row pages and the per-tick indirection tables route every
-    block read/write (serve/paged_cache.py builds them host-side)."""
+    block read/write (serve/paged_cache.py builds them host-side).  A
+    ``QuantPagedH1DCache`` (``cache_dtype='int8'``) rides the same two
+    calls -- the core entry points dispatch on the pool type, so the
+    quantized kernels (per-row dequant at the gathers, in-place
+    requantize of the sibling-pair writes) need no model-layer
+    plumbing beyond the cache pytree itself."""
     B = x.shape[0]
     hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     G = hq // hkv

@@ -44,6 +44,14 @@ class ModelConfig:
     decode_impl: str = "jnp"     # serving decode tick: jnp | pallas |
                                  # pallas_interpret (fused single-launch
                                  # hierarchical-KV attend + ancestor update)
+    cache_dtype: str = "fp32"    # paged KV-page storage: fp32 | int8
+                                 # (int8: symmetric per-row scales, see
+                                 # core.quantization; paged engine only)
+    cache_quant_levels: int = -1  # with cache_dtype='int8': quantize
+                                 # hierarchy levels [0, n); -1 = all
+                                 # levels (coarse rows are pairwise
+                                 # means -> ever-shrinking dynamic
+                                 # range, so all-level is the default)
     qkv_bias: bool = False       # qwen2.x
     qk_norm: bool = False        # gemma3
     sliding_window: int = 0      # >0: local layers use block-local attention

@@ -25,6 +25,8 @@ from typing import Any, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..core.quantization import quantize_int8, dequantize_int8
+
 
 class EFState(NamedTuple):
     residual: Any
@@ -35,14 +37,11 @@ def init_error_feedback(params) -> EFState:
         lambda p: jnp.zeros(p.shape, jnp.float32), params))
 
 
-def _quantize_int8(x):
-    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return q, scale
-
-
-def _dequantize_int8(q, scale):
-    return q.astype(jnp.float32) * scale
+# Single rounding rule shared with the int8 paged KV-cache -- see
+# core/quantization.py.  Per-tensor scale (axis=None) is the wire
+# format here.
+_quantize_int8 = quantize_int8
+_dequantize_int8 = dequantize_int8
 
 
 def int8_compress(grads, ef: EFState) -> Tuple[Any, EFState]:

@@ -90,7 +90,16 @@ class ServeEngine:
     None).  ``prefix_sharing`` maps bit-identical prompt-prefix pages
     (and their coarse ancestors) once across requests, copy-on-write.
     ``token_budget`` / ``lookahead`` / ``prefill_chunk`` tune the
-    continuous-batching scheduler for either path."""
+    continuous-batching scheduler for either path.
+
+    ``cache_dtype`` (default from ``cfg.cache_dtype``) selects the
+    paged pool's page storage: ``'fp32'`` keeps the bit-parity oracle
+    path; ``'int8'`` stores pages as int8 with per-row scales
+    (``core.quantization``) and decodes through the quantized kernels
+    -- ~4x more pages at fixed HBM.  ``quant_levels`` (default
+    ``cfg.cache_quant_levels``) restricts quantization to hierarchy
+    levels ``[0, n)``; -1 = all levels.  int8 requires ``paged=True``
+    (the dense slab cache has no scale side-band)."""
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 8,
                  max_len: int = 512, greedy: bool = True, seed: int = 0,
@@ -99,9 +108,23 @@ class ServeEngine:
                  pool_pages: Optional[int] = None, prefix_sharing: bool = True,
                  token_budget: Optional[int] = None, lookahead: int = 0,
                  prefill_chunk: Optional[int] = None,
-                 preempt_mode: str = "swap"):
+                 preempt_mode: str = "swap",
+                 cache_dtype: Optional[str] = None,
+                 quant_levels: Optional[int] = None):
         if preempt_mode not in ("swap", "recompute"):
             raise ValueError(f"unknown preempt_mode {preempt_mode!r}")
+        if cache_dtype is None:
+            cache_dtype = cfg.cache_dtype
+        if cache_dtype not in ("fp32", "int8"):
+            raise ValueError(f"unknown cache_dtype {cache_dtype!r}")
+        if quant_levels is None:
+            quant_levels = cfg.cache_quant_levels
+        if cache_dtype == "int8" and not paged:
+            raise ValueError("cache_dtype='int8' requires paged=True: the "
+                             "dense slab cache has no per-page scale "
+                             "side-band")
+        self.cache_dtype = cache_dtype
+        self.quant_levels = quant_levels
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "ServeEngine targets decoder-only families; enc-dec serving "
@@ -165,8 +188,10 @@ class ServeEngine:
             Lp = hc.padded_length(max_len, cfg.nr)
             if pool_pages is None:
                 pool_pages = slots * (Lp // cfg.nr)   # dense-equivalent
-            self.pool = pc.PagePool(slots=slots, max_len=max_len,
-                                    nr=cfg.nr, pool_pages=pool_pages)
+            self.pool = pc.PagePool(
+                slots=slots, max_len=max_len, nr=cfg.nr,
+                pool_pages=pool_pages,
+                quant_levels=(quant_levels if cache_dtype == "int8" else 0))
             self.prefix_sharing = prefix_sharing
             self.preempt_mode = preempt_mode
             self.caches = pc.init_paged_caches(cfg, self.pool)
@@ -521,7 +546,7 @@ class ServeEngine:
         the pool cannot hold its pages yet."""
         pc = self._pc
         snap = entry.restore["pages"]
-        need = {l: len(b) for l, (b, _, _) in snap.items()}
+        need = {l: len(entry_l[0]) for l, entry_l in snap.items()}
         if any(n > self.pool.available(l) for l, n in need.items()):
             return False
         try:

@@ -49,6 +49,7 @@ import numpy as np
 
 from repro.core import hierarchy as hc
 from repro.core import h1d_decode as hd
+from repro.core import quantization as qz
 
 
 class PoolExhausted(RuntimeError):
@@ -81,11 +82,22 @@ class PagePool:
     """
 
     def __init__(self, *, slots: int, max_len: int, nr: int,
-                 pool_pages: int, coarse_pages: Optional[Sequence[int]] = None):
+                 pool_pages: int, coarse_pages: Optional[Sequence[int]] = None,
+                 quant_levels: int = 0):
         self.nr = nr
         self.Lp = hc.padded_length(max_len, nr)
         self.M = max(hc.num_levels(self.Lp, nr), 1)   # levels incl. fine
         self.slots = slots
+        # dtype identity per level: levels < quant_levels store int8
+        # pages with per-row scales.  The tag participates in the
+        # prefix-registry keys (see _span_keys) -- it IS part of a
+        # page's content identity.
+        if quant_levels < 0:
+            quant_levels = self.M
+        self.quant_levels = min(quant_levels, self.M)
+        self.quant = [l < self.quant_levels for l in range(self.M)]
+        self.level_dtypes = ["int8:rowscale" if q else "f32"
+                             for q in self.quant]
         # logical blocks per level: level l rows (Lp >> l) in nr-row pages
         self.nblocks = [(self.Lp >> l) // nr for l in range(self.M)]
         if pool_pages < 1:
@@ -153,22 +165,30 @@ class PagePool:
     # -- registry / refcount internals ---------------------------------
     def _span_keys(self, tokens: np.ndarray) -> List[List[tuple]]:
         """Registry keys for every (level, block) the prompt covers:
-        ``(l, blk, clamped_len, digest)`` where the digest is a CHAINED
-        sha1 over the prefix bytes -- each level hashes the prompt once
-        (O(S) per level, not O(S^2/nr) re-hashes per span), and a
-        cryptographic digest makes a cross-prompt collision (which
+        ``(l, dtype_tag, blk, clamped_len, digest)`` where the digest is
+        a CHAINED sha1 over the prefix bytes -- each level hashes the
+        prompt once (O(S) per level, not O(S^2/nr) re-hashes per span),
+        and a cryptographic digest makes a cross-prompt collision (which
         would silently serve another request's KV pages) a non-event,
-        unlike Python's 64-bit ``hash``."""
+        unlike Python's 64-bit ``hash``.
+
+        ``dtype_tag`` is the level's page dtype + scale-granularity
+        identity (``level_dtypes``): a page's bytes are a function of
+        the prefix AND the storage format, so a registry persisted or
+        re-primed across a ``cache_dtype``/``quant_levels`` config
+        change must never hand an fp32-era page to an int8 pool (or
+        vice versa)."""
         S = len(tokens)
         out: List[List[tuple]] = []
         for l, need in enumerate(self.pages_needed(S)):
             span = self.nr << l
+            tag = self.level_dtypes[l]
             h = hashlib.sha1()
             keys = []
             for blk in range(need):
                 n = min((blk + 1) * span, S)
                 h.update(tokens[blk * span:n].tobytes())
-                keys.append((l, blk, n, h.copy().digest()))
+                keys.append((l, tag, blk, n, h.copy().digest()))
             out.append(keys)
         return out
 
@@ -342,26 +362,54 @@ def init_paged_caches(cfg, pool: PagePool):
     """Model-level paged caches mirroring ``lm_init_decode_caches``:
     one :class:`~repro.core.h1d_decode.PagedH1DCache` per layer, leaves
     stacked over layers for scan-able stacks (the engine's slot axis
-    then being 1, as for the dense cache)."""
+    then being 1, as for the dense cache).  A pool with quantized
+    levels (``quant_levels > 0``) yields ``QuantPagedH1DCache`` leaves:
+    int8 pages + per-row f32 scale arrays, the dtype split read off
+    ``pool.quant`` so the pool object stays the single source of
+    storage-format truth."""
     from repro.models.transformer import _stacked_caches
     Hkv, Dh = cfg.num_kv_heads, cfg.head_dim
     rows = [n * Hkv for n in pool.num_pages]
-    one = hd.init_paged_pool(rows, pool.nr, Dh, Dh, cfg.jdtype)
+    if any(pool.quant):
+        one = hd.init_quant_paged_pool(rows, pool.nr, Dh, Dh, cfg.jdtype,
+                                       quant=tuple(pool.quant))
+    else:
+        one = hd.init_paged_pool(rows, pool.nr, Dh, Dh, cfg.jdtype)
     if _stacked_caches(cfg):
         return jax.tree.map(
             lambda x: jnp.zeros((cfg.num_layers,) + x.shape, x.dtype), one)
     return [one for _ in range(cfg.num_layers)]
 
 
-def _per_level(cache: hd.PagedH1DCache, fn) -> hd.PagedH1DCache:
-    """Apply ``fn(level, k_arr, v_arr) -> (k, v)`` to every level."""
+def _quant_flags(cache) -> Tuple[bool, ...]:
+    if isinstance(cache, hd.QuantPagedH1DCache):
+        return tuple(bool(a.dtype == jnp.int8) for a in (cache.k, *cache.ck))
+    return (False,) * (1 + len(cache.ck))
+
+
+def _per_level(cache, fn, sfn=None):
+    """Apply ``fn(level, k_arr, v_arr) -> (k, v)`` to every level's
+    data arrays.  For a :class:`~repro.core.h1d_decode.QuantPagedH1DCache`
+    the per-row scale arrays (same leading physical-row axes) go through
+    ``sfn(level, ksc, vsc) -> (ksc, vsc)`` -- or pass unchanged when
+    ``sfn`` is None."""
     k, v = fn(0, cache.k, cache.v)
     ck, cv = [], []
     for i, (a, b) in enumerate(zip(cache.ck, cache.cv)):
         a2, b2 = fn(i + 1, a, b)
         ck.append(a2)
         cv.append(b2)
-    return hd.PagedH1DCache(k=k, v=v, ck=tuple(ck), cv=tuple(cv))
+    if not isinstance(cache, hd.QuantPagedH1DCache):
+        return hd.PagedH1DCache(k=k, v=v, ck=tuple(ck), cv=tuple(cv))
+    ksc, vsc = cache.ksc, cache.vsc
+    cksc, cvsc = list(cache.cksc), list(cache.cvsc)
+    if sfn is not None:
+        ksc, vsc = sfn(0, ksc, vsc)
+        for i in range(len(cksc)):
+            cksc[i], cvsc[i] = sfn(i + 1, cksc[i], cvsc[i])
+    return hd.QuantPagedH1DCache(k=k, v=v, ck=tuple(ck), cv=tuple(cv),
+                                 ksc=ksc, vsc=vsc,
+                                 cksc=tuple(cksc), cvsc=tuple(cvsc))
 
 
 def _map_layers(caches, stacked: bool, fn):
@@ -400,8 +448,10 @@ def apply_copies(caches, copies: Dict[int, List[Tuple[int, int]]],
                     va.at[:, dst].set(va[:, src]))
         return ka.at[dst].set(ka[src]), va.at[dst].set(va[src])
 
+    # scale arrays share the physical-row axis, so the same row copy
+    # applies (a page's scales travel with its int8 payload)
     return _map_layers(caches, stacked,
-                       lambda c: _per_level(c, per_level))
+                       lambda c: _per_level(c, per_level, per_level))
 
 
 def scatter_prefill(caches, dense_caches,
@@ -428,25 +478,59 @@ def scatter_prefill(caches, dense_caches,
 
     def per_layer(pool_c, dense_c):
         dlv = [(dense_c.k, dense_c.v)] + list(zip(dense_c.ck, dense_c.cv))
+        quant = _quant_flags(pool_c)
+
+        def blocks(dense_arr):
+            """Gather the written (..., nr, D) page blocks from the
+            dense prefill cache."""
+            rows, blks, _ = jidx[l_cur[0]]
+            if stacked:
+                NL, Rr, Ll, D = dense_arr.shape
+                blkd = dense_arr.reshape(NL, Rr, Ll // nr, nr, D)
+                return blkd[:, rows, blks]
+            Rr, Ll, D = dense_arr.shape
+            blkd = dense_arr.reshape(Rr, Ll // nr, nr, D)
+            return blkd[rows, blks]
+
+        l_cur = [0]
 
         def per_level(l, ka, va):
             if l not in jidx:
                 return ka, va
-            rows, blks, dst = jidx[l]
+            l_cur[0] = l
+            dst = jidx[l][2]
             dk, dv = dlv[l]
 
             def put(pool_arr, dense_arr):
+                vals = blocks(dense_arr)
+                if quant[l]:
+                    vals, _ = qz.quantize_int8(vals, axis=-1)
                 if stacked:
-                    NL, Rr, Ll, D = dense_arr.shape
-                    blkd = dense_arr.reshape(NL, Rr, Ll // nr, nr, D)
-                    return pool_arr.at[:, dst].set(blkd[:, rows, blks])
-                Rr, Ll, D = dense_arr.shape
-                blkd = dense_arr.reshape(Rr, Ll // nr, nr, D)
-                return pool_arr.at[dst].set(blkd[rows, blks])
+                    return pool_arr.at[:, dst].set(vals)
+                return pool_arr.at[dst].set(vals)
 
             return put(ka, dk), put(va, dv)
 
-        return _per_level(pool_c, per_level)
+        def per_level_sc(l, ksa, vsa):
+            # prefill scales: same absmax rule the decode kernel applies
+            # to its in-place rewrites, so a prefix-shared page and a
+            # decode-rebuilt page of the same tokens carry identical
+            # scales
+            if l not in jidx or not quant[l]:
+                return ksa, vsa
+            l_cur[0] = l
+            dst = jidx[l][2]
+            dk, dv = dlv[l]
+
+            def put(sc_arr, dense_arr):
+                sc = qz.int8_scale(blocks(dense_arr), axis=-1)[..., 0]
+                if stacked:
+                    return sc_arr.at[:, dst].set(sc)
+                return sc_arr.at[dst].set(sc)
+
+            return put(ksa, dk), put(vsa, dv)
+
+        return _per_level(pool_c, per_level, per_level_sc)
 
     if stacked:
         return per_layer(caches, dense_caches)
@@ -454,15 +538,16 @@ def scatter_prefill(caches, dense_caches,
 
 
 def snapshot_slot(caches, pool: PagePool, slot: int, Hkv: int,
-                  stacked: bool) -> Dict[int, Tuple[np.ndarray, np.ndarray,
-                                                    np.ndarray]]:
+                  stacked: bool) -> Dict[int, tuple]:
     """Swap-out a slot's mapped pages to host memory (preemption mode
-    'swap'): per level ``(blocks, k_content, v_content)`` where the
-    content arrays carry all layers (stacked leading dim) and all
-    ``Hkv`` page rows per block -- enough to restore the slot bit-exact
-    later, unlike recompute-resume whose re-prefill only matches the
-    decode-built cache to ~1e-6."""
-    snap: Dict[int, Tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
+    'swap'): per level ``(blocks, k_content, v_content, k_scales,
+    v_scales)`` where the content arrays carry all layers (stacked
+    leading dim) and all ``Hkv`` page rows per block -- enough to
+    restore the slot bit-exact later, unlike recompute-resume whose
+    re-prefill only matches the decode-built cache to ~1e-6.  For int8
+    levels the content is the raw int8 payload plus its per-row scales;
+    fp32 levels carry ``None`` scales."""
+    snap: Dict[int, tuple] = {}
     layers = [caches] if stacked else list(caches)
 
     for l in range(pool.M):
@@ -478,16 +563,33 @@ def snapshot_slot(caches, pool: PagePool, slot: int, Hkv: int,
             return ((c.k, c.v) if l == 0
                     else (c.ck[l - 1], c.cv[l - 1]))
 
+        def lvl_scales(c):
+            return ((c.ksc, c.vsc) if l == 0
+                    else (c.cksc[l - 1], c.cvsc[l - 1]))
+
+        has_sc = isinstance(layers[0], hd.QuantPagedH1DCache) and \
+            _quant_flags(layers[0])[l]
         if stacked:
             ka, va = lvl_arrays(caches)
             ks = np.asarray(ka[:, rj])
             vs = np.asarray(va[:, rj])
+            kss = vss = None
+            if has_sc:
+                ksa, vsa = lvl_scales(caches)
+                kss = np.asarray(ksa[:, rj])
+                vss = np.asarray(vsa[:, rj])
         else:
             ks = np.stack([np.asarray(lvl_arrays(c)[0][rj])
                            for c in layers])
             vs = np.stack([np.asarray(lvl_arrays(c)[1][rj])
                            for c in layers])
-        snap[l] = (blks.astype(np.int64), ks, vs)
+            kss = vss = None
+            if has_sc:
+                kss = np.stack([np.asarray(lvl_scales(c)[0][rj])
+                                for c in layers])
+                vss = np.stack([np.asarray(lvl_scales(c)[1][rj])
+                                for c in layers])
+        snap[l] = (blks.astype(np.int64), ks, vs, kss, vss)
     return snap
 
 
@@ -497,9 +599,26 @@ def restore_slot(caches, pool: PagePool, slot: int, snap, Hkv: int,
     snapshotted block (no registry sharing -- decode-written content is
     only ~1e-6-equal to a prefill of the same tokens, and restore must
     be bit-exact), map them, and scatter the saved bytes back.  Raises
-    :class:`PoolExhausted` (caller unwinds with ``release_slot``)."""
+    :class:`PoolExhausted` (caller unwinds with ``release_slot``).
+
+    The snapshot's per-level dtype must MATCH the pool's: a snapshot
+    taken under a different ``cache_dtype``/``quant_levels`` config is
+    a different wire format (int8 payloads are meaningless without
+    their scales and vice versa), so a mismatch raises ``ValueError``
+    instead of silently scattering garbage."""
+    first = caches if stacked else caches[0]
+    lvl_dtype = [a.dtype for a in (first.k, *first.ck)]
+    for l, entry in snap.items():
+        ks = entry[1]
+        if ks.dtype != lvl_dtype[l]:
+            raise ValueError(
+                f"snapshot level-{l} dtype {ks.dtype} cannot restore "
+                f"into a {lvl_dtype[l]} pool -- cache_dtype/quant_levels "
+                "changed between snapshot and restore")
+
     per_level_rows = {}
-    for l, (blks, _, _) in snap.items():
+    for l, entry in snap.items():
+        blks = entry[0]
         dst = []
         for b in blks:
             p = pool._alloc(l)
@@ -512,14 +631,26 @@ def restore_slot(caches, pool: PagePool, slot: int, snap, Hkv: int,
         def per_level(l, ka, va):
             if l not in snap:
                 return ka, va
-            _, ks, vs = snap[l]
+            _, ks, vs, _, _ = snap[l]
             dst = jnp.asarray(per_level_rows[l])
             if stacked:
                 return (ka.at[:, dst].set(jnp.asarray(ks)),
                         va.at[:, dst].set(jnp.asarray(vs)))
             return (ka.at[dst].set(jnp.asarray(ks[li])),
                     va.at[dst].set(jnp.asarray(vs[li])))
-        return _per_level(c, per_level)
+
+        def per_level_sc(l, ksa, vsa):
+            if l not in snap or snap[l][3] is None:
+                return ksa, vsa
+            _, _, _, kss, vss = snap[l]
+            dst = jnp.asarray(per_level_rows[l])
+            if stacked:
+                return (ksa.at[:, dst].set(jnp.asarray(kss)),
+                        vsa.at[:, dst].set(jnp.asarray(vss)))
+            return (ksa.at[dst].set(jnp.asarray(kss[li])),
+                    vsa.at[dst].set(jnp.asarray(vss[li])))
+
+        return _per_level(c, per_level, per_level_sc)
 
     if stacked:
         return per_layer(caches, 0)
@@ -530,13 +661,26 @@ def gather_slot_cache(caches, pool: PagePool, slot: int, Hkv: int,
                       stacked: bool):
     """Reconstruct a slot's DENSE H1DCache from its page tables
     (unmapped blocks read as zeros, exactly the dense engine's initial
-    state).  Used by the parity tests and debugging tooling."""
+    state).  Used by the parity tests and debugging tooling.  Quantized
+    levels are DEQUANTIZED to f32 on the way out -- the dense H1DCache
+    has no scale side-band, so this is the quantized pool's lossy view
+    (exact for zero/never-written rows, one rounding step otherwise)."""
     nr, Lp = pool.nr, pool.Lp
 
     def per_layer(pool_c):
         lvls = [(pool_c.k, pool_c.v)] + list(zip(pool_c.ck, pool_c.cv))
+        quant = _quant_flags(pool_c)
+        if isinstance(pool_c, hd.QuantPagedH1DCache):
+            slvls = ([(pool_c.ksc, pool_c.vsc)]
+                     + list(zip(pool_c.cksc, pool_c.cvsc)))
         outs = []
         for l, (ka, va) in enumerate(lvls):
+            if quant[l]:
+                ksa, vsa = slvls[l]
+                ka = jnp.asarray(qz.dequantize_int8(
+                    ka, jnp.asarray(ksa)[..., None]))
+                va = jnp.asarray(qz.dequantize_int8(
+                    va, jnp.asarray(vsa)[..., None]))
             Ll = Lp >> l
             shp = (ka.shape[0], Hkv, Ll, ka.shape[-1]) if stacked else \
                   (Hkv, Ll, ka.shape[-1])

@@ -73,6 +73,44 @@ def test_bench_serve_covers_both_engines():
     assert float(ratio["derived"].split("ratio=")[1].split()[0]) >= 2.0
 
 
+def test_bench_serve_int8_quality_curve():
+    """The serve baseline must also keep the int8 concurrency-vs-quality
+    curve diffable: int8 engine throughput/latency/pool rows, greedy
+    token-match rate vs the dense fp32 oracle (>= 0.99), per-level max
+    dequantization error, cache bytes per storage dtype at the shared
+    HBM budget, and the int8-vs-fp32-paged concurrency headline
+    (>= 1.5x at fixed HBM)."""
+    with open(os.path.join(ROOT, "BENCH_serve.json")) as f:
+        payload = json.load(f)
+    rows = {r["name"]: r["derived"] for r in payload["rows"]}
+    for want in ("serve_paged_int8_tok_s", "serve_paged_int8_latency",
+                 "serve_paged_int8_pool", "serve_quality_int8_match",
+                 "serve_quality_int8_dequant", "serve_quality_hbm_bytes",
+                 "serve_concurrency_int8_fixed_hbm"):
+        assert want in rows, want
+    assert "int8_slots" in payload["shape"]
+    rate = float(rows["serve_quality_int8_match"]
+                 .split("match_rate=")[1].split()[0])
+    assert rate >= 0.99, rate
+    # one max-|err| figure per hierarchy level, all finite and small
+    errs = [float(tok.split("=")[1])
+            for tok in rows["serve_quality_int8_dequant"].split()
+            if "_max_abs_err=" in tok]
+    assert len(errs) >= 2
+    assert all(0.0 <= e < 1.0 for e in errs), errs
+    hbm = rows["serve_quality_hbm_bytes"]
+    for key in ("dense_fp32=", "paged_fp32=", "paged_int8=",
+                "fp32_pages=", "int8_pages="):
+        assert key in hbm, key
+    # int8 pages fit >= 2x the fp32 pages inside the same byte budget
+    fp32_pages = int(hbm.split("fp32_pages=")[1].split()[0])
+    int8_pages = int(hbm.split("int8_pages=")[1].split()[0])
+    assert int8_pages >= 2 * fp32_pages, (fp32_pages, int8_pages)
+    ratio = float(rows["serve_concurrency_int8_fixed_hbm"]
+                  .split("ratio=")[1].split()[0])
+    assert ratio >= 1.5, ratio
+
+
 def test_bench_kernels_covers_every_mode():
     """The kernels baseline must keep one fwd and one fwd+bwd row per
     banded mode (incl. the shallow/deep 'sub' ratios) so the perf

@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core import h1d_attention, h1d_decode as hd
+from repro.core import quantization as qz
 
 IMPL = "pallas_interpret"
 
@@ -230,3 +231,151 @@ def test_paged_update_parity_bit_exact(Lmax, nr):
         flat, _ = _identity_paged(cache, R, Lmax, nr)
         for a, b in zip(jax.tree.leaves(flat), jax.tree.leaves(pool)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# quantized (int8 per-row) paged variants
+# ---------------------------------------------------------------------------
+
+# per-level quantization configs swept below: all levels, fine level
+# only, fine + first coarse (index 0 = level 0)
+_QCONFIGS = [
+    pytest.param(None, id="all-int8"),
+    pytest.param((True, False, False, False, False), id="l0-int8"),
+    pytest.param((True, True, False, False, False), id="l01-int8"),
+]
+
+
+def _quantize_pool(pool, quant):
+    """Quantize an fp32 identity pool into a QuantPagedH1DCache with the
+    same per-row absmax rule the decode-kernel rewrites use (fp32 levels
+    keep their data and carry never-read all-ones scales)."""
+    M = 1 + len(pool.ck)
+    quant = (True,) * M if quant is None else tuple(quant[:M])
+
+    def q(arr, is_q):
+        if is_q:
+            qd, sc = qz.quantize_int8(arr, axis=-1)
+            return qd, sc[..., 0]
+        return arr, jnp.ones(arr.shape[:-1], jnp.float32)
+
+    k, ksc = q(pool.k, quant[0])
+    v, vsc = q(pool.v, quant[0])
+    cks, cvs, ckscs, cvscs = [], [], [], []
+    for l, (ck, cv) in enumerate(zip(pool.ck, pool.cv), start=1):
+        a, b = q(ck, quant[l]); cks.append(a); ckscs.append(b)
+        a, b = q(cv, quant[l]); cvs.append(a); cvscs.append(b)
+    return hd.QuantPagedH1DCache(
+        k=k, v=v, ck=tuple(cks), cv=tuple(cvs), ksc=ksc, vsc=vsc,
+        cksc=tuple(ckscs), cvsc=tuple(cvscs)), quant
+
+
+def test_quant_roundtrip_idempotent():
+    """quantize -> dequantize -> requantize is idempotent where it
+    matters: the int8 payload is bit-stable from the first round trip,
+    and the recomputed scales stay within ~1 ulp of the previous round
+    (bounded oscillation, no compounding drift) -- so the decode
+    kernel's repeated sibling-pair rewrites cannot walk the cache."""
+    for axis in (-1, None):
+        x = jax.random.normal(_keys(1, seed=20)[0], (64, 16))
+        q, s = qz.quantize_int8(x, axis=axis)
+        s0 = s
+        for _ in range(4):
+            q2, s2 = qz.quantize_int8(qz.dequantize_int8(q, s), axis=axis)
+            np.testing.assert_array_equal(np.asarray(q2), np.asarray(q))
+            np.testing.assert_allclose(np.asarray(s2), np.asarray(s),
+                                       rtol=2e-7)
+            q, s = q2, s2
+        np.testing.assert_allclose(np.asarray(s), np.asarray(s0), rtol=5e-7)
+
+
+@pytest.mark.parametrize("quant", _QCONFIGS)
+@pytest.mark.parametrize("Lmax,nr,G", [(256, 16, 1), (128, 8, 4)])
+def test_quant_attend_error_bound_vs_fp32(Lmax, nr, G, quant):
+    """Quantized attend (jnp oracle AND fused kernel) stays within a
+    pinned error bound of the fp32 jnp oracle on the same identity page
+    layout -- boundary/quadrant positions (incl. t < nr) and GQA groups
+    from `_interesting_ts`."""
+    ts = _interesting_ts(Lmax, nr)
+    R, D = len(ts), 16
+    cache = _cache(R, Lmax, D, D, nr, seed=Lmax)
+    pool, nbl = _identity_paged(cache, R, Lmax, nr)
+    qpool, _ = _quantize_pool(pool, quant)
+    M = hd.hc.num_levels(Lmax, nr)
+    bidx, _ = _identity_tables(ts, nbl, nr, M)
+    q = jax.random.normal(_keys(1, seed=2)[0], (R, G, D))
+    t = jnp.asarray(ts)
+    z_fp32 = hd.decode_attend(cache, q, t, nr=nr)
+    z_jnp = hd.decode_attend_paged(qpool, q, t, bidx, nr=nr)
+    # int8 per-row absmax: per-element dequant error <= scale/2 ~ 0.4%
+    # of the row absmax; the softmax-weighted combination stays well
+    # under 5% absolute for unit-normal KV
+    err = float(jnp.max(jnp.abs(z_jnp - z_fp32)))
+    assert err < 0.05, err
+    z_ker = jax.jit(lambda p, qq, tt, bb: hd.decode_attend_paged(
+        p, qq, tt, bb, nr=nr, impl=IMPL))(qpool, q, t, bidx)
+    # oracle and kernel see identical int8+scale inputs -> tight parity
+    np.testing.assert_allclose(z_ker, z_jnp, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("quant", _QCONFIGS)
+@pytest.mark.parametrize("Lmax,nr", [(256, 16), (128, 8)])
+def test_quant_update_parity_bit_exact(Lmax, nr, quant):
+    """Quantized paged ancestor update: the fused kernel must be
+    BIT-exact against the jnp quant oracle -- int8 payloads AND the
+    freshly recomputed per-row scales -- including chained sequential
+    writes (the ancestor carry rides the pre-quantization f32 pair)."""
+    ts = _interesting_ts(Lmax, nr, n_extra=2)
+    R, D = len(ts), 16
+    cache = _cache(R, Lmax, D, D, nr, seed=nr)
+    pool, nbl = _identity_paged(cache, R, Lmax, nr)
+    qpool, qflags = _quantize_pool(pool, quant)
+    M = hd.hc.num_levels(Lmax, nr)
+    assert hd.quant_level_flags(qpool) == qflags
+    k1, k2 = _keys(2, seed=5)
+    t = jnp.asarray(ts)
+    upd_k = jax.jit(lambda p, a, b, c, u: hd.update_cache_paged(
+        p, a, b, c, u, impl=IMPL))
+    for step in range(3):
+        tt = jnp.minimum(t + step, Lmax - 1)
+        _, utab = _identity_tables(np.asarray(tt), nbl, nr, M)
+        kn = jax.random.normal(jax.random.fold_in(k1, step), (R, D))
+        vn = jax.random.normal(jax.random.fold_in(k2, step), (R, D))
+        pool_j = hd.update_cache_paged(qpool, kn, vn, tt, utab)
+        pool_k = upd_k(qpool, kn, vn, tt, utab)
+        for a, b in zip(jax.tree.leaves(pool_j), jax.tree.leaves(pool_k)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        qpool = pool_j
+    # written fine rows round-trip to the exact written values when the
+    # row is freshly quantized (its own absmax sets the scale)
+    if qflags[0]:
+        row0 = np.asarray(tt) % nr
+        got = qz.dequantize_int8(
+            qpool.k[utab[:, 0], row0],
+            qpool.ksc[utab[:, 0], row0][:, None])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(kn),
+                                   atol=2e-2)
+
+
+def test_quant_update_fp32_levels_untouched_scales():
+    """Mixed config: fp32 levels keep all-ones scale arrays (never
+    read, never written) while int8 levels get fresh per-row scales."""
+    Lmax, nr, D = 128, 8, 16
+    ts = _interesting_ts(Lmax, nr, n_extra=0)
+    R = len(ts)
+    cache = _cache(R, Lmax, D, D, nr, seed=9)
+    pool, nbl = _identity_paged(cache, R, Lmax, nr)
+    qpool, _ = _quantize_pool(pool, (True, False, False, False))
+    M = hd.hc.num_levels(Lmax, nr)
+    t = jnp.asarray(ts)
+    _, utab = _identity_tables(ts, nbl, nr, M)
+    kk = _keys(2, seed=10)
+    kn = jax.random.normal(kk[0], (R, D))
+    vn = jax.random.normal(kk[1], (R, D))
+    for impl in ("jnp", IMPL):
+        out = hd.update_cache_paged(qpool, kn, vn, t, utab, impl=impl)
+        for sc in (*out.cksc, *out.cvsc):
+            np.testing.assert_array_equal(
+                np.asarray(sc), np.ones_like(np.asarray(sc)))
+        for arr in (*out.ck, *out.cv):
+            assert arr.dtype == jnp.float32

@@ -86,6 +86,38 @@ def test_int8_compression_error_feedback_unbiased_over_time():
     assert float(jnp.abs(ef.residual["w"]).max()) < 0.1
 
 
+def test_int8_rounding_shared_with_kv_cache():
+    """The gradient-compression int8 path and the paged KV-cache quantizer
+    are the SAME utility (core.quantization) -- pin both call sites to
+    identical rounding, including the round-half-to-even ties and the
+    multiply-by-reciprocal scale rule the kernels rely on for parity."""
+    from repro.core import quantization as qz
+    from repro.optim import compression as comp
+    assert comp._quantize_int8 is qz.quantize_int8
+    assert comp._dequantize_int8 is qz.dequantize_int8
+    # round-half-to-even at scale 1.0: 0.5 -> 0, 1.5 -> 2, 2.5 -> 2
+    x = jnp.asarray([127.0, 0.5, 1.5, 2.5, -0.5, -1.5])
+    q, s = qz.quantize_int8(x)
+    assert q.dtype == jnp.int8
+    np.testing.assert_allclose(float(s), 1.0, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(q), [127, 0, 2, 2, 0, -2])
+    # scale = absmax * (1/127) as a MULTIPLY (never a divide, which
+    # XLA may rewrite differently inside fused kernels)
+    amax = jnp.float32(3.7)
+    np.testing.assert_array_equal(
+        np.asarray(qz.int8_scale(jnp.asarray([-amax, 0.1]))),
+        np.asarray(amax * jnp.float32(qz.RECIP_QMAX)))
+    # clipping at +-127 (no -128 asymmetry)
+    q2, _ = qz.quantize_int8(jnp.asarray([1000.0, -1e-30]))
+    assert int(q2[0]) == 127
+    # per-row (axis=-1) and per-tensor agree on a single row
+    row = jax.random.normal(jax.random.PRNGKey(2), (1, 16))
+    qa, sa = qz.quantize_int8(row, axis=-1)
+    qb, sb = qz.quantize_int8(row)
+    np.testing.assert_array_equal(np.asarray(qa), np.asarray(qb))
+    np.testing.assert_allclose(float(sa[0, 0]), float(sb), rtol=1e-7)
+
+
 def test_topk_compression_sparsity_and_feedback():
     key = jax.random.PRNGKey(1)
     g = {"w": jax.random.normal(key, (1000,))}

@@ -341,3 +341,174 @@ def test_pool_too_small_for_one_request_raises():
                        max_new_tokens=40))
     with pytest.raises(RuntimeError, match="pool"):
         eng.run()
+
+
+# ---------------------------------------------------------------------------
+# int8 quantized pool (cache_dtype='int8')
+# ---------------------------------------------------------------------------
+
+def _match_rate(out, ref):
+    """Positional greedy token-match rate across all requests."""
+    tot = sum(len(w) for w in ref)
+    hit = sum(1 for a, b in zip(out, ref)
+              for x, y in zip(a, b) if x == y)
+    assert all(len(a) == len(b) for a, b in zip(out, ref))
+    return hit / tot
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas_interpret"])
+def test_int8_paged_token_match_rate(impl):
+    """int8 paged engine vs the fp32 dense oracle on the standard mixed
+    workload: greedy token-match rate >= 0.99 (in practice 1.0 on the
+    smoke model -- int8 per-row dequant error rarely flips an argmax)."""
+    cfg, _ = _model()
+    wl = _workload(3, 6, cfg)
+    ref = _dense_ref(3, 6)
+    eng, out = _run(wl, slots=2, paged=True, cache_dtype="int8",
+                    decode_impl=impl)
+    assert _match_rate(out, ref) >= 0.99
+    assert eng.pool.occupancy() == 0.0
+    assert eng.cache_dtype == "int8"
+
+
+def test_int8_schedules_eviction_sharing_cow():
+    """Admission/eviction/COW schedules through the int8 pool: the same
+    pressure configs the fp32 tests pin must still exercise sharing,
+    COW and eviction, with token-match rate >= 0.99 vs the dense run."""
+    cfg, _ = _model()
+    # prefix sharing + COW (identical prompts)
+    p = (np.arange(30) * 3 % cfg.vocab_size).astype(np.int32)
+    wl = [(p.copy(), 4) for _ in range(3)]
+    _, ref = _run(wl, slots=3)
+    eng, out = _run(wl, slots=3, paged=True, pool_pages=24,
+                    cache_dtype="int8")
+    assert _match_rate(out, ref) >= 0.99
+    assert eng.pool.stats.shared_maps > 0
+    assert eng.pool.stats.cow_copies > 0
+    # eviction under pool pressure
+    wl = _workload(5, 8, cfg)
+    ref = _dense_ref(5, 8)
+    eng, out = _run(wl, slots=3, paged=True, pool_pages=10,
+                    cache_dtype="int8")
+    assert _match_rate(out, ref) >= 0.99
+    assert eng.pool.stats.evictions > 0
+
+
+def test_int8_preemption_swap_restores_bit_exact():
+    """Swap-mode preemption snapshots int8 payloads WITH their per-row
+    scales and restores them bit-exact: the preempted int8 run must
+    produce EXACTLY the same tokens as a never-preempted int8 run (the
+    int8 engine is schedule-independent, like the fp32 one)."""
+    cfg, _ = _model()
+    wl = _workload(7, 10, cfg)
+    _, baseline = _run(wl, slots=4, paged=True, pool_pages=64,
+                       cache_dtype="int8")
+    eng, out = _run(wl, slots=4, paged=True, pool_pages=8, lookahead=4,
+                    cache_dtype="int8")
+    assert eng.preemptions > 0, "schedule no longer exercises preemption"
+    assert out == baseline
+    assert _match_rate(out, _dense_ref(7, 10)) >= 0.99
+
+
+@given(st.integers(min_value=0, max_value=10 ** 6))
+@settings(max_examples=3, deadline=None)
+@pytest.mark.slow
+def test_property_int8_schedules_self_consistent(seed):
+    """Property form for the quantized pool: ANY pool size / lookahead /
+    budget combination yields the ample-pool int8 engine's exact greedy
+    streams (schedule independence), and >= 0.99 of the dense fp32
+    oracle's tokens."""
+    cfg, _ = _model()
+    rng = np.random.default_rng(seed)
+    wl = _workload(seed % 97, 6, cfg)
+    _, base = _run(wl, slots=2, paged=True, pool_pages=64,
+                   cache_dtype="int8")
+    _, ref = _run(wl, slots=2)
+    kw = dict(slots=int(rng.integers(2, 5)),
+              pool_pages=int(rng.integers(7, 20)),
+              lookahead=int(rng.integers(0, 5)),
+              token_budget=int(rng.integers(16, 64)))
+    _, out = _run(wl, paged=True, cache_dtype="int8", **kw)
+    assert out == base, kw
+    assert _match_rate(out, ref) >= 0.99, kw
+
+
+def test_registry_keys_carry_dtype_identity():
+    """Regression: prefix-registry keys must include the page's storage
+    format -- the same tokens under different cache_dtype/quant_levels
+    configs are different bytes and must never collide in a registry."""
+    toks = np.arange(16, dtype=np.int32)
+    pool_f = pc.PagePool(slots=1, max_len=64, nr=8, pool_pages=16)
+    pool_q = pc.PagePool(slots=1, max_len=64, nr=8, pool_pages=16,
+                         quant_levels=-1)
+    pool_m = pc.PagePool(slots=1, max_len=64, nr=8, pool_pages=16,
+                         quant_levels=1)      # fine int8, coarse fp32
+    pool_f.admit(0, toks)
+    pool_q.admit(0, toks)
+    pool_m.admit(0, toks)
+    kf, kq, km = (set(p.registry) for p in (pool_f, pool_q, pool_m))
+    assert kf and kq and km
+    assert not (kf & kq)                      # disjoint across dtypes
+    # the mixed pool's fine keys match the int8 pool, coarse the fp32
+    assert {k for k in km if k[0] == 0} == {k for k in kq if k[0] == 0}
+    assert {k for k in km if k[0] > 0} == {k for k in kf if k[0] > 0}
+    for key in pool_q.registry:
+        assert key[1] == "int8:rowscale"
+    for key in pool_f.registry:
+        assert key[1] == "f32"
+
+
+def test_int8_snapshot_restore_roundtrip_and_dtype_guard():
+    """Pool-level swap snapshot of quantized pages restores payloads AND
+    scales bit-exact into a fresh pool; restoring into a pool of a
+    different cache_dtype raises instead of scattering garbage."""
+    import jax.numpy as jnp
+    from repro.core import h1d_decode as hd
+    nr, Hkv, D = 8, 1, 4
+    toks = np.arange(20, dtype=np.int32)
+
+    def mk(quant_levels):
+        pool = pc.PagePool(slots=1, max_len=64, nr=nr, pool_pages=8,
+                           quant_levels=quant_levels)
+        rows = [n * Hkv for n in pool.num_pages]
+        if any(pool.quant):
+            c = hd.init_quant_paged_pool(rows, nr, D, D,
+                                         quant=tuple(pool.quant))
+        else:
+            c = hd.init_paged_pool(rows, nr, D, D)
+        return pool, [c]                      # 1-layer, unstacked
+
+    pool, caches = mk(-1)
+    pool.admit(0, toks)
+    key = jax.random.PRNGKey(0)
+    c = caches[0]
+    caches = [c._replace(
+        k=jax.random.randint(key, c.k.shape, -127, 128, jnp.int8),
+        v=jax.random.randint(key, c.v.shape, -127, 128, jnp.int8),
+        ksc=jax.random.uniform(key, c.ksc.shape) + 0.5,
+        vsc=jax.random.uniform(key, c.vsc.shape) + 0.5)]
+    snap = pc.snapshot_slot(caches, pool, 0, Hkv, stacked=False)
+    assert snap[0][3] is not None             # scales captured
+    pool2, caches2 = mk(-1)
+    caches2 = pc.restore_slot(caches2, pool2, 0, snap, Hkv,
+                              stacked=False)
+    for l in snap:
+        src = np.nonzero(pool.table[l][0] >= 0)[0]
+        dst = np.nonzero(pool2.table[l][0] >= 0)[0]
+        np.testing.assert_array_equal(src, dst)
+        sp = [int(pool.table[l][0, b]) for b in src]
+        dp = [int(pool2.table[l][0, b]) for b in dst]
+        a, b = caches[0], caches2[0]
+        ak, av = (a.k, a.v) if l == 0 else (a.ck[l - 1], a.cv[l - 1])
+        bk, bv = (b.k, b.v) if l == 0 else (b.ck[l - 1], b.cv[l - 1])
+        asc = a.ksc if l == 0 else a.cksc[l - 1]
+        bsc = b.ksc if l == 0 else b.cksc[l - 1]
+        np.testing.assert_array_equal(np.asarray(ak)[sp],
+                                      np.asarray(bk)[dp])
+        np.testing.assert_array_equal(np.asarray(av)[sp],
+                                      np.asarray(bv)[dp])
+        np.testing.assert_array_equal(np.asarray(asc)[sp],
+                                      np.asarray(bsc)[dp])
+    pool3, caches3 = mk(0)                    # fp32 pool
+    with pytest.raises(ValueError, match="dtype"):
+        pc.restore_slot(caches3, pool3, 0, snap, Hkv, stacked=False)
