@@ -88,9 +88,11 @@ def run(json_path=None):
     assert err_a < 1e-5 and err_u == 0.0
 
     if json_path:
+        from repro.kernels.tuning import get_policy
         payload = {"bench": "decode",
                    "shape": {"nr": NR, "d": D, "G": G, "Hkv": HKV},
                    "backend": jax.default_backend(),
+                   "tuning_digest": get_policy().tuning_digest(),
                    "xla_flags": os.environ.get("XLA_FLAGS", ""),
                    "rows": rows}
         with open(json_path, "w") as f:

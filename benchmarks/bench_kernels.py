@@ -113,9 +113,11 @@ def run(json_path=None):
     assert err_f < 1e-4 and err_b < 1e-4
 
     if json_path:
+        from repro.kernels.tuning import get_policy
         payload = {"bench": "kernels",
                    "shape": {"B": B, "G": G, "L": L, "d": d, "nr": nr},
                    "backend": jax.default_backend(),
+                   "tuning_digest": get_policy().tuning_digest(),
                    "xla_flags": os.environ.get("XLA_FLAGS", ""),
                    "rows": rows}
         with open(json_path, "w") as f:

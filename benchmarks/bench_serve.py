@@ -40,6 +40,11 @@ import numpy as np
 
 from .common import emit
 
+
+def _tuning_digest():
+    from repro.kernels.tuning import get_policy
+    return get_policy().tuning_digest()
+
 ARCH = "llama3.2-1b"
 MAX_LEN = 128
 DENSE_SLOTS = 2
@@ -261,6 +266,7 @@ def run(json_path=None, requests=12, prefix_len=64):
                              "int8_slots": INT8_SLOTS,
                              "new_tokens": NEW_TOKENS},
                    "backend": jax.default_backend(),
+                   "tuning_digest": _tuning_digest(),
                    "xla_flags": os.environ.get("XLA_FLAGS", ""),
                    "rows": rows}
         with open(json_path, "w") as f:

@@ -55,8 +55,12 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,scaling,kernels,"
                          "decode,serve,roofline")
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_<name>.json for benches that "
+                         "support machine-readable payloads")
     args, _ = ap.parse_known_args()
     want = set(args.only.split(",")) if args.only else None
+    json_benches = {"kernels", "decode", "serve", "scaling"}
 
     def on(name):
         return want is None or name in want
@@ -86,7 +90,10 @@ def main() -> None:
         jobs.append(("roofline", bench_roofline))
     for name, fn in jobs:
         try:
-            fn()
+            if args.json and name in json_benches:
+                fn(json_path=f"BENCH_{name}.json")
+            else:
+                fn()
         except Exception as e:
             failures += 1
             print(f"{name}_ERROR,0.0,{type(e).__name__}:{e}")

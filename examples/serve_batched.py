@@ -32,9 +32,10 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--decode-impl", default=None,
-                    choices=["jnp", "pallas", "pallas_interpret"],
+                    choices=["auto", "jnp", "pallas", "pallas_interpret"],
                     help="h1d decode tick backend (pallas = fused "
-                         "single-launch kernels)")
+                         "single-launch kernels; 'auto' resolves per "
+                         "backend)")
     ap.add_argument("--paged", action="store_true",
                     help="serve from the paged cache pool with prefix "
                          "sharing + copy-on-write")

@@ -24,6 +24,17 @@ python -m pytest -q --durations=0 "$@" | tee "$report"
 echo "== per-test budget =="
 python scripts/check_test_budget.py "$report" --budget 60
 
+echo "== kernel launch-policy autotune smoke =="
+# measured autotune round-trip on a tiny shape, against a throwaway
+# cache dir so CI never touches (or depends on) ~/.cache/repro_tune;
+# the second invocation proves the table survives a process boundary
+# and is applied without re-measurement
+tune_cache="$(mktemp -d)"
+REPRO_TUNE_CACHE="$tune_cache" timeout 60 \
+    python -m repro.kernels.tuning --autotune-smoke
+REPRO_TUNE_CACHE="$tune_cache" timeout 60 \
+    python -m repro.kernels.tuning --assert-cached
+
 echo "== examples smoke (serve_batched, dense + paged + int8) =="
 # tiny-config end-to-end smokes, held to the same 60 s budget each
 timeout 60 python examples/serve_batched.py \

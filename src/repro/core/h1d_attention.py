@@ -137,19 +137,23 @@ def h1d_attention(
     kv_weight: Optional[jnp.ndarray] = None,
     softmax_scale: Optional[float] = None,
     impl: str = "jnp",
-    tq: int = 128,
+    tq: Optional[int] = None,
 ) -> jnp.ndarray:
     """Hierarchical attention.  See module docstring for shapes/modes.
 
     ``impl``: banded-level backend -- ``'jnp'`` (blocked XLA; default and
-    the dry-run path), ``'pallas'`` (fused TPU kernel) or
-    ``'pallas_interpret'`` (kernel body on CPU, for validation).
-    ``tq``: Pallas query-tile rows (multiple of 128).
+    the dry-run path), ``'pallas'`` (fused TPU kernel),
+    ``'pallas_interpret'`` (kernel body on CPU, for validation) or
+    ``'auto'`` (backend-resolved by the process ``KernelPolicy``).
+    ``tq``: Pallas query-tile rows override (multiple of nr); ``None``
+    lets the policy's tuning table pick per level.
 
     ``k``/``v`` may be (B, L, Dk) (shared across G) or (B, G, L, Dk)
     (per-head KV -- the GSPMD-friendly layout: the head axis flows
     through every einsum unchanged).
     """
+    from repro.kernels.tuning import get_policy
+    impl = get_policy().resolve_impl(impl)
     B, G, L, D = q.shape
     kv_g = k.ndim == 4
     if kv_g:

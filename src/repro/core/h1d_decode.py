@@ -110,10 +110,24 @@ def _update_one(cache: H1DCache, k_new, v_new, t):
     return H1DCache(k=k, v=v, ck=tuple(ck), cv=tuple(cv))
 
 
-def _decode_kernels(impl: str):
+def _resolve_impl(impl: str, family: str) -> str:
+    """Canonicalize/resolve the decode ``impl`` through the process
+    launch policy (``repro.kernels.tuning``): unknown strings raise
+    with the allowed enum, ``'auto'`` resolves per backend.  Every
+    decode entry point calls this BEFORE its ``impl != 'jnp'`` branch
+    so ``'auto'`` reaches the right path."""
+    from repro.kernels.tuning import get_policy
+    return get_policy().resolve_impl(impl, family)
+
+
+def _decode_kernels(impl: str, family: str = "decode_attend"):
     """Lazy import (kernels -> core would otherwise cycle) + interpret
-    flag resolution for ``impl in ('pallas', 'pallas_interpret')``."""
+    flag resolution for ``impl in ('pallas', 'pallas_interpret')``.
+    Logs the (fixed, one-program-per-row) launch config so the policy
+    decision log covers the decode families too."""
     from repro.kernels import h1d_decode_kernel as dk
+    from repro.kernels.tuning import get_policy
+    get_policy().note_launch(family, impl=impl)
     return dk, impl == "pallas_interpret"
 
 
@@ -146,13 +160,14 @@ def update_cache(cache: H1DCache, k_new, v_new, t, *,
     Kernel impls inside an ``sp_scope(mesh)`` run the shard_map'd fused
     update: each token's ancestor pairs are rewritten on their owning
     shard only (see ``parallel.sp_attention.sp_update_cache``)."""
+    impl = _resolve_impl(impl, "decode_update")
     if impl != "jnp":
         ctx = _sp_decode_ctx(cache)
         if ctx is not None:
             from repro.parallel.sp_attention import sp_update_cache
             return sp_update_cache(cache, k_new, v_new, t, impl=impl,
                                    mesh=ctx[0], axis=ctx[1])
-        dk, interpret = _decode_kernels(impl)
+        dk, interpret = _decode_kernels(impl, "decode_update")
         return dk.update_cache_fused(cache, k_new, v_new, t,
                                      interpret=interpret)
     return jax.vmap(_update_one)(cache, k_new, v_new, t)
@@ -237,6 +252,7 @@ def decode_attend(cache: H1DCache, q, t, *, nr: int,
     Kernel impls inside an ``sp_scope(mesh)`` run the shard_map'd fused
     attend (per-shard partial kernels over owned blocks, one pmax+psum
     merge -- ``parallel.sp_attention.sp_decode_attend``)."""
+    impl = _resolve_impl(impl, "decode_attend")
     if impl != "jnp":
         ctx = _sp_decode_ctx(cache, nr)
         if ctx is not None:
@@ -244,7 +260,7 @@ def decode_attend(cache: H1DCache, q, t, *, nr: int,
             return sp_decode_attend(cache, q, t, nr=nr,
                                     softmax_scale=softmax_scale, impl=impl,
                                     mesh=ctx[0], axis=ctx[1])
-        dk, interpret = _decode_kernels(impl)
+        dk, interpret = _decode_kernels(impl, "decode_attend")
         return dk.decode_attend_fused(cache, q, t, nr=nr,
                                       softmax_scale=softmax_scale,
                                       interpret=interpret)
@@ -418,14 +434,17 @@ def update_cache_paged(pool, k_new, v_new, t, utab, *,
     -- the ancestor carry uses the pre-quantization f32 pair so the
     hierarchy invariants (mean/sum of the *stored* children up to one
     quantization step) hold at every level."""
-    if isinstance(pool, QuantPagedH1DCache):
+    quant = isinstance(pool, QuantPagedH1DCache)
+    family = "decode_update_paged_quant" if quant else "decode_update_paged"
+    impl = _resolve_impl(impl, family)
+    if quant:
         if impl != "jnp":
-            dk, interpret = _decode_kernels(impl)
+            dk, interpret = _decode_kernels(impl, family)
             return dk.update_cache_paged_quant(pool, k_new, v_new, t, utab,
                                                interpret=interpret)
         return _update_cache_paged_quant_jnp(pool, k_new, v_new, t, utab)
     if impl != "jnp":
-        dk, interpret = _decode_kernels(impl)
+        dk, interpret = _decode_kernels(impl, family)
         return dk.update_cache_paged(pool, k_new, v_new, t, utab,
                                      interpret=interpret)
     t = jnp.asarray(t, jnp.int32)
@@ -511,16 +530,19 @@ def decode_attend_paged(pool, q, t, bidx, *, nr: int,
     relocate the block reads.  A :class:`QuantPagedH1DCache` pool
     dequantizes each gathered page row with its per-row scale before
     the band math; everything downstream is identical."""
-    if isinstance(pool, QuantPagedH1DCache):
+    quant = isinstance(pool, QuantPagedH1DCache)
+    family = "decode_attend_paged_quant" if quant else "decode_attend_paged"
+    impl = _resolve_impl(impl, family)
+    if quant:
         if impl != "jnp":
-            dk, interpret = _decode_kernels(impl)
+            dk, interpret = _decode_kernels(impl, family)
             return dk.decode_attend_paged_quant(pool, q, t, bidx, nr=nr,
                                                 softmax_scale=softmax_scale,
                                                 interpret=interpret)
         return _decode_attend_paged_quant_jnp(pool, q, t, bidx, nr=nr,
                                               softmax_scale=softmax_scale)
     if impl != "jnp":
-        dk, interpret = _decode_kernels(impl)
+        dk, interpret = _decode_kernels(impl, family)
         return dk.decode_attend_paged(pool, q, t, bidx, nr=nr,
                                       softmax_scale=softmax_scale,
                                       interpret=interpret)
@@ -671,6 +693,7 @@ def update_cache_uniform(cache: H1DCache, k_new, v_new, t, *,
     outside an SP scope the jnp scalar-``t`` dynamic-slices remain the
     GSPMD fallback.
     """
+    impl = _resolve_impl(impl, "decode_update")
     if impl != "jnp":
         tt = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (cache.k.shape[0],))
         ctx = _sp_decode_ctx(cache)
@@ -678,7 +701,7 @@ def update_cache_uniform(cache: H1DCache, k_new, v_new, t, *,
             from repro.parallel.sp_attention import sp_update_cache
             return sp_update_cache(cache, k_new, v_new, tt, impl=impl,
                                    mesh=ctx[0], axis=ctx[1])
-        dk, interpret = _decode_kernels(impl)
+        dk, interpret = _decode_kernels(impl, "decode_update")
         return dk.update_cache_fused(cache, k_new, v_new, tt,
                                      interpret=interpret)
     k = jax.lax.dynamic_update_slice(cache.k, k_new[:, None], (0, t, 0))
@@ -708,6 +731,7 @@ def decode_attend_uniform(cache: H1DCache, q, t, *, nr: int,
     kernel (broadcast per row); inside ``sp_scope(mesh)`` a
     sequence-sharded cache stays on the kernel path via the shard_map'd
     partial attend (see ``update_cache_uniform``)."""
+    impl = _resolve_impl(impl, "decode_attend")
     if impl != "jnp":
         tt = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (cache.k.shape[0],))
         ctx = _sp_decode_ctx(cache, nr)
@@ -716,7 +740,7 @@ def decode_attend_uniform(cache: H1DCache, q, t, *, nr: int,
             return sp_decode_attend(cache, q, tt, nr=nr,
                                     softmax_scale=softmax_scale, impl=impl,
                                     mesh=ctx[0], axis=ctx[1])
-        dk, interpret = _decode_kernels(impl)
+        dk, interpret = _decode_kernels(impl, "decode_attend")
         return dk.decode_attend_fused(cache, q, tt, nr=nr,
                                       softmax_scale=softmax_scale,
                                       interpret=interpret)

@@ -5,9 +5,13 @@ from .h1d_block import (band_attention_fwd, band_attention_sub_fwd,
 from .h1d_block_bwd import band_attention_bwd, band_attention_sub_bwd
 from .h1d_decode_kernel import decode_attend_fused, update_cache_fused
 from .ref import band_attention_ref
+from .tuning import (KernelPolicy, IMPLS, FAMILIES, canonical_impl,
+                     get_policy, set_policy)
 
 __all__ = ["band_attention", "band_attention_fwd", "band_attention_bwd",
            "band_attention_sub_fwd", "band_attention_sub_bwd",
            "band_mask", "band_attention_ref", "resolve_tq",
            "decode_attend_fused", "update_cache_fused",
-           "MODES", "SUB_MODE"]
+           "MODES", "SUB_MODE",
+           "KernelPolicy", "IMPLS", "FAMILIES", "canonical_impl",
+           "get_policy", "set_policy"]

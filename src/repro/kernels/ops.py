@@ -22,9 +22,14 @@ queries keep the fine length L while k/v/w are the level-l coarsened
 sequence of length ``L / ratio`` -- see ``h1d_block`` for the fused
 kernel and DESIGN.md section 2 for the tiling.
 
-Tile-size policy: the requested ``tq`` is a *hint*.  ``band_attention``
-shrinks it to the largest tile compatible with (L, nr, mode) instead of
-silently falling back to XLA -- kernel benchmarks and parity tests always
+Tile-size policy: every launch resolves through the process
+:class:`repro.kernels.tuning.KernelPolicy` (DESIGN.md section 10).
+``impl`` is validated against the canonical enum (``'auto'`` resolves
+per backend); ``tq=None`` (the default) asks the policy for the tuned /
+default tile, while an explicit ``tq`` is an override that bypasses
+tuning.  Either way the hint is legalized by ``resolve_tq`` -- shrunk
+to the largest tile compatible with (L, nr, mode) instead of silently
+falling back to XLA, so kernel benchmarks and parity tests always
 measure what they claim to.  A truly incompatible shape (L not a
 multiple of nr) raises.
 
@@ -40,13 +45,15 @@ keep an ``nr``-row block per shard stay on the single-launch kernel
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from . import h1d_block
 from . import h1d_block_bwd
+from . import tuning
+from .tuning import resolve_tq  # re-exported; historically lived here
 
 
 def _blocked_jnp(q, k, v, w, *, nr: int, mode: str):
@@ -144,37 +151,6 @@ def _blocked_sub_jnp(q, k, v, w, *, nr: int, ratio: int):
             hc.unblock(m, axis=-2))
 
 
-def resolve_tq(L: int, nr: int, tq: int, mode: str, ratio: int = 1) -> int:
-    """Largest kernel query-tile size <= the ``tq`` hint that is valid
-    for (L, nr, mode).
-
-    Symmetric modes need ``tq % nr == 0 and L % tq == 0``; ``sub``
-    additionally needs the tile to align with the ``nq = nr * ratio``
-    query blocks (``tq % nq == 0 or nq % tq == 0``), which the
-    power-of-two hierarchy shapes always admit.  Raises on shapes no
-    tile can cover (L not a multiple of nr).
-    """
-    if L % nr:
-        raise ValueError(
-            f"band_attention: L={L} is not a multiple of nr={nr}; no "
-            f"kernel tiling exists (pad the sequence first)")
-    cap = min(tq, L)
-    if cap < nr:
-        raise ValueError(
-            f"band_attention: tq hint {tq} < nr={nr} cannot tile L={L}")
-    if mode == h1d_block.SUB_MODE:
-        # hierarchy shapes: L = nr * 2**M -- any nr * 2**j <= cap divides
-        # L and is compatible with the nq = nr * 2**l query blocks.
-        t = nr
-        while t * 2 <= cap and L % (t * 2) == 0:
-            t *= 2
-        return t
-    for t in range((cap // nr) * nr, nr - 1, -nr):
-        if L % t == 0:
-            return t
-    raise ValueError(f"band_attention: no tile divides L={L} (nr={nr})")
-
-
 @functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
 def _band_attention_kernel(q, k, v, w, nr, mode, tq, ratio, interpret):
     return h1d_block.band_attention_fwd(
@@ -206,26 +182,29 @@ _band_attention_kernel.defvjp(_fwd, _bwd)
 
 def band_attention(
     q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
-    *, nr: int, mode: str, impl: str = "jnp", tq: int = 128,
+    *, nr: int, mode: str, impl: str = "jnp", tq: Optional[int] = None,
     ratio: int = 1,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Banded block attention for one hierarchy level.  See module doc."""
+    policy = tuning.get_policy()
+    impl = policy.resolve_impl(impl)
     L = q.shape[-2]
     if impl == "jnp":
         if mode == h1d_block.SUB_MODE:
             return _blocked_sub_jnp(q, k, v, w, nr=nr, ratio=ratio)
         return _blocked_jnp(q, k, v, w, nr=nr, mode=mode)
-    if impl in ("pallas", "pallas_interpret"):
-        ctx = _sp_ctx()
-        if ctx is not None and _sp_shardable(L, ctx, nr, mode, ratio):
-            from repro.parallel.sp_attention import sp_band_attention
-            return sp_band_attention(q, k, v, w, nr=nr, mode=mode,
-                                     ratio=ratio, impl=impl, tq=tq,
-                                     mesh=ctx[0], axis=ctx[1])
-        tq = resolve_tq(L, nr, tq, mode, ratio)
-        return _band_attention_kernel(
-            q, k, v, w, nr, mode, tq, ratio, impl == "pallas_interpret")
-    raise ValueError(f"unknown impl {impl!r}")
+    # impl is 'pallas' or 'pallas_interpret' (the enum admits nothing else)
+    ctx = _sp_ctx()
+    if ctx is not None and _sp_shardable(L, ctx, nr, mode, ratio):
+        from repro.parallel.sp_attention import sp_band_attention
+        return sp_band_attention(q, k, v, w, nr=nr, mode=mode,
+                                 ratio=ratio, impl=impl, tq=tq,
+                                 mesh=ctx[0], axis=ctx[1])
+    hint = policy.band_tq(L=L, nr=nr, mode=mode, ratio=ratio,
+                          dtype=str(q.dtype), override=tq)
+    tq = resolve_tq(L, nr, hint, mode, ratio)
+    return _band_attention_kernel(
+        q, k, v, w, nr, mode, tq, ratio, impl == "pallas_interpret")
 
 
 def _sp_ctx():

@@ -30,9 +30,10 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--sample", action="store_true")
     ap.add_argument("--decode-impl", default=None,
-                    choices=["jnp", "pallas", "pallas_interpret"],
+                    choices=["auto", "jnp", "pallas", "pallas_interpret"],
                     help="h1d decode tick backend (pallas = fused "
-                         "single-launch kernels; default: cfg.decode_impl)")
+                         "single-launch kernels; 'auto' resolves per "
+                         "backend; default: cfg.decode_impl)")
     ap.add_argument("--sp-data", type=int, default=1,
                     help="sequence-parallel degree: shard the "
                          "hierarchical KV cache over an N-way 'data' "

@@ -43,11 +43,13 @@ def main(argv=None):
     ap.add_argument("--data", default="zipf", choices=["zipf", "hier"])
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--attn-impl", default=None,
-                    choices=["jnp", "pallas", "pallas_interpret"],
+                    choices=["auto", "jnp", "pallas", "pallas_interpret"],
                     help="banded-attention backend override (both passes "
-                         "run on the fused kernels for 'pallas')")
+                         "run on the fused kernels for 'pallas'; 'auto' "
+                         "resolves per backend via the KernelPolicy)")
     ap.add_argument("--attn-tq", type=int, default=None,
-                    help="Pallas query-tile rows (multiple of nr)")
+                    help="Pallas query-tile rows override (multiple of "
+                         "nr; default: the KernelPolicy tuning table)")
     ap.add_argument("--sp", action="store_true",
                     help="sequence-parallel attention: shard L over the "
                          "'data' axis and run the fused band kernels per "

@@ -100,15 +100,24 @@ def _heads_as_g(q, k, v):
 
 
 def _local_attention(q, k, v, window: int, causal: bool, kv_weight, impl,
-                     tq: int = 128):
+                     tq: Optional[int] = None):
     """Block-local sliding-window attention via the band kernel with
     block size = window (the paper's 'Local Attention' baseline)."""
+    from repro.kernels.tuning import get_policy
+    policy = get_policy()
+    impl = policy.resolve_impl(impl)
     B, L, Hq, D = q.shape
-    if impl != "jnp" and tq % window:
-        # kernel tiling needs tq % nr == 0 (window is nr here): shrink the
-        # tile hint to the largest window multiple instead of silently
-        # abandoning the kernel path (band_attention refines it further)
-        tq = max(window, (tq // window) * window)
+    if impl != "jnp":
+        if tq is None:
+            # tile hint from the policy's tuning table (window is nr here)
+            tq = policy.band_tq(L=L, nr=window,
+                                mode="l0_causal" if causal else "l0_bidir",
+                                dtype=str(q.dtype))
+        if tq % window:
+            # kernel tiling needs tq % nr == 0: shrink the tile hint to
+            # the largest window multiple instead of silently abandoning
+            # the kernel path (band_attention refines it further)
+            tq = max(window, (tq // window) * window)
     # kernel tiling also needs L % tq == 0; tq is a multiple of window
     # here, so padding to the tile unit keeps the block structure intact
     unit = window if impl == "jnp" else tq
@@ -146,13 +155,15 @@ def attn_apply(p, cfg: ModelConfig, x, positions, *, causal=True,
                kv_weight=None, layer_global=True):
     """Training/encoding attention.  x: (B, S, d); positions: (B, S)."""
     B, S, _ = x.shape
+    from repro.kernels.tuning import get_policy
+    impl = get_policy().resolve_impl(cfg.attn_impl)
     q, k, v = _project_qkv(p, cfg, x, positions)
     use_local = cfg.sliding_window > 0 and not layer_global
     if use_local:
         z = _local_attention(q, k, v, cfg.sliding_window, causal, kv_weight,
-                             cfg.attn_impl, tq=cfg.attn_tq)
+                             impl, tq=cfg.attn_tq)
     elif cfg.attention == "h1d":
-        if cfg.attn_impl in ("pallas", "pallas_interpret"):
+        if impl in ("pallas", "pallas_interpret"):
             # kernel path: heads fold into the pallas grid.  Every level
             # is fused -- level 0 via the symmetric band modes, and (for
             # causal_mode='fine-q') each coarse level via mode='sub', so
@@ -170,7 +181,7 @@ def attn_apply(p, cfg: ModelConfig, x, positions, *, causal=True,
                 w = w.at[:, S:].set(0.0)
             z = h1d_attention_mha(q, k, v, nr=cfg.nr, causal=causal,
                                   causal_mode=cfg.causal_mode, kv_weight=w,
-                                  impl=cfg.attn_impl, tq=cfg.attn_tq)[:, :S]
+                                  impl=impl, tq=cfg.attn_tq)[:, :S]
         else:
             Lp = hc.padded_length(S, cfg.nr)
             pad = Lp - S
@@ -186,7 +197,7 @@ def attn_apply(p, cfg: ModelConfig, x, positions, *, causal=True,
             qh, kh, vh = _heads_as_g(q, k, v)
             z = h1d_attention(qh, kh, vh, nr=cfg.nr, causal=causal,
                               causal_mode=cfg.causal_mode, kv_weight=w,
-                              impl=cfg.attn_impl, tq=cfg.attn_tq)
+                              impl=impl, tq=cfg.attn_tq)
             z = z.transpose(0, 2, 1, 3)[:, :S]
     elif cfg.attention == "full":
         qh, kh, vh = _heads_as_g(q, k, v)

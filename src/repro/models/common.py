@@ -39,10 +39,14 @@ class ModelConfig:
     attention: str = "h1d"       # h1d | full | paper's baseline comparison
     nr: int = 16                 # N_r, the paper's single hyper-parameter
     causal_mode: str = "fine-q"  # fine-q (leak-free) | coarse-q (paper-faithful)
-    attn_impl: str = "jnp"       # jnp | pallas | pallas_interpret
-    attn_tq: int = 128           # Pallas query-tile rows (multiple of nr)
-    decode_impl: str = "jnp"     # serving decode tick: jnp | pallas |
-                                 # pallas_interpret (fused single-launch
+    attn_impl: str = "jnp"       # auto | jnp | pallas | pallas_interpret
+                                 # ('auto': kernels.tuning.KernelPolicy
+                                 # resolves per backend)
+    attn_tq: Optional[int] = None  # Pallas query-tile rows override
+                                 # (multiple of nr); None = the policy's
+                                 # tuning table picks per launch
+    decode_impl: str = "jnp"     # serving decode tick: auto | jnp | pallas
+                                 # | pallas_interpret (fused single-launch
                                  # hierarchical-KV attend + ancestor update)
     cache_dtype: str = "fp32"    # paged KV-page storage: fp32 | int8
                                  # (int8: symmetric per-row scales, see

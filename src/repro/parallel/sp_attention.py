@@ -225,7 +225,7 @@ def _validate_sp_shape(L, d, nr, what):
 
 
 def sp_band_attention(q, k, v, w, *, nr: int, mode: str, ratio: int = 1,
-                      impl: str = "pallas", tq: int = 128,
+                      impl: str = "pallas", tq: Optional[int] = None,
                       mesh: Mesh, axis: str = "data"):
     """One banded level under sequence parallelism.
 
@@ -308,7 +308,7 @@ def sp_h1d_attention(q, k, v, *, mesh: Mesh, axis: str = "data",
                      nr: int = 16, causal: bool = False,
                      causal_mode: str = "fine-q", kv_weight=None,
                      softmax_scale: Optional[float] = None,
-                     impl: str = "pallas", tq: int = 128):
+                     impl: str = "pallas", tq: Optional[int] = None):
     """``core.h1d_attention`` semantics with the L axis sharded over
     ``mesh[axis]``.  Every level that keeps an ``nr``-row block per
     shard runs the unmodified fused kernel locally (+ halo epilogue);
@@ -565,8 +565,10 @@ def sp_decode_attend(cache, q, t, *, nr: int, softmax_scale=None,
     block indices + ownership bits scalar-prefetched), then the partial
     ``(num, den, m)`` triples merge with one ``pmax`` + ``psum``."""
     from repro.kernels import h1d_decode_kernel as dk
+    from repro.kernels.tuning import get_policy
 
     d = dict(mesh.shape)[axis]
+    impl = get_policy().resolve_impl(impl, "decode_attend")
     interpret = impl == "pallas_interpret"
     if d == 1:
         return dk.decode_attend_fused(cache, q, t, nr=nr,
@@ -612,8 +614,10 @@ def sp_update_cache(cache, k_new, v_new, t, *, impl: str = "pallas",
     with one masked ``psum`` and the (tiny, replicated) deep levels are
     updated identically everywhere by the unmodified kernel."""
     from repro.kernels import h1d_decode_kernel as dk
+    from repro.kernels.tuning import get_policy
 
     d = dict(mesh.shape)[axis]
+    impl = get_policy().resolve_impl(impl, "decode_update")
     interpret = impl == "pallas_interpret"
     if d == 1:
         return dk.update_cache_fused(cache, k_new, v_new, t,

@@ -69,10 +69,11 @@ class ServeEngine:
     rest of the request normally.  Silent admission used to prefill a
     cache longer than the slot rows, corrupting neighbouring slots.
 
-    ``decode_impl`` overrides ``cfg.decode_impl`` (``'jnp'`` |
-    ``'pallas'`` | ``'pallas_interpret'``): ``'pallas'`` runs each
-    decode tick through the fused single-launch hierarchical-KV kernels
-    (``kernels/h1d_decode_kernel``).
+    ``decode_impl`` overrides ``cfg.decode_impl`` (``'auto'`` |
+    ``'jnp'`` | ``'pallas'`` | ``'pallas_interpret'``): ``'pallas'``
+    runs each decode tick through the fused single-launch
+    hierarchical-KV kernels (``kernels/h1d_decode_kernel``); ``'auto'``
+    lets the process ``KernelPolicy`` resolve per backend.
 
     ``mesh`` enables sequence-parallel serving: the hierarchical cache
     shards its sequence axis over ``mesh[sp_axis]`` and every decode
@@ -133,6 +134,10 @@ class ServeEngine:
             raise ValueError(f"unknown overflow policy {overflow!r}")
         if decode_impl is not None and decode_impl != cfg.decode_impl:
             cfg = dataclasses.replace(cfg, decode_impl=decode_impl)
+        # validate against the canonical impl enum up front: a typo'd
+        # decode_impl must fail at engine construction, not mid-serve
+        from repro.kernels.tuning import canonical_impl
+        canonical_impl(cfg.decode_impl)
         from repro.models.transformer import _stacked_caches
         from repro.parallel.sp_attention import sp_scope
         self.cfg = cfg

@@ -48,8 +48,9 @@ class TrainConfig:
     # on the fused kernels (forward + hand-written backward) -- including
     # the causal_mode='fine-q' coarse levels, which lower to the 'sub'
     # kernel, so a default-config causal train step is kernel-complete.
-    attn_impl: Optional[str] = None   # jnp | pallas | pallas_interpret
-    attn_tq: Optional[int] = None     # Pallas query-tile rows
+    attn_impl: Optional[str] = None   # auto | jnp | pallas | pallas_interpret
+    attn_tq: Optional[int] = None     # Pallas query-tile rows override
+                                      # (None = KernelPolicy tuning table)
     attn_causal_mode: Optional[str] = None  # fine-q | coarse-q
 
 

@@ -17,6 +17,7 @@ BASELINES = {
     "BENCH_kernels.json": "kernels",
     "BENCH_decode.json": "decode",
     "BENCH_serve.json": "serve",
+    "BENCH_scaling.json": "scaling",
 }
 
 
@@ -31,9 +32,13 @@ def test_bench_json_schema(fname, bench):
     assert payload["bench"] == bench
     assert isinstance(payload["shape"], dict) and payload["shape"]
     assert isinstance(payload["backend"], str)
-    # baselines must record the XLA env they were measured under, so a
-    # regeneration with different flags is visible in the diff
+    # baselines must record the XLA env AND the launch-policy tuning
+    # state they were measured under, so a regeneration with different
+    # flags or tuning tables is visible in the diff
     assert "xla_flags" in payload
+    assert isinstance(payload["tuning_digest"], str) and payload[
+        "tuning_digest"]
+    assert isinstance(payload["backend"], str) and payload["backend"]
     rows = payload["rows"]
     assert isinstance(rows, list) and rows, "empty benchmark rows"
     names = set()
@@ -122,3 +127,29 @@ def test_bench_kernels_covers_every_mode():
         for suffix in ("fwd", "fwdbwd"):
             assert any(n.startswith(f"kernel_band_{tag}_")
                        and n.endswith(suffix) for n in names), (tag, suffix)
+
+
+def test_bench_scaling_near_linear_to_16k():
+    """The scaling baseline must keep the O(L) claim diffable: an H1D
+    row at every sweep length up to 16k with a tokens/s figure, a dense
+    comparison at the capped lengths, and fitted log-log slopes --
+    near-linear (< 1.6) for H1D, super-linear (> 1.6) for dense."""
+    with open(os.path.join(ROOT, "BENCH_scaling.json")) as f:
+        payload = json.load(f)
+    rows = {r["name"]: r["derived"] for r in payload["rows"]}
+    for L in payload["shape"]["lengths"]:
+        name = f"scaling_L{L}_h1d"
+        assert name in rows, name
+        assert "tok_s=" in rows[name]
+    assert 16384 in payload["shape"]["lengths"]
+    assert "full_us=" in rows[f"scaling_L{payload['shape']['dense_max_L']}"
+                              "_h1d"]
+    slope_h = float(rows["scaling_slope_h1d"].split("slope=")[1].split()[0])
+    slope_f = float(rows["scaling_slope_full"].split("slope=")[1].split()[0])
+    assert slope_h < 1.6, slope_h      # near-linear H1D sweep
+    assert slope_f > 1.6, slope_f      # quadratic dense baseline
+    # tokens/s stays near-flat: the slowest length keeps >= 1/4 of the
+    # fastest (a quadratic path would decay ~64x over a 64x L sweep)
+    ratio = float(rows["scaling_tok_s_ratio"]
+                  .split("min_max_ratio=")[1].split()[0])
+    assert ratio >= 0.25, ratio

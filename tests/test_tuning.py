@@ -1,0 +1,314 @@
+"""KernelPolicy launch-policy layer: impl enum validation, resolve_tq
+error paths, table fallback on corrupt/stale/foreign files, cache hits
+skipping re-measurement, the measured autotune round-trip, and
+``impl='auto'`` numerical parity across the band / decode / serve
+surfaces."""
+import json
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels import tuning
+from repro.kernels.tuning import (KernelPolicy, IMPLS, canonical_impl,
+                                  get_policy, set_policy, resolve_tq,
+                                  table_key)
+
+
+@pytest.fixture
+def fresh_policy(tmp_path):
+    """A policy with an isolated on-disk cache, installed as the process
+    policy for the duration of the test."""
+    p = KernelPolicy(cache_dir=str(tmp_path))
+    prev = set_policy(p)
+    yield p
+    set_policy(prev)
+
+
+def _band_inputs(L=64, nr=16, d=16, ratio=1, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    Lk = L // ratio
+    q = jax.random.normal(ks[0], (1, 2, L, d))
+    k = jax.random.normal(ks[1], (1, Lk, d))
+    v = jax.random.normal(ks[2], (1, Lk, d))
+    w = jnp.ones((1, Lk))
+    return q, k, v, w
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: canonical impl enum
+# ---------------------------------------------------------------------------
+
+def test_unknown_impl_raises_with_allowed_set():
+    with pytest.raises(ValueError, match="allowed impls"):
+        canonical_impl("pallas_interp")  # typo'd string must not fall through
+    q, k, v, w = _band_inputs()
+    with pytest.raises(ValueError, match="allowed impls"):
+        ops.band_attention(q, k, v, w, nr=16, mode="l0_bidir", impl="triton")
+
+
+def test_every_canonical_impl_accepted():
+    for impl in IMPLS:
+        assert canonical_impl(impl) == impl
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: resolve_tq error paths name mode/ratio
+# ---------------------------------------------------------------------------
+
+def test_resolve_tq_L_not_multiple_of_nr():
+    with pytest.raises(ValueError,
+                       match=r"mode=coarse_causal, ratio=1.*L=100.*nr=16"):
+        resolve_tq(100, 16, 128, "coarse_causal")
+
+
+def test_resolve_tq_hint_below_nr():
+    with pytest.raises(ValueError, match=r"mode=sub, ratio=4.*tq hint 8"):
+        resolve_tq(64, 16, 8, "sub", ratio=4)
+
+
+def test_resolve_tq_legalizes_hint():
+    # hint larger than L shrinks; non-dividing hint drops to a divisor
+    assert resolve_tq(64, 16, 512, "l0_bidir") == 64
+    assert resolve_tq(96, 16, 64, "l0_causal") == 48
+    assert resolve_tq(128, 16, 128, "sub", ratio=2) == 128
+
+
+# ---------------------------------------------------------------------------
+# table loading: corrupt / version-mismatch / foreign-backend files
+# ---------------------------------------------------------------------------
+
+def _write_table(policy, family, text=None, payload=None):
+    path = policy._table_path(family)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text if text is not None else json.dumps(payload))
+    return path
+
+
+def test_corrupt_table_warns_and_uses_default(fresh_policy):
+    _write_table(fresh_policy, "band_fwd", text="{not json!")
+    with pytest.warns(RuntimeWarning, match="corrupt tuning table"):
+        tq = fresh_policy.band_tq(L=64, nr=16, mode="l0_bidir")
+    assert tq == 128  # committed default, not a crash
+    assert fresh_policy.decisions[-1]["source"] == "default"
+
+
+def test_version_mismatch_warns_and_uses_default(fresh_policy):
+    key = table_key(64, 16, "l0_bidir")
+    _write_table(fresh_policy, "band_fwd", payload={
+        "version": 999, "backend": fresh_policy.backend,
+        "kernel": "band_fwd", "entries": {key: {"tq": 16}}})
+    with pytest.warns(RuntimeWarning, match="version"):
+        tq = fresh_policy.band_tq(L=64, nr=16, mode="l0_bidir")
+    assert tq == 128  # stale table's tq=16 must NOT apply
+
+
+def test_foreign_backend_table_warns_and_uses_default(fresh_policy):
+    key = table_key(64, 16, "l0_bidir")
+    _write_table(fresh_policy, "band_fwd", payload={
+        "version": tuning.TABLE_VERSION, "backend": "not-a-backend",
+        "kernel": "band_fwd", "entries": {key: {"tq": 16}}})
+    with pytest.warns(RuntimeWarning, match="backend"):
+        assert fresh_policy.band_tq(L=64, nr=16, mode="l0_bidir") == 128
+
+
+def test_valid_table_entry_wins_over_default(fresh_policy):
+    key = table_key(64, 16, "l0_bidir")
+    _write_table(fresh_policy, "band_fwd", payload={
+        "version": tuning.TABLE_VERSION, "backend": fresh_policy.backend,
+        "kernel": "band_fwd", "entries": {key: {"tq": 32}}})
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # a valid table must not warn
+        assert fresh_policy.band_tq(L=64, nr=16, mode="l0_bidir") == 32
+    assert fresh_policy.decisions[-1]["source"] == "table"
+
+
+def test_override_bypasses_table(fresh_policy):
+    key = table_key(64, 16, "l0_bidir")
+    _write_table(fresh_policy, "band_fwd", payload={
+        "version": tuning.TABLE_VERSION, "backend": fresh_policy.backend,
+        "kernel": "band_fwd", "entries": {key: {"tq": 32}}})
+    assert fresh_policy.band_tq(L=64, nr=16, mode="l0_bidir",
+                                override=64) == 64
+    assert fresh_policy.decisions[-1]["source"] == "override"
+
+
+# ---------------------------------------------------------------------------
+# satellite 3a: cache hit avoids re-measurement
+# ---------------------------------------------------------------------------
+
+def test_autotune_cache_hit_skips_measurement(fresh_policy, monkeypatch):
+    calls = {"n": 0}
+    real = KernelPolicy._measure
+
+    def counting(self, fn, **kw):
+        calls["n"] += 1
+        return real(self, fn, iters=1, warmup=1)
+
+    monkeypatch.setattr(KernelPolicy, "_measure", counting)
+    e1 = fresh_policy.autotune_band(L=64, nr=16, mode="l0_causal", d=8)
+    assert calls["n"] > 0 and e1["source"] == "measured"
+    n_first = calls["n"]
+
+    # same policy, same shape bucket: in-memory table hit, zero measures
+    e2 = fresh_policy.autotune_band(L=64, nr=16, mode="l0_causal", d=8)
+    assert calls["n"] == n_first and e2["tq"] == e1["tq"]
+
+    # fresh policy over the same cache dir: on-disk hit, zero measures
+    p2 = KernelPolicy(cache_dir=fresh_policy.cache_dir)
+    e3 = p2.autotune_band(L=64, nr=16, mode="l0_causal", d=8)
+    assert calls["n"] == n_first and e3["tq"] == e1["tq"]
+    assert p2.decisions[-1]["source"] == "table"
+
+
+def test_autotune_round_trip_applies_measured_config(fresh_policy):
+    """Autotune writes a table; a fresh policy reloads it and a real
+    band_attention launch applies the measured tq (decision log)."""
+    entry = fresh_policy.autotune_band(L=64, nr=16, mode="l0_bidir", d=8)
+    path = fresh_policy._table_path("band_fwd")
+    assert os.path.exists(path)
+    with open(path) as f:
+        table = json.load(f)
+    assert table["version"] == tuning.TABLE_VERSION
+    assert table["backend"] == fresh_policy.backend
+    key = table_key(64, 16, "l0_bidir")
+    assert table["entries"][key]["tq"] == entry["tq"]
+    assert table["entries"][key]["source"] == "measured"
+
+    p2 = KernelPolicy(cache_dir=fresh_policy.cache_dir)
+    prev = set_policy(p2)
+    try:
+        q, k, v, w = _band_inputs(d=8)
+        ops.band_attention(q, k, v, w, nr=16, mode="l0_bidir",
+                           impl="pallas_interpret")
+        dec = [d for d in p2.decisions if d["family"] == "band_fwd"]
+        assert dec and dec[-1]["source"] == "table"
+        assert dec[-1]["config"]["tq"] == entry["tq"]
+    finally:
+        set_policy(prev)
+
+
+def test_tuning_digest_tracks_tables(fresh_policy):
+    d0 = fresh_policy.tuning_digest()
+    assert len(d0) == 12 and int(d0, 16) >= 0
+    fresh_policy.autotune_band(L=64, nr=16, mode="sub", ratio=2, d=8)
+    p2 = KernelPolicy(cache_dir=fresh_policy.cache_dir)
+    assert p2.tuning_digest() != d0  # new table changes the digest
+
+
+def test_candidates_enumeration(fresh_policy):
+    cands = fresh_policy.candidates("band_fwd", L=256, nr=16,
+                                    mode="l0_bidir")
+    assert [c["tq"] for c in cands] == [16, 32, 64, 128, 256]
+    sub = fresh_policy.candidates("sub_fwd", L=256, nr=16, mode="sub",
+                                  ratio=8)
+    assert {c["tq"]: c["layout"] for c in sub} == {
+        16: "deep", 32: "deep", 64: "deep", 128: "wide", 256: "wide"}
+    dec = fresh_policy.candidates("decode_attend", L=0, nr=16, rows=7)
+    assert dec == [{"grid": (7,)}]
+    with pytest.raises(ValueError, match="allowed families"):
+        fresh_policy.candidates("nope", L=64, nr=16)
+
+
+# ---------------------------------------------------------------------------
+# satellite 3b: impl='auto' parity across the band modes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode,ratio", [("l0_bidir", 1), ("l0_causal", 1),
+                                        ("coarse_bidir", 1),
+                                        ("coarse_causal", 1),
+                                        ("sub", 2), ("sub", 8)])
+def test_auto_matches_interpret_band(fresh_policy, mode, ratio):
+    q, k, v, w = _band_inputs(L=128, nr=16, d=16, ratio=ratio)
+    ref = ops.band_attention(q, k, v, w, nr=16, mode=mode, ratio=ratio,
+                             impl="pallas_interpret")
+    out = ops.band_attention(q, k, v, w, nr=16, mode=mode, ratio=ratio,
+                             impl="auto")
+    for a, b in zip(out, ref):
+        assert float(jnp.abs(a - b).max()) <= 1e-5
+    # 'auto' resolution itself must be in the decision log
+    srcs = [d for d in fresh_policy.decisions if d["source"] == "auto"]
+    assert srcs and srcs[-1]["key"].startswith("impl@")
+
+
+def test_auto_grad_matches_interpret(fresh_policy):
+    from repro.core import h1d_attention
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (1, 2, 64, 16))
+    k = jax.random.normal(ks[1], (1, 64, 16))
+    v = jax.random.normal(ks[2], (1, 64, 16))
+
+    def loss(impl):
+        def f(q, k, v):
+            return jnp.sum(h1d_attention(q, k, v, nr=16, causal=True,
+                                         impl=impl) ** 2)
+        return jax.grad(f, argnums=(0, 1, 2))
+
+    g_auto = loss("auto")(q, k, v)
+    g_ref = loss("pallas_interpret")(q, k, v)
+    for a, b in zip(g_auto, g_ref):
+        assert float(jnp.abs(a - b).max()) <= 1e-5
+
+
+def test_auto_decode_parity(fresh_policy):
+    from repro.core import h1d_decode as hd
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    R, Lmax, D, G, nr = 3, 64, 16, 2, 16
+    cache = hd.prefill_cache(jax.random.normal(ks[0], (R, Lmax, D)),
+                             jax.random.normal(ks[1], (R, Lmax, D)),
+                             Lmax, nr)
+    q = jax.random.normal(ks[2], (R, G, D))
+    kn = jax.random.normal(ks[3], (R, D))
+    vn = jax.random.normal(ks[4], (R, D))
+    t = jnp.asarray([nr, 33, 48], dtype=jnp.int32)
+
+    c_auto = hd.update_cache(cache, kn, vn, t, impl="auto")
+    c_jnp = hd.update_cache(cache, kn, vn, t, impl="jnp")
+    for a, b in zip(jax.tree.leaves(c_auto), jax.tree.leaves(c_jnp)):
+        assert float(jnp.abs(a - b).max()) == 0.0  # bit-exact cache update
+
+    z_auto = hd.decode_attend(c_auto, q, t, nr=nr, impl="auto")
+    z_ref = hd.decode_attend(c_jnp, q, t, nr=nr, impl="pallas_interpret")
+    assert float(jnp.abs(z_auto - z_ref).max()) <= 1e-5
+    fams = {d["family"] for d in fresh_policy.decisions}
+    assert {"decode_update", "decode_attend"} <= fams
+
+
+def test_auto_paged_serve_matches_jnp(fresh_policy):
+    """decode_impl='auto' through the whole paged engine: same greedy
+    tokens as the jnp oracle."""
+    from test_paged import _model, _workload, _run
+    cfg, _ = _model()
+    wl = _workload(11, 4, cfg)
+    ref = _run(wl, slots=2, decode_impl="jnp")[1]
+    got = _run(wl, slots=2, decode_impl="auto", paged=True)[1]
+    assert got == ref
+
+
+def test_serve_engine_rejects_unknown_impl():
+    from test_paged import _model
+    from repro.serve import ServeEngine
+    cfg, params = _model()
+    with pytest.raises(ValueError, match="allowed impls"):
+        ServeEngine(cfg, params, max_len=64, decode_impl="tritn")
+
+
+def test_model_config_auto_attn_impl(fresh_policy):
+    """attn_impl='auto' end to end through attn_apply (tq from policy)."""
+    import dataclasses
+    from test_paged import _model
+    from repro.models import get_model
+    cfg, params = _model()
+    fns = get_model(cfg)
+    toks = jnp.asarray(np.arange(24, dtype=np.int32)[None, :] % cfg.vocab_size)
+    batch = {"tokens": toks}
+    ref = fns.prefill(params, dataclasses.replace(cfg, attn_impl="jnp"),
+                      batch, 32)[0]
+    out = fns.prefill(params, dataclasses.replace(cfg, attn_impl="auto"),
+                      batch, 32)[0]
+    assert float(jnp.abs(out - ref).max()) <= 1e-4
