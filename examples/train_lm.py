@@ -8,7 +8,6 @@ checkpoint.  Use --mesh 2x2 etc. with
 XLA_FLAGS=--xla_force_host_platform_device_count=4 to exercise the
 sharded path on CPU.
 """
-import argparse
 import sys
 
 from repro.launch.train import main as train_main

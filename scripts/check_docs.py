@@ -1,5 +1,7 @@
 """Fail if any file under src/ cites a repo-root markdown file that does
-not exist (e.g. a docstring pointing at DESIGN.md section 2).
+not exist (e.g. a docstring pointing at DESIGN.md section 2), or if
+README/DESIGN/EXPERIMENTS cite a ``src/**/*.py`` / ``tests/**/*.py``
+path that does not exist (a renamed module whose docs went stale).
 
 Run directly::
 
@@ -14,6 +16,9 @@ import sys
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 SRC = os.path.join(ROOT, "src")
+
+#: root docs whose code-path citations must resolve
+DOCS = ("README.md", "DESIGN.md", "EXPERIMENTS.md")
 
 # bare repo-root markdown names: FOO.md / foo_bar.md, but not paths like
 # docs/foo.md (those are checked relative to the repo root anyway).
@@ -42,15 +47,38 @@ def missing_references(src_dir=SRC, root=ROOT):
     return missing
 
 
+# code paths cited in the docs: src/... or tests/....py, optionally
+# with a trailing :symbol / :lineno qualifier (stripped before lookup)
+_PY_REF = re.compile(r"\b((?:src|tests)/[\w./-]+\.py)\b")
+
+
+def missing_code_paths(root=ROOT, docs=DOCS):
+    """Return [(doc, lineno, path)] for cited-but-absent code files."""
+    missing = []
+    for doc in docs:
+        doc_path = os.path.join(root, doc)
+        if not os.path.exists(doc_path):
+            continue
+        with open(doc_path, encoding="utf-8") as f:
+            for lineno, line in enumerate(f, 1):
+                for ref in _PY_REF.findall(line):
+                    if not os.path.exists(os.path.join(root, ref)):
+                        missing.append((doc, lineno, ref))
+    return missing
+
+
 def main():
     missing = missing_references()
     for path, lineno, name in missing:
         print(f"{path}:{lineno}: references {name}, which does not exist "
               f"at the repo root")
-    if missing:
-        print(f"{len(missing)} dangling doc reference(s)")
+    stale = missing_code_paths()
+    for doc, lineno, ref in stale:
+        print(f"{doc}:{lineno}: references {ref}, which does not exist")
+    if missing or stale:
+        print(f"{len(missing) + len(stale)} dangling doc reference(s)")
         return 1
-    print("all repo-root markdown references resolve")
+    print("all repo-root markdown and doc code-path references resolve")
     return 0
 
 

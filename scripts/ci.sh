@@ -11,8 +11,22 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== lint (ruff) =="
+# pyproject.toml carries the [tool.ruff] config; the container image may
+# not ship a ruff binary (no network installs), so gate on its presence
+if command -v ruff >/dev/null 2>&1; then
+    ruff check src tests scripts examples
+else
+    echo "ruff not installed; skipping lint"
+fi
+
 echo "== docs reference check =="
 python scripts/check_docs.py
+
+echo "== kernel launch-contract check =="
+# statically verify every BlockSpec index map / output coverage / alias /
+# scalar-prefetch domain over the full tuning candidate spaces
+timeout 60 python -m repro.analysis.check
 
 echo "== tier-1 tests (durations-budgeted) =="
 report="$(mktemp)"

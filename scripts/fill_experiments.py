@@ -5,7 +5,6 @@ artifacts/roofline.
 """
 import json
 import os
-import sys
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 DRY = os.path.join(ROOT, "artifacts", "dryrun")

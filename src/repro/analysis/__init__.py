@@ -1,0 +1,21 @@
+"""Static analysis over kernel launches (DESIGN.md section 11).
+
+* :mod:`repro.analysis.contracts` -- the :class:`LaunchContract` schema
+  and the shared :func:`launch` builder every ``pallas_call`` site in
+  ``repro.kernels`` goes through.
+* :mod:`repro.analysis.checker` -- abstract evaluation of the index
+  maps over the full grid: in-bounds blocks, exactly-once output
+  coverage, alias agreement, scalar-prefetch domains.
+* :mod:`repro.analysis.vmem` -- per-launch VMEM footprint estimates
+  (consumed by ``kernels/tuning.py`` candidate enumeration).
+* ``python -m repro.analysis.check`` -- the CI gate: every kernel
+  family x the full tuning candidate spaces.
+
+Only ``contracts`` is imported eagerly (the kernels import it);
+checker/vmem import the kernel modules lazily.
+"""
+from .contracts import (LaunchContract, Operand, ScalarSpec, capture,
+                        launch, recent)
+
+__all__ = ["LaunchContract", "Operand", "ScalarSpec", "capture",
+           "launch", "recent"]

@@ -1,0 +1,180 @@
+"""CI gate: statically verify every kernel family's launch contracts.
+
+``python -m repro.analysis.check`` traces every Pallas entry point --
+band/sub forward+backward over the FULL ``tuning.py`` candidate space
+(every legal ``tq`` per mode x shape bucket), and every decode family
+(dense, SP-partial, paged, quantized-paged) over representative pool
+geometries -- under ``jax.eval_shape`` (nothing compiles or runs), then
+checks each captured :class:`~repro.analysis.contracts.LaunchContract`:
+in-bounds blocks at every grid point, exactly-once output coverage,
+alias agreement, and scalar-prefetch domains.  Exit code 1 on any
+violation.  Wired into ``scripts/ci.sh`` with a 60 s budget.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Dict, List, Tuple
+
+from . import checker
+from .contracts import LaunchContract, capture
+
+BAND_LS = (64, 1024)
+SUB_CASES = ((2, 256), (8, 1024))   # (ratio, L): wide AND deep layouts
+
+
+def _trace(fn, *args) -> List[LaunchContract]:
+    import jax
+    with capture() as got:
+        jax.eval_shape(fn, *args)
+    return got
+
+
+def band_contracts(policy, *, nr: int, d: int):
+    """(label, contract) for every band/sub candidate config."""
+    import jax
+
+    from repro.kernels import h1d_block, h1d_block_bwd
+
+    f32 = "float32"
+    out: List[Tuple[str, LaunchContract]] = []
+    cases = [(m, 1, L) for m in h1d_block.MODES for L in BAND_LS]
+    cases += [("sub", r, L) for r, L in SUB_CASES]
+    for mode, ratio, L in cases:
+        fam_f = "sub_fwd" if mode == "sub" else "band_fwd"
+        fam_b = "sub_bwd" if mode == "sub" else "band_bwd"
+        Lk = L // ratio if mode == "sub" else L
+        B, G = 1, 2
+        q = jax.ShapeDtypeStruct((B, G, L, d), f32)
+        k = jax.ShapeDtypeStruct((B, Lk, d), f32)
+        v = jax.ShapeDtypeStruct((B, Lk, d), f32)
+        w = jax.ShapeDtypeStruct((B, Lk), f32)
+        y = jax.ShapeDtypeStruct((B, G, L, d), f32)
+        r_ = jax.ShapeDtypeStruct((B, G, L), f32)
+        for cand in policy.candidates(fam_f, L=L, nr=nr, mode=mode,
+                                      ratio=ratio):
+            tq = cand["tq"]
+            label = f"{mode} r{ratio} L{L} tq{tq}"
+            for c in _trace(
+                    lambda *a: h1d_block.band_attention_fwd(
+                        *a, nr=nr, mode=mode, tq=tq, ratio=ratio),
+                    q, k, v, w):
+                out.append((f"{fam_f} {label}", c))
+            for c in _trace(
+                    lambda *a: h1d_block_bwd.band_attention_bwd(
+                        *a, nr=nr, mode=mode, tq=tq, ratio=ratio),
+                    q, k, v, w, y, r_, r_, y, r_, r_):
+                out.append((f"{fam_b} {label}", c))
+    return out
+
+
+def decode_contracts(*, nr: int, d: int):
+    """(label, contract) for every decode family at two geometries."""
+    import jax.numpy as jnp
+
+    from repro.core import h1d_decode as hd
+    from repro.kernels import h1d_decode_kernel as dk
+
+    out: List[Tuple[str, LaunchContract]] = []
+    for Lmax, R, G in ((16 * nr, 3, 2), (64 * nr, 4, 1)):
+        label = f"nr{nr} Lmax{Lmax} R{R}"
+        cache = hd.init_cache(R, Lmax, d, d, nr)
+        q = jnp.zeros((R, G, d))
+        t = jnp.zeros((R,), jnp.int32)
+        kn = jnp.zeros((R, d))
+        vn = jnp.zeros((R, d))
+        nbands = 2 + len(cache.ck)
+        nlev = 1 + len(cache.ck)
+        bidx = jnp.zeros((R, nbands), jnp.int32)
+        ownb = jnp.ones((R, nbands), jnp.int32)
+        own1 = jnp.ones((R,), jnp.int32)
+        utab = jnp.zeros((R, nlev), jnp.int32)
+        # per-level page pools deliberately NOT equal-sized: the checker
+        # must see each level's own page-count domain
+        pages = [8 + 2 * nbands - 2 * i for i in range(nlev)]
+        pool = hd.init_paged_pool(pages, nr, d, d)
+        qpool = hd.init_quant_paged_pool(
+            pages, nr, d, d,
+            quant=tuple(i % 2 == 0 for i in range(nlev)))
+        for fam, fn, args in (
+            ("decode_attend",
+             lambda c, q, t: dk.decode_attend_fused(c, q, t, nr=nr),
+             (cache, q, t)),
+            ("decode_update",
+             lambda c, k, v, t: dk.update_cache_fused(c, k, v, t),
+             (cache, kn, vn, t)),
+            ("decode_attend_partial",
+             lambda c, q, t, b, o: dk.decode_attend_partial(
+                 c, q, t, b, o, nr=nr),
+             (cache, q, t, bidx, ownb)),
+            ("decode_update_partial",
+             lambda c, k, v, t, o: dk.update_cache_partial(c, k, v, t, o),
+             (cache, kn, vn, t, own1)),
+            ("decode_attend_paged",
+             lambda p, q, t, b: dk.decode_attend_paged(p, q, t, b, nr=nr),
+             (pool, q, t, bidx)),
+            ("decode_update_paged",
+             lambda p, k, v, t, u: dk.update_cache_paged(p, k, v, t, u),
+             (pool, kn, vn, t, utab)),
+            ("decode_attend_paged_quant",
+             lambda p, q, t, b: dk.decode_attend_paged_quant(
+                 p, q, t, b, nr=nr),
+             (qpool, q, t, bidx)),
+            ("decode_update_paged_quant",
+             lambda p, k, v, t, u: dk.update_cache_paged_quant(
+                 p, k, v, t, u),
+             (qpool, kn, vn, t, utab)),
+        ):
+            for c in _trace(fn, *args):
+                out.append((f"{fam} {label}", c))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--nr", type=int, default=16,
+                    help="paper block size for the band sweep")
+    ap.add_argument("--d", type=int, default=16,
+                    help="head dim for the traced shapes (candidate "
+                         "spaces do not depend on it)")
+    ap.add_argument("--samples", type=int, default=checker.DEFAULT_SAMPLES)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.kernels import tuning
+
+    t0 = time.time()
+    policy = tuning.KernelPolicy()
+    labeled = band_contracts(policy, nr=args.nr, d=args.d)
+    labeled += decode_contracts(nr=4, d=args.d)
+    labeled += decode_contracts(nr=args.nr, d=args.d)
+    t_trace = time.time() - t0
+
+    fams: Dict[str, int] = {}
+    violations: List[Tuple[str, checker.Violation]] = []
+    for label, contract in labeled:
+        fams[contract.family] = fams.get(contract.family, 0) + 1
+        for v in checker.check_contract(contract, samples=args.samples,
+                                        seed=args.seed):
+            violations.append((label, v))
+        if args.verbose:
+            print(f"  {label}: {contract.describe()}")
+
+    total = time.time() - t0
+    print(f"checked {len(labeled)} contracts across {len(fams)} families "
+          f"in {total:.1f}s (trace {t_trace:.1f}s):")
+    for fam in sorted(fams):
+        print(f"  {fam}: {fams[fam]} contracts")
+    if violations:
+        print(f"FAILED: {len(violations)} violations")
+        for label, v in violations:
+            print(f"  {label}: {v}")
+        return 1
+    print("OK: no violations")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

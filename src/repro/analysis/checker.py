@@ -1,0 +1,262 @@
+"""Static checker for :class:`~repro.analysis.contracts.LaunchContract`.
+
+Abstract evaluation of every BlockSpec index map over the FULL grid:
+the maps are elementwise functions of the grid indices (and the
+scalar-prefetch tables), so one vectorized call with numpy meshgrid
+index arrays evaluates all grid points at once -- jnp ops inside the
+maps execute eagerly on numpy inputs, and scalar-table reads like
+``tref[r]`` / ``bref[r, band]`` become numpy fancy indexing.
+
+Checks, per contract:
+
+* **in-bounds** -- every block's element offset range ``[idx*bs,
+  idx*bs + bs)`` lies inside the operand array, at every grid point
+  (this is what catches a bad halo/prev-block clamp at the grid edge).
+* **output coverage** -- a non-aliased output's blocks form an exact
+  partition of the array, each written exactly once; revisits are legal
+  only if contiguous in the row-major grid iteration order (the
+  VMEM-accumulation pattern of the dKVW kernels -- a non-contiguous
+  revisit means a block is flushed and re-fetched, i.e. a double
+  write).  Aliased outputs are in-place scatters by design (trash-page
+  collisions, partial pair writes), so they get only the in-bounds
+  check.
+* **alias agreement** -- an aliased input/output pair must agree on
+  array shape, dtype, block shape AND index map (evaluated pointwise
+  over the grid), or the in-place write lands somewhere else than the
+  read.
+* **scalar domains** -- the maps are evaluated at the lo/hi corners of
+  every scalar table's declared domain plus seeded random tables; a
+  violation that needs a scalar sample to manifest is tagged
+  ``scalar-oob`` (an out-of-range prefetch index under the *declared*
+  geometry).
+
+Everything here is pure numpy + eager jnp -- no tracing, no
+compilation; checking a contract is microseconds per map.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .contracts import LaunchContract, Operand
+
+DEFAULT_SAMPLES = 3   # random scalar tables per contract (plus lo+hi)
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    family: str
+    operand: str
+    kind: str     # oob | scalar-oob | coverage-gap | double-write |
+                  # alias-mismatch | bad-spec
+    detail: str
+
+    def __str__(self) -> str:
+        return f"[{self.family}] {self.operand}: {self.kind}: {self.detail}"
+
+
+def _grid_arrays(grid: Tuple[int, ...]) -> List[np.ndarray]:
+    """Flattened row-major meshgrid index arrays, one per grid axis.
+
+    Row-major (``indexing='ij'`` + ravel) makes position in the
+    flattened arrays == Pallas grid iteration order (last axis
+    fastest), which the revisit-contiguity rule relies on."""
+    axes = [np.arange(g, dtype=np.int64) for g in grid]
+    if not axes:
+        return []
+    return [m.ravel() for m in np.meshgrid(*axes, indexing="ij")]
+
+
+def _bounds_arrays(spec, which: str) -> np.ndarray:
+    b = getattr(spec, which)
+    return np.broadcast_to(np.asarray(b, dtype=np.int64), spec.shape)
+
+
+def _scalar_samples(contract: LaunchContract, samples: int,
+                    seed: int) -> List[Tuple[str, Tuple[np.ndarray, ...]]]:
+    """Scalar-table value samples: the lo corner, the hi corner, then
+    ``samples`` seeded-random tables, all within the declared domains."""
+    if not contract.scalars:
+        return [("none", ())]
+    los = [_bounds_arrays(s, "lo") for s in contract.scalars]
+    his = [_bounds_arrays(s, "hi") for s in contract.scalars]
+    out = [("lo", tuple(lo.copy() for lo in los)),
+           ("hi", tuple(hi.copy() for hi in his))]
+    rng = np.random.default_rng(seed)
+    for i in range(samples):
+        tabs = tuple(
+            lo + (rng.random(lo.shape) * (hi - lo + 1)).astype(np.int64)
+                 .clip(0, hi - lo)
+            for lo, hi in zip(los, his))
+        out.append((f"rand{i}", tabs))
+    return out
+
+
+def _eval_map(op: Operand, gargs: List[np.ndarray],
+              stabs: Tuple[np.ndarray, ...], n: int) -> np.ndarray:
+    """Evaluate one index map over the whole grid -> (n, ndim) int64
+    block indices.  Map components that are constant in the grid
+    indices come back as scalars and are broadcast."""
+    idx = op.index_map(*gargs, *stabs)
+    if not isinstance(idx, tuple):
+        idx = (idx,)
+    if len(idx) != len(op.block):
+        raise ValueError(
+            f"{op.name}: index map returned {len(idx)} components for a "
+            f"{len(op.block)}-d block {op.block}")
+    cols = [np.broadcast_to(np.asarray(c, dtype=np.int64), (n,))
+            for c in idx]
+    return np.stack(cols, axis=-1)
+
+
+def _check_bounds(contract: LaunchContract, op: Operand,
+                  bidx: np.ndarray, gargs: List[np.ndarray],
+                  sample: str) -> Optional[Violation]:
+    """In-bounds check for one operand under one scalar sample."""
+    shape = np.asarray(op.shape, dtype=np.int64)
+    block = np.asarray(op.block, dtype=np.int64)
+    off = bidx * block
+    bad = (off < 0) | (off + block > shape)
+    if not bad.any():
+        return None
+    pt = int(np.argwhere(bad.any(axis=1))[0][0])
+    gp = tuple(int(a[pt]) for a in gargs)
+    kind = "scalar-oob" if contract.scalars and sample != "lo" else "oob"
+    return Violation(
+        contract.family, op.name, kind,
+        f"block index {tuple(bidx[pt])} (element offset "
+        f"{tuple(off[pt])}, block {op.block}) escapes array "
+        f"{op.shape} at grid point {gp} [scalar sample: {sample}]")
+
+
+def _check_coverage(contract: LaunchContract, op: Operand,
+                    bidx: np.ndarray, sample: str) -> List[Violation]:
+    """Exactly-once coverage (+ contiguous-revisit) for one output."""
+    out: List[Violation] = []
+    shape = np.asarray(op.shape, dtype=np.int64)
+    block = np.asarray(op.block, dtype=np.int64)
+    if (shape % block).any():
+        return [Violation(
+            contract.family, op.name, "bad-spec",
+            f"block {op.block} does not divide array {op.shape}; "
+            f"coverage undefined")]
+    uniq, inverse = np.unique(bidx, axis=0, return_inverse=True)
+    expect = int(np.prod(shape // block))
+    if len(uniq) != expect:
+        missing = expect - len(uniq)
+        out.append(Violation(
+            contract.family, op.name, "coverage-gap",
+            f"{len(uniq)} distinct blocks written, array has {expect} "
+            f"({missing} never written) [scalar sample: {sample}]"))
+    # revisits must be contiguous in grid order: the block stays
+    # resident in VMEM across consecutive steps (accumulation); a gap
+    # means it was flushed and later re-written -> double write.
+    order = np.arange(len(inverse))
+    for u in range(len(uniq)):
+        pos = order[inverse == u]
+        if len(pos) and int(pos[-1] - pos[0]) != len(pos) - 1:
+            out.append(Violation(
+                contract.family, op.name, "double-write",
+                f"block {tuple(uniq[u])} written at non-contiguous grid "
+                f"steps {pos[0]}..{pos[-1]} ({len(pos)} visits) "
+                f"[scalar sample: {sample}]"))
+            break
+    return out
+
+
+def _check_alias(contract: LaunchContract, i: int, o: int,
+                 gargs: List[np.ndarray],
+                 samples: List[Tuple[str, Tuple[np.ndarray, ...]]],
+                 n: int) -> List[Violation]:
+    """Aliased pair: identical array geometry, dtype, block and map."""
+    inp = contract.inputs[i]
+    outp = contract.outputs[o]
+    name = f"{inp.name}~{outp.name}"
+    out: List[Violation] = []
+    if inp.shape != outp.shape or inp.dtype != outp.dtype:
+        out.append(Violation(
+            contract.family, name, "alias-mismatch",
+            f"aliased operand {inp.shape}/{inp.dtype} vs output "
+            f"{outp.shape}/{outp.dtype}"))
+        return out
+    if inp.block != outp.block:
+        out.append(Violation(
+            contract.family, name, "alias-mismatch",
+            f"aliased block shapes differ: {inp.block} vs {outp.block}"))
+        return out
+    for sample, stabs in samples:
+        bi = _eval_map(inp, gargs, stabs, n)
+        bo = _eval_map(outp, gargs, stabs, n)
+        if not np.array_equal(bi, bo):
+            pt = int(np.argwhere((bi != bo).any(axis=1))[0][0])
+            out.append(Violation(
+                contract.family, name, "alias-mismatch",
+                f"aliased index maps disagree at flat grid step {pt}: "
+                f"read {tuple(bi[pt])} vs write {tuple(bo[pt])} "
+                f"[scalar sample: {sample}]"))
+            return out
+    return out
+
+
+def check_contract(contract: LaunchContract, *,
+                   samples: int = DEFAULT_SAMPLES,
+                   seed: int = 0) -> List[Violation]:
+    """All violations in one contract (empty list == clean)."""
+    violations: List[Violation] = []
+    gargs = _grid_arrays(contract.grid)
+    n = int(np.prod(contract.grid)) if contract.grid else 1
+    stab_samples = _scalar_samples(contract, samples, seed)
+    aliased_outputs = {o for _, o in contract.aliases}
+
+    for s in contract.scalars:
+        lo = _bounds_arrays(s, "lo")
+        hi = _bounds_arrays(s, "hi")
+        if (lo > hi).any() or (lo < 0).any():
+            violations.append(Violation(
+                contract.family, s.name, "bad-spec",
+                f"scalar domain lo={s.lo} hi={s.hi} is empty or "
+                f"negative"))
+
+    for kind, ops in (("in", contract.inputs), ("out", contract.outputs)):
+        for j, op in enumerate(ops):
+            per_op: List[Violation] = []
+            for sample, stabs in stab_samples:
+                try:
+                    bidx = _eval_map(op, gargs, stabs, n)
+                except Exception as e:  # map itself is malformed
+                    per_op.append(Violation(
+                        contract.family, op.name, "bad-spec",
+                        f"index map failed: {type(e).__name__}: {e}"))
+                    break
+                v = _check_bounds(contract, op, bidx, gargs, sample)
+                if v is not None:
+                    per_op.append(v)
+                    break     # one bounds report per operand is enough
+                if kind == "out" and j not in aliased_outputs:
+                    cov = _check_coverage(contract, op, bidx, sample)
+                    if cov:
+                        per_op.extend(cov)
+                        break
+            violations.extend(per_op)
+
+    for i, o in contract.aliases:
+        violations.extend(
+            _check_alias(contract, i, o, gargs, stab_samples, n))
+    return violations
+
+
+def check_contracts(contracts, *, samples: int = DEFAULT_SAMPLES,
+                    seed: int = 0) -> List[Violation]:
+    out: List[Violation] = []
+    for c in contracts:
+        out.extend(check_contract(c, samples=samples, seed=seed))
+    return out
+
+
+def summarize(violations: List[Violation]) -> Dict[str, Any]:
+    by_kind: Dict[str, int] = {}
+    for v in violations:
+        by_kind[v.kind] = by_kind.get(v.kind, 0) + 1
+    return {"total": len(violations), "by_kind": by_kind}

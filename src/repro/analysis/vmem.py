@@ -1,0 +1,93 @@
+"""Per-launch VMEM footprint estimates from launch contracts.
+
+The model: a Pallas TPU launch keeps every operand's *block* resident
+in VMEM, double-buffered (the pipeline prefetches grid step i+1 while
+computing step i), so the footprint is
+
+    sum over operands of  prod(block_shape) * itemsize * 2
+
+against the ~16 MiB/core VMEM budget (a fraction is reserved for
+scalars, semaphores and spills).  Scalar-prefetch tables live in SMEM
+and are excluded.
+
+The estimates are computed from TRACED contracts -- the band entry
+points are run under ``jax.eval_shape`` inside ``contracts.capture()``
+for the exact candidate being considered -- not from hand-maintained
+closed forms, so the byte counts cannot drift from the kernels.
+``kernels/tuning.py`` calls :func:`band_launch_bytes` during candidate
+enumeration to reject over-budget configs statically (logged as
+``rejected:vmem``) before any measurement runs.
+"""
+from __future__ import annotations
+
+import math
+import os
+from typing import Optional
+
+import numpy as np
+
+from .contracts import LaunchContract, capture
+
+#: per-core VMEM, bytes (TPU v4/v5 class; the budget below leaves room)
+VMEM_BYTES = 16 * 1024 * 1024
+#: fraction of VMEM the pipelined operand blocks may claim
+DEFAULT_FRACTION = 0.75
+#: pipeline double-buffering factor on every operand block
+DOUBLE_BUFFER = 2
+
+
+def default_budget() -> int:
+    """The static VMEM budget in bytes ($REPRO_VMEM_BUDGET overrides)."""
+    env = os.environ.get("REPRO_VMEM_BUDGET")
+    if env:
+        return int(env)
+    return int(VMEM_BYTES * DEFAULT_FRACTION)
+
+
+def contract_vmem_bytes(contract: LaunchContract) -> int:
+    """Estimated VMEM bytes for one launch (double-buffered blocks)."""
+    total = 0
+    for op in (*contract.inputs, *contract.outputs):
+        total += (math.prod(op.block) * np.dtype(op.dtype).itemsize
+                  * DOUBLE_BUFFER)
+    return int(total)
+
+
+def band_launch_bytes(family: str, *, L: int, nr: int, mode: str,
+                      tq: int, ratio: int = 1, d: int = 64,
+                      dv: Optional[int] = None, B: int = 1, G: int = 1,
+                      dtype: str = "float32") -> int:
+    """Max per-launch VMEM footprint of one band candidate config.
+
+    Traces the real entry point(s) for ``(family, shape, tq)`` under
+    ``eval_shape`` (nothing is compiled or executed) and sizes the
+    captured contracts; backward families cover both the dQ and dKVW
+    launches and return the larger."""
+    import jax
+
+    from repro.kernels import h1d_block, h1d_block_bwd
+
+    dv = d if dv is None else dv
+    Lk = L // ratio if mode == h1d_block.SUB_MODE else L
+    f32 = "float32"
+    q = jax.ShapeDtypeStruct((B, G, L, d), dtype)
+    k = jax.ShapeDtypeStruct((B, Lk, d), dtype)
+    v = jax.ShapeDtypeStruct((B, Lk, dv), dtype)
+    w = jax.ShapeDtypeStruct((B, Lk), dtype)
+    with capture() as got:
+        if family.endswith("bwd"):
+            y = jax.ShapeDtypeStruct((B, G, L, dv), f32)
+            r = jax.ShapeDtypeStruct((B, G, L), f32)
+            jax.eval_shape(
+                lambda *a: h1d_block_bwd.band_attention_bwd(
+                    *a, nr=nr, mode=mode, tq=tq, ratio=ratio),
+                q, k, v, w, y, r, r, y, r, r)
+        else:
+            jax.eval_shape(
+                lambda *a: h1d_block.band_attention_fwd(
+                    *a, nr=nr, mode=mode, tq=tq, ratio=ratio),
+                q, k, v, w)
+    if not got:
+        raise RuntimeError(f"band_launch_bytes: no contract captured for "
+                           f"{family} L={L} nr={nr} tq={tq}")
+    return max(contract_vmem_bytes(c) for c in got)

@@ -33,10 +33,8 @@ level 0 via the symmetric band modes and each coarse fine-q level via
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Callable, Optional
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 from . import hierarchy as hc

@@ -74,7 +74,6 @@ def init_cache(B: int, Lmax: int, D: int, Dv: int, nr: int,
 def prefill_cache(k: jnp.ndarray, v: jnp.ndarray, Lmax: int, nr: int) -> H1DCache:
     """Build a cache from a full prefix (B, Lp, D); pads to Lmax."""
     B, Lp, D = k.shape
-    Dv = v.shape[-1]
     pad = Lmax - Lp
     kf = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
     vf = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))

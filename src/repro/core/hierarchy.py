@@ -18,9 +18,7 @@ uniform quadrant exclusion masks implemented below.
 from __future__ import annotations
 
 import math
-from functools import partial
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -13,7 +13,6 @@ Two independent implementations used by tests and benchmarks:
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np

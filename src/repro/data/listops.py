@@ -15,7 +15,7 @@ PAD=0 ... encoded as: PAD=0, digits 1..10, ops 11..14, close 15.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 import numpy as np
 

@@ -39,11 +39,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.analysis.contracts import launch
+
 NEG_INF = -3.0e38
 _MIN_M = -1e30
 
 MODES = ("l0_bidir", "l0_causal", "coarse_bidir", "coarse_causal")
 SUB_MODE = "sub"   # fine-q causal level>=1: fine queries x coarse keys
+
+# operand names (contract diagnostics) for sub_kv_specs' two layouts
+SUB_KV_NAMES = {
+    "wide": ("k_self", "k_prev", "v_self", "v_prev", "w_self", "w_prev"),
+    "deep": ("k_blk", "v_blk", "w_blk"),
+}
 
 
 def band_mask(qi, ki, nr: int, mode: str, lk: int, ratio: int = 1):
@@ -260,7 +268,7 @@ def band_attention_sub_fwd(
     f32 = jnp.float32
 
     in_specs = [pl.BlockSpec((1, 1, tq, d), lambda b, g, i: (b, g, i, 0))]
-    build, _ = sub_kv_specs(nr, ratio, tq)
+    build, layout = sub_kv_specs(nr, ratio, tq)
     kv_specs, kv_inputs = build(k, v, w, d, dv)
     in_specs += kv_specs
     inputs = [q] + kv_inputs
@@ -278,14 +286,14 @@ def band_attention_sub_fwd(
 
     kernel = functools.partial(_fwd_sub_kernel, nr=nr, ratio=ratio, tq=tq,
                                lk=Lk)
-    return pl.pallas_call(
-        kernel,
-        grid=(B, G, nt),
-        in_specs=in_specs,
-        out_specs=out_specs,
-        out_shape=out_shape,
-        interpret=interpret,
-    )(*inputs)
+    return launch(
+        kernel, family="sub_fwd", grid=(B, G, nt),
+        in_specs=in_specs, out_specs=out_specs, out_shape=out_shape,
+        operands=inputs, interpret=interpret,
+        in_names=("q",) + SUB_KV_NAMES[layout],
+        out_names=("y", "dn", "m"),
+        meta=dict(mode=SUB_MODE, nr=nr, ratio=ratio, tq=tq, lk=Lk,
+                  layout=layout))
 
 
 def band_attention_fwd(
@@ -356,11 +364,11 @@ def band_attention_fwd(
     )
 
     kernel = functools.partial(_fwd_kernel, nr=nr, mode=mode, tq=tq, lk=L)
-    return pl.pallas_call(
-        kernel,
-        grid=(B, G, nt),
-        in_specs=in_specs,
-        out_specs=out_specs,
-        out_shape=out_shape,
-        interpret=interpret,
-    )(*inputs)
+    halo = ("self", "prev") if causal else ("self", "prev", "next")
+    return launch(
+        kernel, family="band_fwd", grid=(B, G, nt),
+        in_specs=in_specs, out_specs=out_specs, out_shape=out_shape,
+        operands=inputs, interpret=interpret,
+        in_names=("q",) + tuple(f"{a}_{h}" for a in "kvw" for h in halo),
+        out_names=("y", "dn", "m"),
+        meta=dict(mode=mode, nr=nr, tq=tq, lk=L))

@@ -52,8 +52,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .h1d_block import (band_mask, sub_kv_specs, NEG_INF, _MIN_M, MODES,
-                        SUB_MODE)
+from repro.analysis.contracts import launch
+
+from .h1d_block import (band_mask, sub_kv_specs, NEG_INF, MODES, SUB_MODE,
+                        SUB_KV_NAMES)
 
 
 def _recompute(q, k, w, m, qi, ki, *, nr: int, mode: str, lk: int,
@@ -432,16 +434,20 @@ def band_attention_sub_bwd(q, k, v, w, y, dn, m, gy, gdn, gm, *,
                  pl.BlockSpec((1, 1, tq), rtile_map)]
     inputs += [m, gy, gdn, gmh]
 
-    dq, gmn = pl.pallas_call(
+    dq, gmn = launch(
         functools.partial(_dq_sub_kernel, nr=nr, ratio=ratio, tq=tq, lk=Lk),
-        grid=(B, G, nt),
+        family="sub_bwd", grid=(B, G, nt),
         in_specs=in_specs,
         out_specs=(pl.BlockSpec((1, 1, tq, d), qtile_map),
                    pl.BlockSpec((1, 1, tq), rtile_map)),
         out_shape=(jax.ShapeDtypeStruct((B, G, Lq, d), f32),
                    jax.ShapeDtypeStruct((B, G, Lq), f32)),
-        interpret=interpret,
-    )(*inputs)
+        operands=inputs, interpret=interpret,
+        in_names=(("q",) + SUB_KV_NAMES[layout]
+                  + ("m", "gy", "gdn", "gmh")),
+        out_names=("dq", "gmn"),
+        meta=dict(mode=SUB_MODE, nr=nr, ratio=ratio, tq=tq, lk=Lk,
+                  layout=layout, phase="dq"))
 
     # ---- pass 2: dK/dV/dW on the coarse key axis --------------------------
     if layout == "wide":
@@ -473,10 +479,10 @@ def band_attention_sub_bwd(q, k, v, w, y, dn, m, gy, gdn, gm, *,
                 in_specs.append(pl.BlockSpec((1, 1, rows), mp))
                 inputs.append(tensor)
 
-        dk, dvv, dw = pl.pallas_call(
+        dk, dvv, dw = launch(
             functools.partial(_dkvw_sub_wide_kernel, nr=nr, ratio=ratio,
                               tq=tq, lk=Lk),
-            grid=(B, nt, G),
+            family="sub_bwd", grid=(B, nt, G),
             in_specs=in_specs,
             out_specs=(pl.BlockSpec((1, tqc, d), kv_self),
                        pl.BlockSpec((1, tqc, dv), kv_self),
@@ -484,8 +490,13 @@ def band_attention_sub_bwd(q, k, v, w, y, dn, m, gy, gdn, gm, *,
             out_shape=(jax.ShapeDtypeStruct((B, Lk, d), f32),
                        jax.ShapeDtypeStruct((B, Lk, dv), f32),
                        jax.ShapeDtypeStruct((B, Lk), f32)),
-            interpret=interpret,
-        )(*inputs)
+            operands=inputs, interpret=interpret,
+            in_names=("k", "v", "w", "q_self", "q_next",
+                      "gy_self", "gy_next", "gdn_self", "gdn_next",
+                      "m_self", "m_next", "gmn_self", "gmn_next"),
+            out_names=("dk", "dv", "dw"),
+            meta=dict(mode=SUB_MODE, nr=nr, ratio=ratio, tq=tq, lk=Lk,
+                      layout="wide", phase="dkvw"))
     else:
         s_blk = nq // tq
         nkb = Lk // nr
@@ -506,10 +517,10 @@ def band_attention_sub_bwd(q, k, v, w, y, dn, m, gy, gdn, gm, *,
                     pl.BlockSpec((1, 1, tq), r_map)]
         inputs = [k, v, w, q, gy, gdn, m, gmn]
 
-        dk, dvv, dw = pl.pallas_call(
+        dk, dvv, dw = launch(
             functools.partial(_dkvw_sub_deep_kernel, nr=nr, ratio=ratio,
                               tq=tq, lk=Lk),
-            grid=(B, nkb, s_blk, G),
+            family="sub_bwd", grid=(B, nkb, s_blk, G),
             in_specs=in_specs,
             out_specs=(pl.BlockSpec((1, nr, d), kv_blk),
                        pl.BlockSpec((1, nr, dv), kv_blk),
@@ -517,8 +528,11 @@ def band_attention_sub_bwd(q, k, v, w, y, dn, m, gy, gdn, gm, *,
             out_shape=(jax.ShapeDtypeStruct((B, Lk, d), f32),
                        jax.ShapeDtypeStruct((B, Lk, dv), f32),
                        jax.ShapeDtypeStruct((B, Lk), f32)),
-            interpret=interpret,
-        )(*inputs)
+            operands=inputs, interpret=interpret,
+            in_names=("k", "v", "w", "q", "gy", "gdn", "m", "gmn"),
+            out_names=("dk", "dv", "dw"),
+            meta=dict(mode=SUB_MODE, nr=nr, ratio=ratio, tq=tq, lk=Lk,
+                      layout="deep", phase="dkvw"))
 
     return (dq.astype(q.dtype), dk.astype(k.dtype),
             dvv.astype(v.dtype), dw.astype(w.dtype))
@@ -597,16 +611,20 @@ def band_attention_bwd(
                  pl.BlockSpec((1, 1, tq), rtile_map)]
     inputs += [m, gy, gdn, gmh]
 
-    dq, gmn = pl.pallas_call(
+    halo = ("self", "prev") if causal else ("self", "prev", "next")
+    dq, gmn = launch(
         functools.partial(_dq_kernel, nr=nr, mode=mode, tq=tq, lk=L),
-        grid=(B, G, nt),
+        family="band_bwd", grid=(B, G, nt),
         in_specs=in_specs,
         out_specs=(pl.BlockSpec((1, 1, tq, d), qtile_map),
                    pl.BlockSpec((1, 1, tq), rtile_map)),
         out_shape=(jax.ShapeDtypeStruct((B, G, L, d), f32),
                    jax.ShapeDtypeStruct((B, G, L), f32)),
-        interpret=interpret,
-    )(*inputs)
+        operands=inputs, interpret=interpret,
+        in_names=(("q",) + tuple(f"{a}_{h}" for a in "kvw" for h in halo)
+                  + ("m", "gy", "gdn", "gmh")),
+        out_names=("dq", "gmn"),
+        meta=dict(mode=mode, nr=nr, tq=tq, lk=L, phase="dq"))
 
     # ---- pass 2: dK/dV/dW (key-tile grid, g innermost accumulates) --------
     # halo query operands (the nr edge rows of the neighbouring tile)
@@ -638,9 +656,10 @@ def band_attention_bwd(
             in_specs.append(pl.BlockSpec((1, 1, rows), mp))
             inputs.append(tensor)
 
-    dk, dvv, dw = pl.pallas_call(
+    qhalo = ("self", "next") if causal else ("self", "next", "prev")
+    dk, dvv, dw = launch(
         functools.partial(_dkvw_kernel, nr=nr, mode=mode, tq=tq, lk=L),
-        grid=(B, nt, G),
+        family="band_bwd", grid=(B, nt, G),
         in_specs=in_specs,
         out_specs=(pl.BlockSpec((1, tq, d), kv_self),
                    pl.BlockSpec((1, tq, dv), kv_self),
@@ -648,8 +667,14 @@ def band_attention_bwd(
         out_shape=(jax.ShapeDtypeStruct((B, L, d), f32),
                    jax.ShapeDtypeStruct((B, L, dv), f32),
                    jax.ShapeDtypeStruct((B, L), f32)),
-        interpret=interpret,
-    )(*inputs)
+        operands=inputs, interpret=interpret,
+        in_names=(("k", "v", "w")
+                  + tuple(f"q_{h}" for h in qhalo)
+                  + tuple(f"gy_{h}" for h in qhalo)
+                  + tuple(f"{a}_{h}" for a in ("gdn", "m", "gmn")
+                          for h in qhalo)),
+        out_names=("dk", "dv", "dw"),
+        meta=dict(mode=mode, nr=nr, tq=tq, lk=L, phase="dkvw"))
 
     return (dq.astype(q.dtype), dk.astype(k.dtype),
             dvv.astype(v.dtype), dw.astype(w.dtype))

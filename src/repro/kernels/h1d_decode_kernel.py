@@ -41,10 +41,21 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.analysis.contracts import launch
 
 _MIN_M = -1e30
+
+# an unbounded "position" domain for the paged kernels: their index
+# maps consume t only through masks / in-page arithmetic, so any
+# non-negative int32 is legal (the page tables carry the geometry).
+_T_MAX = (1 << 30) - 1
+
+
+def _band_names(nbands: int):
+    return ["own", "prev"] + [f"lvl{l}" for l in range(1, nbands - 1)]
 
 
 def _hc():
@@ -166,20 +177,21 @@ def decode_attend_fused(cache, q: jnp.ndarray, t: jnp.ndarray, *, nr: int,
     in_specs += [pl.BlockSpec((1, nr, D), mp) for mp in maps]
     in_specs += [pl.BlockSpec((1, nr, Dv), mp) for mp in maps]
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(R,),
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, G, Dv), lambda r, tref: (r, 0, 0)),
-    )
     kernel = functools.partial(_attend_kernel, nr=nr, nbands=nbands,
                                scale=float(scale), neg_inf=hc.NEG_INF)
-    out = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
+    bn = _band_names(nbands)
+    out = launch(
+        kernel, family="decode_attend", grid=(R,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, G, Dv), lambda r, tref: (r, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((R, G, Dv), jnp.float32),
-        interpret=interpret,
-    )(t.astype(jnp.int32), q, *k_arrs, *v_arrs)
+        operands=[q, *k_arrs, *v_arrs],
+        scalars=(t.astype(jnp.int32),),
+        scalar_bounds=((0, Lmax - 1),),
+        scalar_names=("t",),
+        in_names=(["q"] + [f"k_{b}" for b in bn] + [f"v_{b}" for b in bn]),
+        out_names=("o",), interpret=interpret,
+        meta=dict(nr=nr, Lmax=Lmax, levels=levels))
     return out.astype(q.dtype)
 
 
@@ -274,27 +286,33 @@ def decode_attend_partial(cache, q: jnp.ndarray, t: jnp.ndarray,
     in_specs += [pl.BlockSpec((1, nr, D), mp) for mp in maps]
     in_specs += [pl.BlockSpec((1, nr, Dv), mp) for mp in maps]
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=(R,),
+    kernel = functools.partial(_attend_partial_kernel, nr=nr, nbands=nbands,
+                               scale=float(scale), neg_inf=hc.NEG_INF)
+    f32 = jnp.float32
+    # per-band bidx domain: local nr-row block count of that band's slab
+    bidx_hi = np.array([a.shape[-2] // nr - 1 for a in k_arrs],
+                       dtype=np.int32)
+    Lloc = cache.k.shape[-2]
+    bn = _band_names(nbands)
+    return launch(
+        kernel, family="decode_attend_partial", grid=(R,),
         in_specs=in_specs,
         out_specs=(
             pl.BlockSpec((1, G, Dv), lambda r, tref, bref, oref: (r, 0, 0)),
             pl.BlockSpec((1, G), lambda r, tref, bref, oref: (r, 0)),
             pl.BlockSpec((1, G), lambda r, tref, bref, oref: (r, 0)),
-        ))
-    kernel = functools.partial(_attend_partial_kernel, nr=nr, nbands=nbands,
-                               scale=float(scale), neg_inf=hc.NEG_INF)
-    f32 = jnp.float32
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
+        ),
         out_shape=(jax.ShapeDtypeStruct((R, G, Dv), f32),
                    jax.ShapeDtypeStruct((R, G), f32),
                    jax.ShapeDtypeStruct((R, G), f32)),
-        interpret=interpret,
-    )(t.astype(jnp.int32), bidx.astype(jnp.int32), owned.astype(jnp.int32),
-      q, *k_arrs, *v_arrs)
+        operands=[q, *k_arrs, *v_arrs],
+        scalars=(t.astype(jnp.int32), bidx.astype(jnp.int32),
+                 owned.astype(jnp.int32)),
+        scalar_bounds=((0, Lloc - 1), (0, bidx_hi), (0, 1)),
+        scalar_names=("t", "bidx", "owned"),
+        in_names=(["q"] + [f"k_{b}" for b in bn] + [f"v_{b}" for b in bn]),
+        out_names=("num", "den", "m"), interpret=interpret,
+        meta=dict(nr=nr, Lloc=Lloc, levels=levels))
 
 
 # ---------------------------------------------------------------------------
@@ -353,24 +371,24 @@ def update_cache_fused(cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
             out_specs.append(pl.BlockSpec((1, 2, d_), pair_map))
             out_shape.append(jax.ShapeDtypeStruct(a.shape, a.dtype))
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(R,),
+    # alias each cache operand to its output (operand-indexed; launch()
+    # translates to pallas call-arg indices past the scalar args)
+    aliases = {2 + i: i for i in range(2 * nlev)}
+    kernel = functools.partial(_update_kernel, nlev=nlev)
+    lvl_names = [f"{a}_l{l}" for l in range(nlev) for a in ("k", "v")]
+    outs = launch(
+        kernel, family="decode_update", grid=(R,),
         in_specs=[pl.BlockSpec((1, D), lambda r, tref: (r, 0)),
                   pl.BlockSpec((1, Dv), lambda r, tref: (r, 0))] + in_specs,
         out_specs=tuple(out_specs),
-    )
-    # alias each cache operand to its output; call-arg indices include
-    # the scalar-prefetch arg and (k_new, v_new), hence the +3 offset.
-    aliases = {3 + i: i for i in range(2 * nlev)}
-    kernel = functools.partial(_update_kernel, nlev=nlev)
-    outs = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
         out_shape=tuple(out_shape),
-        input_output_aliases=aliases,
-        interpret=interpret,
-    )(t.astype(jnp.int32), k_new, v_new, *arrs)
+        operands=[k_new, v_new, *arrs],
+        scalars=(t.astype(jnp.int32),),
+        scalar_bounds=((0, Lmax - 1),),
+        scalar_names=("t",),
+        in_names=["k_new", "v_new"] + lvl_names,
+        out_names=lvl_names, aliases=aliases, interpret=interpret,
+        meta=dict(Lmax=Lmax, nlev=nlev))
     ck = tuple(outs[2 + 2 * i] for i in range(nlev - 1))
     cv = tuple(outs[3 + 2 * i] for i in range(nlev - 1))
     return type(cache)(k=outs[0], v=outs[1], ck=ck, cv=cv)
@@ -426,20 +444,23 @@ def decode_attend_paged(pool, q: jnp.ndarray, t: jnp.ndarray,
     in_specs += [pl.BlockSpec((1, nr, D), mp) for mp in maps]
     in_specs += [pl.BlockSpec((1, nr, Dv), mp) for mp in maps]
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(R,),
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, G, Dv), lambda r, tref, bref: (r, 0, 0)),
-    )
     kernel = functools.partial(_attend_paged_kernel, nr=nr, nbands=nbands,
                                scale=float(scale), neg_inf=hc.NEG_INF)
-    out = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
+    # per-band page domain: that band's pool page count
+    bidx_hi = np.array([a.shape[0] - 1 for a in k_arrs], dtype=np.int32)
+    bn = _band_names(nbands)
+    out = launch(
+        kernel, family="decode_attend_paged", grid=(R,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, G, Dv), lambda r, tref, bref: (r, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((R, G, Dv), jnp.float32),
-        interpret=interpret,
-    )(t.astype(jnp.int32), bidx.astype(jnp.int32), q, *k_arrs, *v_arrs)
+        operands=[q, *k_arrs, *v_arrs],
+        scalars=(t.astype(jnp.int32), bidx.astype(jnp.int32)),
+        scalar_bounds=((0, _T_MAX), (0, bidx_hi)),
+        scalar_names=("t", "bidx"),
+        in_names=(["q"] + [f"k_{b}" for b in bn] + [f"v_{b}" for b in bn]),
+        out_names=("o",), interpret=interpret,
+        meta=dict(nr=nr, levels=levels))
     return out.astype(q.dtype)
 
 
@@ -493,22 +514,26 @@ def decode_attend_paged_quant(pool, q: jnp.ndarray, t: jnp.ndarray,
     in_specs += [pl.BlockSpec((1, nr, Dv), mp) for mp in maps]
     in_specs += sc_specs
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(R,),
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, G, Dv), lambda r, tref, bref: (r, 0, 0)),
-    )
     kernel = functools.partial(_attend_paged_kernel, nr=nr, nbands=nbands,
                                scale=float(scale), neg_inf=hc.NEG_INF,
                                quant=quant)
-    out = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
+    bidx_hi = np.array([a.shape[0] - 1 for a in k_arrs], dtype=np.int32)
+    bn = _band_names(nbands)
+    sc_names = [f"{a}sc_{bn[b]}" for a in "kv" for b in range(nbands)
+                if quant[b]]
+    out = launch(
+        kernel, family="decode_attend_paged_quant", grid=(R,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, G, Dv), lambda r, tref, bref: (r, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((R, G, Dv), jnp.float32),
-        interpret=interpret,
-    )(t.astype(jnp.int32), bidx.astype(jnp.int32), q,
-      *k_arrs, *v_arrs, *sc_arrs)
+        operands=[q, *k_arrs, *v_arrs, *sc_arrs],
+        scalars=(t.astype(jnp.int32), bidx.astype(jnp.int32)),
+        scalar_bounds=((0, _T_MAX), (0, bidx_hi)),
+        scalar_names=("t", "bidx"),
+        in_names=(["q"] + [f"k_{b}" for b in bn] + [f"v_{b}" for b in bn]
+                  + sc_names),
+        out_names=("o",), interpret=interpret,
+        meta=dict(nr=nr, levels=levels, quant=quant))
     return out.astype(q.dtype)
 
 
@@ -557,24 +582,27 @@ def update_cache_paged(pool, k_new: jnp.ndarray, v_new: jnp.ndarray,
             out_shape.append(jax.ShapeDtypeStruct(a.shape, a.dtype))
 
     row_map = lambda r, tref, uref: (r, 0)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(R,),
+    # aliases are operand-indexed ((k_new, v_new, *arrs): pool operands
+    # start at 2); launch() shifts past the scalar args.
+    aliases = {2 + i: i for i in range(2 * nlev)}
+    kernel = functools.partial(_update_paged_kernel, nlev=nlev)
+    # per-level utab domain: that level's pool page count (k page count
+    # == v page count per level, lvls order == utab column order)
+    utab_hi = np.array([ka.shape[0] - 1 for ka, _ in lvls], dtype=np.int32)
+    lvl_names = [f"{a}_l{l}" for l in range(nlev) for a in ("k", "v")]
+    outs = launch(
+        kernel, family="decode_update_paged", grid=(R,),
         in_specs=[pl.BlockSpec((1, D), row_map),
                   pl.BlockSpec((1, Dv), row_map)] + in_specs,
         out_specs=tuple(out_specs),
-    )
-    # call args: (t, utab, k_new, v_new, *arrs) -> pool operands start
-    # at index 4
-    aliases = {4 + i: i for i in range(2 * nlev)}
-    kernel = functools.partial(_update_paged_kernel, nlev=nlev)
-    outs = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
         out_shape=tuple(out_shape),
-        input_output_aliases=aliases,
-        interpret=interpret,
-    )(t.astype(jnp.int32), utab.astype(jnp.int32), k_new, v_new, *arrs)
+        operands=[k_new, v_new, *arrs],
+        scalars=(t.astype(jnp.int32), utab.astype(jnp.int32)),
+        scalar_bounds=((0, _T_MAX), (0, utab_hi)),
+        scalar_names=("t", "utab"),
+        in_names=["k_new", "v_new"] + lvl_names,
+        out_names=lvl_names, aliases=aliases, interpret=interpret,
+        meta=dict(nr=nr, nlev=nlev))
     ck = tuple(outs[2 + 2 * i] for i in range(nlev - 1))
     cv = tuple(outs[3 + 2 * i] for i in range(nlev - 1))
     return type(pool)(k=outs[0], v=outs[1], ck=ck, cv=cv)
@@ -677,28 +705,32 @@ def update_cache_paged_quant(pool, k_new: jnp.ndarray, v_new: jnp.ndarray,
                 sc_shape.append(jax.ShapeDtypeStruct(a.shape, a.dtype))
 
     row_map = lambda r, tref, uref: (r, 0)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(R,),
-        in_specs=[pl.BlockSpec((1, D), row_map),
-                  pl.BlockSpec((1, Dv), row_map)] + data_in + sc_in,
-        out_specs=tuple(data_out + sc_out),
-    )
-    # call args: (t, utab, k_new, v_new, *data_arrs, *sc_arrs) -> pool
-    # operands start at index 4; outputs mirror the input order.
+    # (k_new, v_new, *data_arrs, *sc_arrs): every pool operand (payload
+    # AND scale blocks) aliases its mirror output; operand-indexed.
     nio = 2 * nlev + 2 * sum(quant)
-    aliases = {4 + i: i for i in range(nio)}
+    aliases = {2 + i: i for i in range(nio)}
     kernel = functools.partial(_update_paged_quant_kernel, nlev=nlev,
                                quant=quant, qmax=qz.QMAX,
                                recip=qz.RECIP_QMAX, eps=qz.EPS)
-    outs = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
+    utab_hi = np.array([ka.shape[0] - 1 for ka, _, _, _ in lvls],
+                       dtype=np.int32)
+    lvl_names = [f"{a}_l{l}" for l in range(nlev) for a in ("k", "v")]
+    sc_names = [f"{a}sc_l{l}" for l in range(nlev) for a in ("k", "v")
+                if quant[l]]
+    outs = launch(
+        kernel, family="decode_update_paged_quant", grid=(R,),
+        in_specs=[pl.BlockSpec((1, D), row_map),
+                  pl.BlockSpec((1, Dv), row_map)] + data_in + sc_in,
+        out_specs=tuple(data_out + sc_out),
         out_shape=tuple(data_shape + sc_shape),
-        input_output_aliases=aliases,
+        operands=[k_new, v_new, *data_arrs, *sc_arrs],
+        scalars=(t.astype(jnp.int32), utab.astype(jnp.int32)),
+        scalar_bounds=((0, _T_MAX), (0, utab_hi)),
+        scalar_names=("t", "utab"),
+        in_names=["k_new", "v_new"] + lvl_names + sc_names,
+        out_names=lvl_names + sc_names, aliases=aliases,
         interpret=interpret,
-    )(t.astype(jnp.int32), utab.astype(jnp.int32), k_new, v_new,
-      *data_arrs, *sc_arrs)
+        meta=dict(nr=nr, nlev=nlev, quant=quant))
     data = outs[:2 * nlev]
     scs = outs[2 * nlev:]
     ksc_out, vsc_out = [], []
@@ -792,24 +824,26 @@ def update_cache_partial(cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
     out_shape += [jax.ShapeDtypeStruct((R, D), cache.k.dtype),
                   jax.ShapeDtypeStruct((R, Dv), cache.v.dtype)]
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(R,),
+    # (k_new, v_new, *arrs): cache operands start at operand index 2;
+    # the two carry outputs at the end are not aliased.
+    aliases = {2 + i: i for i in range(2 * nlev)}
+    kernel = functools.partial(_update_partial_kernel, nlev=nlev)
+    Lloc = cache.k.shape[-2]
+    lvl_names = [f"{a}_l{l}" for l in range(nlev) for a in ("k", "v")]
+    outs = launch(
+        kernel, family="decode_update_partial", grid=(R,),
         in_specs=[pl.BlockSpec((1, D), row_map),
                   pl.BlockSpec((1, Dv), row_map)] + in_specs,
         out_specs=tuple(out_specs),
-    )
-    # call args: (t_loc, owned, k_new, v_new, *arrs) -> cache operands
-    # start at index 4
-    aliases = {4 + i: i for i in range(2 * nlev)}
-    kernel = functools.partial(_update_partial_kernel, nlev=nlev)
-    outs = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
         out_shape=tuple(out_shape),
-        input_output_aliases=aliases,
-        interpret=interpret,
-    )(t_loc.astype(jnp.int32), owned.astype(jnp.int32), k_new, v_new, *arrs)
+        operands=[k_new, v_new, *arrs],
+        scalars=(t_loc.astype(jnp.int32), owned.astype(jnp.int32)),
+        scalar_bounds=((0, Lloc - 1), (0, 1)),
+        scalar_names=("t_loc", "owned"),
+        in_names=["k_new", "v_new"] + lvl_names,
+        out_names=lvl_names + ["carry_k", "carry_v"],
+        aliases=aliases, interpret=interpret,
+        meta=dict(Lloc=Lloc, nlev=nlev))
     ck = tuple(outs[2 + 2 * i] for i in range(nlev - 1))
     cv = tuple(outs[3 + 2 * i] for i in range(nlev - 1))
     upd = type(cache)(k=outs[0], v=outs[1], ck=ck, cv=cv)

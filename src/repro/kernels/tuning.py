@@ -196,7 +196,11 @@ class KernelPolicy:
     def candidates(self, family: str, *, L: int, nr: int,
                    mode: str = "l0_bidir", ratio: int = 1,
                    rows: Optional[int] = None,
-                   max_tq: int = 512) -> List[Dict[str, Any]]:
+                   max_tq: int = 512,
+                   d: Optional[int] = None, dv: Optional[int] = None,
+                   B: int = 1, G: int = 1, dtype: str = "float32",
+                   vmem_budget: Optional[int] = None
+                   ) -> List[Dict[str, Any]]:
         """Legal launch configs for one kernel family at one shape.
 
         Band/sub families enumerate power-of-two ``tq`` multiples of
@@ -205,6 +209,12 @@ class KernelPolicy:
         ``nq = nr * ratio`` query block.  Decode families launch one
         program per cache row -- the grid is fixed by the batch, so the
         config space is the single ``(rows,)`` grid.
+
+        With a head dim ``d``, each band/sub candidate is additionally
+        sized against the static VMEM budget
+        (``repro.analysis.vmem``): over-budget configs are dropped
+        before any measurement and logged as ``rejected:vmem``;
+        survivors carry their ``vmem_bytes`` estimate.
         """
         if family not in FAMILIES:
             raise ValueError(f"unknown kernel family {family!r}: "
@@ -222,7 +232,26 @@ class KernelPolicy:
                 else:
                     out.append({"tq": t, "layout": "band"})
             t *= 2
-        return out
+        if d is None:
+            return out
+        from repro.analysis import vmem as vmem_mod
+        budget = (vmem_mod.default_budget() if vmem_budget is None
+                  else int(vmem_budget))
+        key = table_key(L, nr, mode, ratio, dtype)
+        kept: List[Dict[str, Any]] = []
+        for cand in out:
+            nbytes = vmem_mod.band_launch_bytes(
+                family, L=L, nr=nr, mode=mode, ratio=ratio,
+                tq=cand["tq"], d=d, dv=dv, B=B, G=G, dtype=dtype)
+            if nbytes > budget:
+                self._log(family, key, "rejected:vmem",
+                          dict(cand, vmem_bytes=int(nbytes),
+                               budget=int(budget),
+                               reason=f"vmem {int(nbytes)} > "
+                                      f"budget {int(budget)}"))
+            else:
+                kept.append(dict(cand, vmem_bytes=int(nbytes)))
+        return kept
 
     # -- resolution: override > table > default ------------------------------
 
@@ -303,16 +332,27 @@ class KernelPolicy:
         self._tables[family] = entries
         return entries
 
-    def _save_table(self, family: str) -> str:
+    def _save_table(self, family: str) -> Optional[str]:
+        """Persist one family's tuning table.  An unwritable cache dir
+        (read-only $REPRO_TUNE_CACHE, container filesystems) degrades
+        to in-memory tables with a ``RuntimeWarning`` -- the autotune
+        sweep keeps its measured entries for this process instead of
+        aborting mid-sweep."""
         path = self._table_path(family)
-        os.makedirs(os.path.dirname(path), exist_ok=True)
         payload = {"version": TABLE_VERSION, "backend": self.backend,
                    "kernel": family,
                    "entries": self._tables.get(family, {})}
         tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(payload, f, indent=1, sort_keys=True)
-        os.replace(tmp, path)
+        try:
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            with open(tmp, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)
+        except OSError as e:
+            warnings.warn(
+                f"repro_tune: cannot persist tuning table {path} ({e}); "
+                f"keeping measured entries in memory only", RuntimeWarning)
+            return None
         return path
 
     # -- measured autotune pass ---------------------------------------------
@@ -321,12 +361,15 @@ class KernelPolicy:
                       d: int = 64, B: int = 1, G: int = 1,
                       impl: Optional[str] = None, iters: int = 2,
                       warmup: int = 1,
-                      family: Optional[str] = None) -> Dict[str, Any]:
+                      family: Optional[str] = None,
+                      vmem_budget: Optional[int] = None) -> Dict[str, Any]:
         """Measure every legal candidate config for one band family at
         one shape bucket, persist the winner to the on-disk table, and
         return the entry.  A table hit returns without re-measuring
         (that is the point of the cache); autotuning never runs
-        implicitly -- callers opt in.
+        implicitly -- callers opt in.  Candidates whose static VMEM
+        estimate exceeds the budget are rejected before measurement
+        (``rejected:vmem`` in the decision log).
         """
         if family is None:
             family = "sub_fwd" if mode == _SUB else "band_fwd"
@@ -341,14 +384,17 @@ class KernelPolicy:
             self.resolve_impl(impl, family)
         best: Optional[Tuple[Dict[str, Any], float]] = None
         for cand in self.candidates(family, L=L, nr=nr, mode=mode,
-                                    ratio=ratio):
+                                    ratio=ratio, d=d, B=B, G=G,
+                                    vmem_budget=vmem_budget):
             fn = self._band_runner(cand["tq"], L=L, nr=nr, mode=mode,
                                    ratio=ratio, d=d, B=B, G=G, impl=impl,
                                    grad=family.endswith("bwd"))
             us = self._measure(fn, iters=iters, warmup=warmup)
             if best is None or us < best[1]:
                 best = (cand, us)
-        assert best is not None, f"no legal candidates for {family} {key}"
+        assert best is not None, (
+            f"no measurable candidates for {family} {key} (all rejected? "
+            f"see rejected:vmem decision-log entries)")
         entry = dict(best[0], us=round(best[1], 1), impl=impl,
                      source="measured")
         entries[key] = entry

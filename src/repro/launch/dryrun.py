@@ -20,7 +20,6 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, SHAPES, get_config
 from repro.launch.mesh import make_production_mesh

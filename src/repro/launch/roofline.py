@@ -29,12 +29,10 @@ Artifacts: artifacts/roofline/<arch>__<shape>.json (+ summary table)
 import argparse
 import dataclasses
 import json
-import math
 import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, SHAPES, get_config
@@ -42,7 +40,7 @@ from repro.launch.mesh import (make_production_mesh, PEAK_FLOPS_BF16,
                                HBM_BW, ICI_BW)
 from repro.launch import specs as S
 from repro.launch.dryrun import build_cell, parse_collectives
-from repro.models import get_model, set_mesh_axes
+from repro.models import set_mesh_axes
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
                             "../../../artifacts/roofline")

@@ -6,18 +6,15 @@ function and ``shardings_fn(mesh)`` produces the matching in_shardings.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import ShapeDtypeStruct as SDS
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import SHAPES
 from repro.configs.seamless_m4t_medium import DECODER_LEN
 from repro.models import ModelConfig, get_model
-from repro.parallel import batch_shardings, cache_shardings, replicated
 
 
 def train_batch_specs(cfg: ModelConfig, seq: int, batch: int) -> Dict:

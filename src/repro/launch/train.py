@@ -16,13 +16,12 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.data import ZipfLM, HierarchicalLM, Prefetcher
 from repro.launch.mesh import make_mesh
-from repro.models import get_model, set_mesh_axes
-from repro.parallel import param_shardings, batch_shardings, replicated
+from repro.models import set_mesh_axes
+from repro.parallel import param_shardings
 from repro.train import (TrainConfig, TrainState, init_state,
                          make_train_step, Watchdog, checkpoint as ckpt)
 

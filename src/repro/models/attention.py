@@ -12,19 +12,18 @@ Cache layouts (per layer):
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.core import (h1d_attention, h1d_attention_mha, dense_attention,
                         h1d_decode, fold_kv_heads, unfold_kv_heads)
 from repro.core import hierarchy as hc
 from repro.kernels import band_attention
-from .common import (ModelConfig, dense_init, dense_apply, rmsnorm_init,
-                     rmsnorm_apply, apply_rope, logical, shard_if_divisible,
-                     tp_size)
+from .common import (
+    ModelConfig, dense_init, dense_apply, rmsnorm_init, rmsnorm_apply,
+    apply_rope, logical, tp_size)
 
 
 def attn_init(key, cfg: ModelConfig, dtype):

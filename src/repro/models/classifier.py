@@ -11,8 +11,9 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
-from .common import (ModelConfig, dense_init, dense_apply, embed_init,
-                     rmsnorm_init, rmsnorm_apply, logical)
+from .common import (
+    ModelConfig, dense_init, dense_apply, embed_init, rmsnorm_init,
+    rmsnorm_apply)
 from .attention import attn_init, attn_apply
 from .ffn import mlp_init, mlp_apply
 

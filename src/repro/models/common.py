@@ -13,7 +13,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import threading
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

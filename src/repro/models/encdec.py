@@ -10,16 +10,15 @@ the long (audio) axis.
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
-from .common import (ModelConfig, dense_init, dense_apply, embed_init,
-                     rmsnorm_init, rmsnorm_apply, apply_rope, logical)
-from .attention import (attn_init, attn_apply, attn_decode,
-                        init_decode_cache, prefill_into_cache)
+from .common import (
+    ModelConfig, dense_init, dense_apply, embed_init, rmsnorm_init,
+    rmsnorm_apply, logical)
+from .attention import attn_init, attn_apply, attn_decode, prefill_into_cache
 from .ffn import mlp_init, mlp_apply
 from repro.core import dense_attention
 
@@ -176,7 +175,6 @@ def encdec_prefill(params, cfg: ModelConfig, frames, tokens, Lmax):
 
 
 def encdec_decode_step(params, cfg: ModelConfig, caches, token, t):
-    B = token.shape[0]
     h = params["embed"]["w"][token[:, None]].astype(cfg.jdtype)
     new_caches = []
     for lp, cache in zip(params["decoder"], caches):

@@ -5,10 +5,8 @@ loop, serving engine, dry-run and benchmarks are family-agnostic.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, NamedTuple, Tuple
+from typing import Callable, NamedTuple
 
-import jax
-import jax.numpy as jnp
 
 from .common import ModelConfig
 from . import transformer as T

@@ -19,14 +19,14 @@ state scan.  ``ssd_reference`` is the naive per-step oracle for tests.
 from __future__ import annotations
 
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .common import ModelConfig, dense_init, dense_apply, rmsnorm_init, \
-    rmsnorm_apply, shard_if_divisible, logical
+from .common import (
+    ModelConfig, dense_init, dense_apply, rmsnorm_init, rmsnorm_apply,
+    shard_if_divisible)
 
 
 # ---------------------------------------------------------------------------

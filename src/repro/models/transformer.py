@@ -9,8 +9,7 @@ compile time and HLO size flat in depth for the big assigned archs
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -417,7 +416,6 @@ def lm_decode_step(params, cfg: ModelConfig, caches, token, t, *,
     then ``PagedH1DCache`` pools); every layer writes the same
     positions, so ONE table pair serves the whole stack and rides
     through the layer scan as a closure, not a scanned operand."""
-    B = token.shape[0]
     h = _embed_tokens(params, cfg, token[:, None])
 
     if _stacked_caches(cfg):

@@ -10,7 +10,6 @@ API mirrors the (init, update) gradient-transformation convention:
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax

@@ -25,7 +25,7 @@ import os
 import re
 import shutil
 import threading
-from typing import Any, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import numpy as np

@@ -9,16 +9,15 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.models import ModelConfig, get_model
-from repro.optim import (adamw, adafactor, apply_updates, cosine_schedule,
-                         clip_by_global_norm, init_error_feedback,
-                         int8_compress, Optimizer)
+from repro.optim import (
+    adamw, adafactor, apply_updates, cosine_schedule, init_error_feedback,
+    int8_compress, Optimizer)
 
 
 class TrainState(NamedTuple):

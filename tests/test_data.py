@@ -1,10 +1,8 @@
 """Data pipeline: determinism, shard independence, ListOps correctness."""
 import numpy as np
-import pytest
 
 from repro.data import ZipfLM, HierarchicalLM, ListOps, Prefetcher
-from repro.data.listops import (PAD, DIGIT0, OPS, CLOSE, VOCAB,
-                                NUM_CLASSES)
+from repro.data.listops import PAD, DIGIT0, OPS, CLOSE, NUM_CLASSES
 
 
 def test_zipf_deterministic_per_step_and_host():

@@ -4,8 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (h1d_attention, h1d_decode, init_cache,
-                        prefill_cache, update_cache, decode_attend)
+from repro.core import (h1d_attention, init_cache, prefill_cache, update_cache, decode_attend)
 
 
 def keys(n, seed=0):

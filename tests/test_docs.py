@@ -5,7 +5,6 @@ scripts/check_docs.py so CI shells and the test share one scanner."""
 import os
 import sys
 
-import pytest
 
 _SCRIPTS = os.path.join(os.path.dirname(__file__), "..", "scripts")
 sys.path.insert(0, os.path.abspath(_SCRIPTS))
@@ -18,6 +17,23 @@ def test_no_dangling_markdown_references():
     assert not missing, (
         "dangling repo-root markdown references:\n" + "\n".join(
             f"  {path}:{lineno}: {name}" for path, lineno, name in missing))
+
+
+def test_no_stale_code_paths_in_docs():
+    stale = check_docs.missing_code_paths()
+    assert not stale, (
+        "docs cite code files that do not exist:\n" + "\n".join(
+            f"  {doc}:{lineno}: {ref}" for doc, lineno, ref in stale))
+
+
+def test_code_path_regex_strips_qualifiers(tmp_path):
+    doc = tmp_path / "X.md"
+    doc.write_text("see src/repro/analysis/checker.py:check_contract and "
+                   "tests/test_analysis.py; src/repro/nope_gone.py too\n")
+    stale = check_docs.missing_code_paths(root=check_docs.ROOT,
+                                          docs=(os.path.relpath(doc,
+                                                check_docs.ROOT),))
+    assert [r for _, _, r in stale] == ["src/repro/nope_gone.py"]
 
 
 def test_core_docs_exist():

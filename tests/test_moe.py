@@ -3,10 +3,9 @@ oracle, load-balance loss, capacity behaviour."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models.common import ModelConfig
-from repro.models.ffn import moe_init, moe_apply, mlp_apply
+from repro.models.ffn import moe_init, moe_apply
 
 
 def make_cfg(E=8, k=2, cf=8.0, **kw):

@@ -258,7 +258,7 @@ def test_pool_admit_is_transactional_on_exhaustion():
 def test_pool_refcount_sharing_and_release():
     pool = pc.PagePool(slots=3, max_len=64, nr=8, pool_pages=16)
     toks = np.arange(16, dtype=np.int32)
-    w0 = pool.admit(0, toks)
+    pool.admit(0, toks)
     w1 = pool.admit(1, toks)
     assert w1[0] == []                       # full registry hit
     page = int(pool.table[0][0, 0])

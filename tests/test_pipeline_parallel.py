@@ -2,7 +2,6 @@
 
 Needs >1 device => runs in a subprocess with fabricated host devices.
 """
-import json
 import os
 import subprocess
 import sys

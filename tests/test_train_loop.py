@@ -1,6 +1,5 @@
 """Training loop: loss goes down, grad-accum equivalence, checkpoint
 restart continuity, watchdog."""
-import os
 
 import jax
 import jax.numpy as jnp
@@ -9,8 +8,7 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.data import ZipfLM
-from repro.train import (TrainConfig, TrainState, init_state,
-                         make_train_step, Watchdog, checkpoint as ckpt)
+from repro.train import (TrainConfig, init_state, make_train_step, Watchdog, checkpoint as ckpt)
 
 
 def small_cfg():

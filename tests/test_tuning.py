@@ -14,9 +14,7 @@ import pytest
 
 from repro.kernels import ops
 from repro.kernels import tuning
-from repro.kernels.tuning import (KernelPolicy, IMPLS, canonical_impl,
-                                  get_policy, set_policy, resolve_tq,
-                                  table_key)
+from repro.kernels.tuning import (KernelPolicy, IMPLS, canonical_impl, set_policy, resolve_tq, table_key)
 
 
 @pytest.fixture
@@ -213,6 +211,39 @@ def test_candidates_enumeration(fresh_policy):
     assert dec == [{"grid": (7,)}]
     with pytest.raises(ValueError, match="allowed families"):
         fresh_policy.candidates("nope", L=64, nr=16)
+
+
+# ---------------------------------------------------------------------------
+# decision log: bounded size; cache persistence degrades gracefully
+# ---------------------------------------------------------------------------
+
+def test_decision_log_bounded(fresh_policy):
+    """The decision log is a bounded deque: old entries fall off instead
+    of growing without limit in a long-lived serving process."""
+    p = fresh_policy
+    assert p.decisions.maxlen == 512
+    for i in range(700):
+        p._log("band_fwd", f"k{i}", "default", {"tq": 128})
+    assert len(p.decisions) == 512
+    assert p.decisions[0]["key"] == "k188"   # oldest 188 evicted
+    assert p.decisions[-1]["key"] == "k699"
+
+
+def test_unwritable_cache_degrades_to_memory(tmp_path):
+    """An unwritable $REPRO_TUNE_CACHE must not abort the autotune
+    sweep: RuntimeWarning + in-memory tables, measured entry reused."""
+    blocker = tmp_path / "blocker"
+    blocker.write_text("a file where the cache dir should be")
+    p = KernelPolicy(cache_dir=str(blocker / "cache"))
+    p._measure = lambda fn, iters=2, warmup=1: 1.0
+    with pytest.warns(RuntimeWarning, match="in memory"):
+        entry = p.autotune_band(L=64, nr=16, mode="l0_causal", d=8)
+    assert entry["source"] == "measured"
+    assert not os.path.exists(p._table_path("band_fwd"))
+    # the measured entry survives in the in-memory table for this process
+    assert p.band_tq(L=64, nr=16, mode="l0_causal") == entry["tq"]
+    assert p._entries("band_fwd")[table_key(64, 16, "l0_causal")]["tq"] \
+        == entry["tq"]
 
 
 # ---------------------------------------------------------------------------
