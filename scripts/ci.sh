@@ -28,6 +28,11 @@ echo "== kernel launch-contract check =="
 # scalar-prefetch domain over the full tuning candidate spaces
 timeout 60 python -m repro.analysis.check
 
+echo "== distributed ownership + paged-pool model check =="
+# SP cross-shard ownership/halo/comm over mesh sizes 1..8 (zero
+# devices) and a bounded exhaustive model check of the real PagePool
+timeout 60 python -m repro.analysis.check --dist --pool
+
 echo "== tier-1 tests (durations-budgeted) =="
 report="$(mktemp)"
 trap 'rm -f "$report"' EXIT

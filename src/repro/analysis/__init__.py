@@ -8,8 +8,16 @@
   coverage, alias agreement, scalar-prefetch domains.
 * :mod:`repro.analysis.vmem` -- per-launch VMEM footprint estimates
   (consumed by ``kernels/tuning.py`` candidate enumeration).
+* :mod:`repro.analysis.dist` -- cross-shard ownership / halo-protocol
+  / comm-volume verification of the SP layer over mesh sizes 1..8,
+  with zero devices (DESIGN.md section 12).
+* :mod:`repro.analysis.pool_model` -- bounded exhaustive model checker
+  for the serving layer's :class:`~repro.serve.paged_cache.PagePool`
+  (refcounts, COW, eviction, registry liveness), with replayable
+  minimized counterexamples.
 * ``python -m repro.analysis.check`` -- the CI gate: every kernel
-  family x the full tuning candidate spaces.
+  family x the full tuning candidate spaces, plus ``--dist``/``--pool``
+  for the distributed and serving checks and ``--json`` reports.
 
 Only ``contracts`` is imported eagerly (the kernels import it);
 checker/vmem import the kernel modules lazily.

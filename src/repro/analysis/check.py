@@ -1,18 +1,30 @@
-"""CI gate: statically verify every kernel family's launch contracts.
+"""CI gate: statically verify launch contracts, SP ownership, and the
+paged-pool state machine.
 
-``python -m repro.analysis.check`` traces every Pallas entry point --
-band/sub forward+backward over the FULL ``tuning.py`` candidate space
-(every legal ``tq`` per mode x shape bucket), and every decode family
-(dense, SP-partial, paged, quantized-paged) over representative pool
-geometries -- under ``jax.eval_shape`` (nothing compiles or runs), then
-checks each captured :class:`~repro.analysis.contracts.LaunchContract`:
-in-bounds blocks at every grid point, exactly-once output coverage,
-alias agreement, and scalar-prefetch domains.  Exit code 1 on any
-violation.  Wired into ``scripts/ci.sh`` with a 60 s budget.
+``python -m repro.analysis.check`` (no flags, or ``--kernels``) traces
+every Pallas entry point -- band/sub forward+backward over the FULL
+``tuning.py`` candidate space (every legal ``tq`` per mode x shape
+bucket), and every decode family (dense, SP-partial, paged,
+quantized-paged) over representative pool geometries -- under
+``jax.eval_shape`` (nothing compiles or runs), then checks each
+captured :class:`~repro.analysis.contracts.LaunchContract`: in-bounds
+blocks at every grid point, exactly-once output coverage, alias
+agreement, and scalar-prefetch domains.
+
+``--dist`` runs :mod:`repro.analysis.dist` (cross-shard ownership,
+halo protocol, comm volume over mesh sizes 1/2/4/8, zero devices);
+``--pool`` runs :mod:`repro.analysis.pool_model` (bounded exhaustive
+model check of the real :class:`~repro.serve.paged_cache.PagePool`).
+``--family SUBSTR`` filters what gets checked/reported; ``--json
+[PATH]`` emits a machine-readable report (schema pinned in
+``tests/test_analysis.py``).  Exit code 1 on any violation.  Wired
+into ``scripts/ci.sh`` with a 60 s budget per invocation.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 import sys
 import time
 from typing import Dict, List, Tuple
@@ -140,33 +152,106 @@ def main(argv=None) -> int:
                          "spaces do not depend on it)")
     ap.add_argument("--samples", type=int, default=checker.DEFAULT_SAMPLES)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kernels", action="store_true",
+                    help="check kernel launch contracts (the default "
+                         "when no section flag is given)")
+    ap.add_argument("--dist", action="store_true",
+                    help="check SP cross-shard ownership/halo/comm")
+    ap.add_argument("--pool", action="store_true",
+                    help="model-check the paged-pool state machine")
+    ap.add_argument("--pool-states", type=int, default=12000,
+                    help="distinct-state budget for --pool")
+    ap.add_argument("--family", default=None, metavar="SUBSTR",
+                    help="only check/report contracts and violations "
+                         "whose family or label contains SUBSTR")
+    ap.add_argument("--json", nargs="?", const="-", default=None,
+                    metavar="PATH",
+                    help="write a JSON report to PATH ('-' = stdout)")
     ap.add_argument("-v", "--verbose", action="store_true")
     args = ap.parse_args(argv)
 
-    from repro.kernels import tuning
+    sections = [s for s, on in (("kernels", args.kernels),
+                                ("dist", args.dist),
+                                ("pool", args.pool)) if on] or ["kernels"]
 
     t0 = time.time()
-    policy = tuning.KernelPolicy()
-    labeled = band_contracts(policy, nr=args.nr, d=args.d)
-    labeled += decode_contracts(nr=4, d=args.d)
-    labeled += decode_contracts(nr=args.nr, d=args.d)
-    t_trace = time.time() - t0
-
     fams: Dict[str, int] = {}
     violations: List[Tuple[str, checker.Violation]] = []
-    for label, contract in labeled:
-        fams[contract.family] = fams.get(contract.family, 0) + 1
-        for v in checker.check_contract(contract, samples=args.samples,
-                                        seed=args.seed):
-            violations.append((label, v))
-        if args.verbose:
-            print(f"  {label}: {contract.describe()}")
+    dist_stats = pool_stats = None
+    n_contracts = 0
+    t_trace = 0.0
+
+    if "kernels" in sections:
+        from repro.kernels import tuning
+        policy = tuning.KernelPolicy()
+        labeled = band_contracts(policy, nr=args.nr, d=args.d)
+        labeled += decode_contracts(nr=4, d=args.d)
+        labeled += decode_contracts(nr=args.nr, d=args.d)
+        if args.family:
+            labeled = [(lb, c) for lb, c in labeled
+                       if args.family in lb or args.family in c.family]
+        t_trace = time.time() - t0
+        n_contracts = len(labeled)
+        for label, contract in labeled:
+            fams[contract.family] = fams.get(contract.family, 0) + 1
+            for v in checker.check_contract(contract,
+                                            samples=args.samples,
+                                            seed=args.seed):
+                violations.append((label, v))
+            if args.verbose:
+                print(f"  {label}: {contract.describe()}")
+
+    if "dist" in sections:
+        from . import dist
+        dist_stats, vs = dist.run_dist()
+        if args.family:
+            vs = [v for v in vs if args.family in v.family]
+        violations.extend((v.family, v) for v in vs)
+
+    if "pool" in sections:
+        from . import pool_model
+        pool_stats, vs = pool_model.run_pool(max_states=args.pool_states)
+        if args.family:
+            vs = [v for v in vs if args.family in v.family]
+        violations.extend((v.family, v) for v in vs)
 
     total = time.time() - t0
-    print(f"checked {len(labeled)} contracts across {len(fams)} families "
-          f"in {total:.1f}s (trace {t_trace:.1f}s):")
-    for fam in sorted(fams):
-        print(f"  {fam}: {fams[fam]} contracts")
+    if "kernels" in sections:
+        print(f"checked {n_contracts} contracts across {len(fams)} "
+              f"families in {total:.1f}s (trace {t_trace:.1f}s):")
+        for fam in sorted(fams):
+            print(f"  {fam}: {fams[fam]} contracts")
+    if dist_stats is not None:
+        print(f"dist: {dist_stats['configs']} configs, "
+              f"{dist_stats['checks']} ownership/halo/comm checks")
+    if pool_stats is not None:
+        cov = pool_stats["coverage"]
+        print(f"pool: {pool_stats['states']} states, "
+              f"{pool_stats['transitions']} transitions "
+              f"(cow {cov.get('cow_copies', 0)}, "
+              f"evict {cov.get('evictions', 0)}, "
+              f"restore {cov.get('restore', 0)})")
+
+    if args.json is not None:
+        report = {
+            "sections": sections,
+            "contracts": n_contracts,
+            "families": fams,
+            "violations": [dict(label=label,
+                                **dataclasses.asdict(v))
+                           for label, v in violations],
+            "dist": dist_stats,
+            "pool": pool_stats,
+            "ok": not violations,
+            "runtime_s": round(total, 3),
+        }
+        if args.json == "-":
+            json.dump(report, sys.stdout, indent=2)
+            print()
+        else:
+            with open(args.json, "w") as f:
+                json.dump(report, f, indent=2)
+
     if violations:
         print(f"FAILED: {len(violations)} violations")
         for label, v in violations:

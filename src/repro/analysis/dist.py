@@ -1,0 +1,515 @@
+"""Distributed-ownership checker for the sequence-parallel layer.
+
+Abstract evaluation of ``parallel/sp_attention.py``'s cross-shard
+dispatch over mesh sizes {1, 2, 4, 8} with ZERO devices: the ownership
+/ translation rules (``_band_geometry``, ``sp_update_owner``,
+``sp_update_local_t``, ``sp_n_shallow``) are plain eager functions of
+the shard index, and the partial kernels' launch contracts are captured
+under ``jax.eval_shape`` -- so every rule the shard_map bodies rely on
+can be checked exhaustively on the host, per global position, without a
+mesh (DESIGN.md section 12).
+
+Checks, per (mesh size d, geometry):
+
+* **decode attend ownership** -- every (position, band) pair is owned by
+  exactly ONE shard (``ownership-gap`` / ``ownership-overlap``), and on
+  the owning shard the partial contract's index map reconstructs the
+  SAME global block the single-chip ``decode_attend_fused`` contract
+  reads (``halo-mismatch``); non-owner fetches stay inside the local
+  slab and the real prefetch tables stay inside the contracts' declared
+  scalar domains.
+* **decode update ownership** -- ``sp_update_owner`` covers every
+  ``t`` in ``[0, Lmax]`` exactly once including the last-shard
+  ``t == Lmax`` rule; the owner's local position keeps the sibling
+  parity bits, and the partial/deep update contracts' pair maps agree
+  with the single-chip ``decode_update`` maps level by level.
+* **halo protocol** -- for every banded mode/level the set of
+  out-of-shard key blocks the global ``band_mask`` makes a shard's
+  queries attend is exactly covered by the one ``nr``-row block per
+  direction the halo exchange delivers (``halo-mismatch``).
+* **transition threshold + comm volume** -- ``sp_n_shallow`` matches
+  the ``L >> l >= d * nr`` sharding rule (and the decode path's
+  ``sp_sharded_levels``), the packed halo buffer built by the REAL
+  ``sp_halo_pack`` matches the pinned DESIGN.md section 7 formula, and
+  the gathered transition-level KV stays under the ``d * nr / 2``-row
+  bound (``comm-mismatch``).
+
+Every rule is injectable (``band_geometry=``, ``update_owner=``, ...)
+so the seeded-mutation suite in ``tests/test_dist.py`` can prove each
+violation kind is actually caught.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .checker import Violation, _eval_map
+from .contracts import capture
+
+#: data-axis sizes the checks sweep (1 == the degenerate single chip)
+MESH_SIZES = (1, 2, 4, 8)
+#: (nr, Lmax) decode cache geometries
+DECODE_GEOMS = ((4, 64), (4, 128))
+#: (nr, L) training/prefill geometries for the halo + comm checks
+BAND_GEOMS = ((4, 64), (4, 128))
+
+DIST_KINDS = ("ownership-gap", "ownership-overlap", "halo-mismatch",
+              "comm-mismatch")
+
+#: head dim for traced shapes (the index maps never depend on it)
+_D = 8
+
+
+def _np(x) -> np.ndarray:
+    return np.asarray(x, dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# decode: attend-band + update ownership
+# ---------------------------------------------------------------------------
+
+def check_decode(d: int, nr: int, Lmax: int, *,
+                 band_geometry: Optional[Callable] = None,
+                 update_owner: Optional[Callable] = None,
+                 update_local_t: Optional[Callable] = None,
+                 update_owned: Optional[Callable] = None,
+                 ) -> Tuple[int, List[Violation]]:
+    """All decode-path ownership checks for one ``(d, nr, Lmax)``.
+
+    Returns ``(checks_run, violations)``.  The ``*_owner``/``*_owned``/
+    ``band_geometry`` hooks default to the REAL ``sp_attention`` rules;
+    tests inject broken ones to validate the checker itself
+    (``update_owned(t, s, Lloc, d) -> bool array`` overrides the
+    per-shard ownership bit derived from ``update_owner``)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import h1d_decode as hd
+    from repro.core import hierarchy as hc
+    from repro.kernels import h1d_decode_kernel as dk
+    from repro.parallel import sp_attention as sp
+
+    band_geometry = band_geometry or sp._band_geometry
+    update_owner = update_owner or sp.sp_update_owner
+    update_local_t = update_local_t or sp.sp_update_local_t
+
+    out: List[Violation] = []
+    checks = 0
+    fam = f"sp_decode d{d} nr{nr} L{Lmax}"
+    Lloc = Lmax // d
+    M = hc.num_levels(Lmax, nr)
+    nsh = sp.sp_sharded_levels(Lmax, nr, d)
+    if nsh < 1:
+        return 0, []          # sp_cache_specs refuses this config loudly
+    nsh_u = min(nsh, M)       # nsh > M just means ALL levels shard
+    nbands = M + 1
+    R = Lmax                  # one grid row per global position
+    t = np.arange(R, dtype=np.int64)
+    tj = jnp.asarray(t, jnp.int32)
+    gargs = [np.arange(R, dtype=np.int64)]
+
+    # real per-shard geometry tables (the values sp_decode_attend
+    # scalar-prefetches), computed eagerly with a concrete shard index
+    geo = []
+    for s in range(d):
+        bidx, own = band_geometry(tj, jnp.asarray(s, jnp.int32), nr,
+                                  Lmax, d, nsh, M - 1)
+        geo.append((_np(bidx), _np(own)))
+
+    # -- (1) exactly-once attend-band ownership across shards ----------
+    own_total = np.sum([o for _, o in geo], axis=0)
+    for band in range(nbands):
+        checks += 1
+        col = own_total[:, band]
+        gaps = np.nonzero(col == 0)[0]
+        if gaps.size:
+            out.append(Violation(
+                fam, f"band{band}", "ownership-gap",
+                f"{gaps.size} global positions owned by NO shard "
+                f"(first: t={int(gaps[0])})"))
+        over = np.nonzero(col > 1)[0]
+        if over.size:
+            out.append(Violation(
+                fam, f"band{band}", "ownership-overlap",
+                f"{over.size} global positions owned by "
+                f"{int(col[over[0]])} shards (first: t={int(over[0])})"))
+
+    # -- (2) partial-vs-dense attend index-map agreement ---------------
+    cache = hd.init_cache(R, Lmax, _D, _D, nr)
+    q = jnp.zeros((R, 1, _D))
+    with capture() as got:
+        jax.eval_shape(
+            lambda c, qq, tt: dk.decode_attend_fused(c, qq, tt, nr=nr),
+            cache, q, tj)
+    dense_at = got[0]
+    dense_blk = {b: _eval_map(dense_at.inputs[1 + b], gargs, (t,), R)[:, 1]
+                 for b in range(nbands)}
+
+    slab = type(cache)(
+        k=jnp.zeros((R, Lloc, _D)), v=jnp.zeros((R, Lloc, _D)),
+        ck=tuple(jnp.zeros((R, (Lmax >> l) // (d if l < nsh else 1), _D))
+                 for l in range(1, M)),
+        cv=tuple(jnp.zeros((R, (Lmax >> l) // (d if l < nsh else 1), _D))
+                 for l in range(1, M)))
+    with capture() as got:
+        jax.eval_shape(
+            lambda c, qq, tt, bb, oo: dk.decode_attend_partial(
+                c, qq, tt, bb, oo, nr=nr, t_hi=Lmax - 1),
+            slab, q, tj, jnp.zeros((R, nbands), jnp.int32),
+            jnp.zeros((R, nbands), jnp.int32))
+    part_at = got[0]
+    band_lvl = part_at.meta["band_levels"]
+
+    for s, (bidx_s, own_s) in enumerate(geo):
+        stabs = (t, bidx_s, own_s)
+        # the REAL prefetch tables must fit the declared scalar domains
+        for spec, tab in zip(part_at.scalars, stabs):
+            checks += 1
+            lo = np.broadcast_to(np.asarray(spec.lo, np.int64), tab.shape)
+            hi = np.broadcast_to(np.asarray(spec.hi, np.int64), tab.shape)
+            bad = np.nonzero((tab < lo) | (tab > hi))
+            if bad[0].size:
+                out.append(Violation(
+                    fam, spec.name, "halo-mismatch",
+                    f"shard {s}: real {spec.name} table value "
+                    f"{int(tab[tuple(i[0] for i in bad)])} escapes the "
+                    f"contract's declared domain at index "
+                    f"{tuple(int(i[0]) for i in bad)}"))
+        for b in range(nbands):
+            lam = band_lvl[b]
+            nbl = (Lmax >> lam) // nr
+            nbl_loc = nbl // d if lam < nsh else nbl
+            loc = _eval_map(part_at.inputs[1 + b], gargs, stabs, R)[:, 1]
+            checks += 1
+            if not np.array_equal(loc, bidx_s[:, b]):
+                out.append(Violation(
+                    fam, f"band{b}", "halo-mismatch",
+                    f"shard {s}: partial contract map does not read the "
+                    f"prefetched band table"))
+                continue
+            oob = np.nonzero((loc < 0) | (loc >= nbl_loc))[0]
+            if oob.size:
+                out.append(Violation(
+                    fam, f"band{b}", "halo-mismatch",
+                    f"shard {s}: local block {int(loc[oob[0]])} escapes "
+                    f"the {nbl_loc}-block slab at t={int(oob[0])} "
+                    f"(non-owners must fetch clamped in-slab blocks)"))
+                continue
+            ownm = own_s[:, b] > 0
+            glob = loc + (s * nbl_loc if lam < nsh else 0)
+            mism = np.nonzero(ownm & (glob != dense_blk[b]))[0]
+            if mism.size:
+                tt = int(mism[0])
+                out.append(Violation(
+                    fam, f"band{b}", "halo-mismatch",
+                    f"shard {s} owns t={tt} but reads global block "
+                    f"{int(glob[tt])}; the single-chip kernel reads "
+                    f"{int(dense_blk[b][tt])}"))
+
+    # -- (3) update ownership: exactly-once over [0, Lmax] -------------
+    tu = np.arange(Lmax + 1, dtype=np.int64)
+    tuj = jnp.asarray(tu, jnp.int32)
+    if update_owned is None:
+        owners_all = _np(update_owner(tuj, Lloc, d))
+        owned_bits = np.stack([(owners_all == s).astype(np.int64)
+                               for s in range(d)])
+    else:
+        owned_bits = np.stack([_np(update_owned(tuj, s, Lloc, d))
+                               for s in range(d)])
+    checks += 1
+    tot = owned_bits.sum(axis=0)
+    gaps = np.nonzero(tot == 0)[0]
+    if gaps.size:
+        out.append(Violation(
+            fam, "update_owner", "ownership-gap",
+            f"{gaps.size} update positions owned by NO shard (first: "
+            f"t={int(gaps[0])}; t=Lmax={Lmax} must go to the LAST "
+            f"shard)"))
+    over = np.nonzero(tot > 1)[0]
+    if over.size:
+        out.append(Violation(
+            fam, "update_owner", "ownership-overlap",
+            f"{over.size} update positions owned by "
+            f"{int(tot[over[0]])} shards (first: t={int(over[0])})"))
+    checks += 1
+    if not owned_bits[d - 1, Lmax]:
+        out.append(Violation(
+            fam, "update_owner", "ownership-gap",
+            f"defensive row t=Lmax={Lmax} is not owned by the last "
+            f"shard (the masked-psum carry would write zeros)"))
+
+    # owner's local position must keep the sibling parity bits of the
+    # unclamped single-chip value at every sharded level
+    owner_of = np.argmax(owned_bits, axis=0)
+    tl_owner = np.empty_like(tu)
+    for s in range(d):
+        rows = np.nonzero(owner_of == s)[0]
+        tl_owner[rows] = _np(update_local_t(
+            jnp.asarray(tu[rows], jnp.int32), s, Lloc))
+    for l in range(nsh_u):
+        checks += 1
+        bad = np.nonzero(((tl_owner >> l) & 1) != ((tu >> l) & 1))[0]
+        if bad.size:
+            out.append(Violation(
+                fam, "update_local_t", "halo-mismatch",
+                f"owner-local position loses the level-{l} sibling "
+                f"parity bit at t={int(bad[0])} (t_loc="
+                f"{int(tl_owner[bad[0]])}) -- the pair select writes "
+                f"the wrong row"))
+
+    # -- (4) partial/deep update pair maps vs the single-chip maps -----
+    kn = jnp.zeros((R, _D))
+    with capture() as got:
+        jax.eval_shape(
+            lambda c, k2, v2, tt: dk.update_cache_fused(c, k2, v2, tt),
+            cache, kn, kn, tj)
+    dense_up = got[0]
+
+    up_slab = type(cache)(
+        k=jnp.zeros((R, Lloc, _D)), v=jnp.zeros((R, Lloc, _D)),
+        ck=tuple(jnp.zeros((R, Lloc >> l, _D)) for l in range(1, nsh_u)),
+        cv=tuple(jnp.zeros((R, Lloc >> l, _D)) for l in range(1, nsh_u)))
+    ones = np.ones((R,), np.int64)
+    with capture() as got:
+        jax.eval_shape(
+            lambda c, k2, v2, tt, oo: dk.update_cache_partial(
+                c, k2, v2, tt, oo, t_hi=Lmax),
+            up_slab, kn, kn, tj, jnp.ones((R,), jnp.int32))
+    part_up = got[0]
+
+    # real per-shard t_loc tables fit the declared domain
+    t_spec = part_up.scalars[0]
+    for s in range(d):
+        checks += 1
+        tab = _np(update_local_t(tj, s, Lloc))
+        bad = np.nonzero((tab < int(np.min(t_spec.lo)))
+                         | (tab > int(np.max(t_spec.hi))))[0]
+        if bad.size:
+            out.append(Violation(
+                fam, t_spec.name, "halo-mismatch",
+                f"shard {s}: real t_loc value {int(tab[bad[0]])} escapes "
+                f"the declared domain [{t_spec.lo}, {t_spec.hi}] at "
+                f"t={int(bad[0])}"))
+
+    tlo = tl_owner[:Lmax]
+    own_idx = owner_of[:Lmax]
+    for l in range(nsh_u):
+        checks += 1
+        dense_pair = _eval_map(dense_up.inputs[2 + 2 * l], gargs,
+                               (t,), R)[:, 1]
+        part_pair = _eval_map(part_up.inputs[2 + 2 * l], gargs,
+                              (tlo, ones), R)[:, 1]
+        glob = part_pair + own_idx * (Lloc >> (l + 1))
+        mism = np.nonzero(glob != dense_pair)[0]
+        if mism.size:
+            tt = int(mism[0])
+            out.append(Violation(
+                fam, f"k_l{l}", "halo-mismatch",
+                f"owner shard writes global level-{l} pair "
+                f"{int(glob[tt])} at t={tt}; the single-chip kernel "
+                f"writes {int(dense_pair[tt])}"))
+    if nsh < M:
+        deep = type(cache)(k=cache.ck[nsh - 1], v=cache.cv[nsh - 1],
+                           ck=cache.ck[nsh:], cv=cache.cv[nsh:])
+        with capture() as got:
+            jax.eval_shape(
+                lambda c, k2, v2, tt: dk.update_cache_fused(c, k2, v2, tt),
+                deep, kn, kn, tj)
+        deep_up = got[0]
+        t_deep = t >> nsh
+        for ld in range(M - nsh):
+            checks += 1
+            dense_pair = _eval_map(dense_up.inputs[2 + 2 * (nsh + ld)],
+                                   gargs, (t,), R)[:, 1]
+            deep_pair = _eval_map(deep_up.inputs[2 + 2 * ld], gargs,
+                                  (t_deep,), R)[:, 1]
+            mism = np.nonzero(deep_pair != dense_pair)[0]
+            if mism.size:
+                tt = int(mism[0])
+                out.append(Violation(
+                    fam, f"k_l{nsh + ld}", "halo-mismatch",
+                    f"replicated deep level {nsh + ld}: carried update "
+                    f"writes pair {int(deep_pair[tt])} at t={tt}; the "
+                    f"single-chip kernel writes {int(dense_pair[tt])}"))
+    return checks, out
+
+
+# ---------------------------------------------------------------------------
+# training/prefill: halo protocol vs the global band_mask
+# ---------------------------------------------------------------------------
+
+def _default_halo_blocks(s: int, nbl_loc: int, d: int,
+                         causal: bool) -> set:
+    """Key blocks (GLOBAL nr-row block indices, in the level's coarse
+    resolution) the halo exchange delivers to shard ``s``: the left
+    neighbour's last block, plus (bidir only) the right neighbour's
+    first block."""
+    provided = set()
+    if s > 0:
+        provided.add(s * nbl_loc - 1)
+    if not causal and s < d - 1:
+        provided.add((s + 1) * nbl_loc)
+    return provided
+
+
+def check_halo(d: int, nr: int, L: int, *,
+               halo_blocks: Optional[Callable] = None,
+               n_shallow_fn: Optional[Callable] = None,
+               ) -> Tuple[int, List[Violation]]:
+    """Every out-of-shard key block the global ``band_mask`` requires
+    must be delivered by the halo protocol, for every mode x shallow
+    level x shard.  Returns ``(checks_run, violations)``."""
+    import jax.numpy as jnp
+    from repro.core import hierarchy as hc
+    from repro.kernels import h1d_block
+    from repro.parallel import sp_attention as sp
+
+    halo_blocks = halo_blocks or _default_halo_blocks
+    n_shallow_fn = n_shallow_fn or sp.sp_n_shallow
+
+    out: List[Violation] = []
+    checks = 0
+    fam = f"sp_halo d{d} nr{nr} L{L}"
+    Lloc = L // d
+    if L % d or Lloc % nr or Lloc < nr:
+        return 0, []          # _validate_sp_shape refuses this config
+    M = hc.num_levels(L, nr)
+    n_shallow = n_shallow_fn(M, Lloc, nr)
+
+    cases = [("l0_causal", 0, 1), ("l0_bidir", 0, 1)]
+    for l in range(1, n_shallow):
+        cases += [("coarse_causal", l, 1), ("coarse_bidir", l, 1),
+                  ("sub", l, 1 << l)]
+    for mode, l, ratio in cases:
+        lk = L >> l
+        cl = Lloc >> l                      # local coarse length
+        nbl_loc = cl // nr                  # local nr-row key blocks
+        causal = mode.endswith("causal") or mode == h1d_block.SUB_MODE
+        ki = np.arange(lk, dtype=np.int64)
+        for s in range(d):
+            checks += 1
+            if mode == h1d_block.SUB_MODE:
+                qi = s * Lloc + np.arange(Lloc, dtype=np.int64)
+            else:
+                qi = s * cl + np.arange(cl, dtype=np.int64)
+            mask = np.asarray(h1d_block.band_mask(
+                jnp.asarray(qi[:, None]), jnp.asarray(ki[None, :]),
+                nr, mode, lk, ratio))
+            needed_keys = ki[mask.any(axis=0)]
+            outside = needed_keys[(needed_keys < s * cl)
+                                  | (needed_keys >= (s + 1) * cl)]
+            needed = set(int(b) for b in np.unique(outside // nr))
+            provided = halo_blocks(s, nbl_loc, d, causal)
+            missing = needed - provided
+            if missing:
+                out.append(Violation(
+                    fam, f"{mode} l{l}", "halo-mismatch",
+                    f"shard {s} needs out-of-shard key block(s) "
+                    f"{sorted(missing)} under the global band_mask but "
+                    f"the halo exchange only delivers "
+                    f"{sorted(provided)}"))
+    return checks, out
+
+
+# ---------------------------------------------------------------------------
+# transition threshold + per-step comm volume (DESIGN.md section 7)
+# ---------------------------------------------------------------------------
+
+def check_comm(d: int, nr: int, L: int, *, B: int = 1, Dk: int = _D,
+               Dv: int = _D,
+               n_shallow_fn: Optional[Callable] = None,
+               ) -> Tuple[int, List[Violation]]:
+    """Transition-threshold consistency and the pinned per-step comm
+    formulas.  The halo byte count comes from the REAL ``sp_halo_pack``
+    buffer, not a re-derived closed form."""
+    from repro.core import hierarchy as hc
+    from repro.parallel import sp_attention as sp
+
+    n_shallow_fn = n_shallow_fn or sp.sp_n_shallow
+
+    out: List[Violation] = []
+    checks = 0
+    fam = f"sp_comm d{d} nr{nr} L{L}"
+    Lloc = L // d
+    if L % d or Lloc % nr or Lloc < nr:
+        return 0, []
+    M = hc.num_levels(L, nr)
+    n_shallow = n_shallow_fn(M, Lloc, nr)
+
+    # threshold: level l runs locally iff L >> l >= d * nr (section 7.1)
+    for l in range(M):
+        checks += 1
+        rule = (L >> l) >= d * nr
+        code = l < n_shallow
+        if rule != code:
+            out.append(Violation(
+                fam, f"level{l}", "comm-mismatch",
+                f"all_gather transition threshold: level {l} is "
+                f"{'local' if code else 'gathered'} but L>>l={L >> l} "
+                f"{'>=' if rule else '<'} d*nr={d * nr} says it must be "
+                f"{'local' if rule else 'gathered'}"))
+    # one cache layout: the decode path's sharded-level rule must agree
+    checks += 1
+    nsh_dec = min(sp.sp_sharded_levels(L, nr, d), M)
+    if nsh_dec != n_shallow:
+        out.append(Violation(
+            fam, "sharded_levels", "comm-mismatch",
+            f"decode shards {nsh_dec} levels but the prefill path keeps "
+            f"{n_shallow} local -- attend and update would disagree on "
+            f"the cache layout"))
+
+    # halo volume from the real packer: one buffer per direction
+    kc = [np.zeros((B, Lloc >> l, Dk), np.float32)
+          for l in range(n_shallow)]
+    vc = [np.zeros((B, Lloc >> l, Dv), np.float32)
+          for l in range(n_shallow)]
+    wc = [np.zeros((B, Lloc >> l), np.float32) for l in range(n_shallow)]
+    buf = np.asarray(sp.sp_halo_pack(kc, vc, wc, n_shallow, nr, "prev"))
+    checks += 1
+    pinned = B * n_shallow * nr * (Dk + Dv + 1)
+    if buf.size != pinned:
+        out.append(Violation(
+            fam, "halo", "comm-mismatch",
+            f"packed halo buffer carries {buf.size} words per "
+            f"direction; DESIGN.md section 7 pins "
+            f"B*n_shallow*nr*(Dk+Dv+1) = {pinned}"))
+    # deep-level gather: <= d*nr/2 transition-level rows in total
+    if n_shallow < M:
+        checks += 1
+        rows = L >> n_shallow
+        if rows > d * nr // 2:
+            out.append(Violation(
+                fam, "gather", "comm-mismatch",
+                f"all_gather moves {rows} transition-level rows; "
+                f"DESIGN.md section 7 bounds it by d*nr/2 = "
+                f"{d * nr // 2}"))
+    return checks, out
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def run_dist(*, mesh_sizes=MESH_SIZES, decode_geoms=DECODE_GEOMS,
+             band_geoms=BAND_GEOMS,
+             ) -> Tuple[Dict[str, int], List[Violation]]:
+    """Sweep every check over the mesh x geometry grid.  Returns
+    ``({'configs': ..., 'checks': ...}, violations)``."""
+    violations: List[Violation] = []
+    checks = 0
+    configs = 0
+    for d in mesh_sizes:
+        for nr, Lmax in decode_geoms:
+            n, vs = check_decode(d, nr, Lmax)
+            if n:
+                configs += 1
+            checks += n
+            violations.extend(vs)
+        for nr, L in band_geoms:
+            for fn in (check_halo, check_comm):
+                n, vs = fn(d, nr, L)
+                if n:
+                    configs += 1
+                checks += n
+                violations.extend(vs)
+    return {"configs": configs, "checks": checks}, violations

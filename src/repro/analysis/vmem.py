@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import math
 import os
+import warnings
 from typing import Optional
 
 import numpy as np
@@ -37,10 +38,20 @@ DOUBLE_BUFFER = 2
 
 
 def default_budget() -> int:
-    """The static VMEM budget in bytes ($REPRO_VMEM_BUDGET overrides)."""
+    """The static VMEM budget in bytes ($REPRO_VMEM_BUDGET overrides).
+
+    A malformed override warns and falls back to the default -- an
+    autotune run deep inside a training script must not die on a typo'd
+    environment variable."""
     env = os.environ.get("REPRO_VMEM_BUDGET")
     if env:
-        return int(env)
+        try:
+            return int(env)
+        except ValueError:
+            warnings.warn(
+                f"REPRO_VMEM_BUDGET={env!r} is not an integer; using "
+                f"the default budget",
+                RuntimeWarning, stacklevel=2)
     return int(VMEM_BYTES * DEFAULT_FRACTION)
 
 

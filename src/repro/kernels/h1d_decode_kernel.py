@@ -58,6 +58,14 @@ def _band_names(nbands: int):
     return ["own", "prev"] + [f"lvl{l}" for l in range(1, nbands - 1)]
 
 
+def _band_levels(nbands: int):
+    """Hierarchy level of each attend band (bands 0/1 are the own/prev
+    fine blocks, band ``b >= 2`` is coarse level ``b - 1``).  Exposed in
+    the attend contracts' meta so ``analysis/dist.py`` can align a
+    contract's per-band index maps with the cache level they read."""
+    return tuple([0, 0] + list(range(1, nbands - 1)))
+
+
 def _hc():
     """Lazy ``core.hierarchy`` import (module-level would cycle through
     core/__init__ -> h1d_attention -> kernels/__init__), keeping one
@@ -191,7 +199,8 @@ def decode_attend_fused(cache, q: jnp.ndarray, t: jnp.ndarray, *, nr: int,
         scalar_names=("t",),
         in_names=(["q"] + [f"k_{b}" for b in bn] + [f"v_{b}" for b in bn]),
         out_names=("o",), interpret=interpret,
-        meta=dict(nr=nr, Lmax=Lmax, levels=levels))
+        meta=dict(nr=nr, Lmax=Lmax, levels=levels,
+                  band_levels=_band_levels(nbands)))
     return out.astype(q.dtype)
 
 
@@ -258,13 +267,17 @@ def _attend_partial_kernel(t_ref, bidx_ref, own_ref, q_ref, *refs, nr: int,
 def decode_attend_partial(cache, q: jnp.ndarray, t: jnp.ndarray,
                           bidx: jnp.ndarray, owned: jnp.ndarray, *,
                           nr: int, softmax_scale=None,
+                          t_hi: int = None,
                           interpret: bool = False):
     """Partial fused decode attention on shard-LOCAL cache arrays.
 
     ``bidx`` (R, nbands) int32 holds the local block index of each band
     in this shard's cache slab (levels may have fewer local blocks than
     the global cache); ``owned`` (R, nbands) gates bands this shard
-    does not own.  Returns float32 ``(num (R,G,Dv), den (R,G),
+    does not own.  ``t`` stays GLOBAL (the in-kernel masks compare
+    global positions); ``t_hi`` declares its domain -- the SP caller
+    passes ``Lmax - 1``, the default covers a single-shard slab.
+    Returns float32 ``(num (R,G,Dv), den (R,G),
     m (R,G))`` -- merge across shards with
     ``num * exp(m - pmax(m))`` psums (``sp_attention.sp_decode_attend``).
     """
@@ -308,11 +321,13 @@ def decode_attend_partial(cache, q: jnp.ndarray, t: jnp.ndarray,
         operands=[q, *k_arrs, *v_arrs],
         scalars=(t.astype(jnp.int32), bidx.astype(jnp.int32),
                  owned.astype(jnp.int32)),
-        scalar_bounds=((0, Lloc - 1), (0, bidx_hi), (0, 1)),
+        scalar_bounds=((0, Lloc - 1 if t_hi is None else t_hi),
+                       (0, bidx_hi), (0, 1)),
         scalar_names=("t", "bidx", "owned"),
         in_names=(["q"] + [f"k_{b}" for b in bn] + [f"v_{b}" for b in bn]),
         out_names=("num", "den", "m"), interpret=interpret,
-        meta=dict(nr=nr, Lloc=Lloc, levels=levels))
+        meta=dict(nr=nr, Lloc=Lloc, levels=levels,
+                  band_levels=_band_levels(nbands)))
 
 
 # ---------------------------------------------------------------------------
@@ -791,15 +806,18 @@ def _update_partial_kernel(t_ref, own_ref, knew_ref, vnew_ref, *refs,
 
 def update_cache_partial(cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
                          t_loc: jnp.ndarray, owned: jnp.ndarray, *,
-                         interpret: bool = False):
+                         t_hi: int = None, interpret: bool = False):
     """Fused ancestor update on shard-LOCAL cache arrays.
 
     ``cache`` holds only the SHARDED levels of the hierarchy (this
-    shard's slab); ``t_loc`` (R,) is the shard-local position (clamped
-    for non-owners) and ``owned`` (R,) marks the rows whose token lives
-    on this shard.  Returns ``(updated_cache, carry_k (R, D),
-    carry_v (R, Dv))`` where the carry is the freshly computed row for
-    the first level above the sharded chain (valid on owner rows)."""
+    shard's slab); ``t_loc`` (R,) is the shard-local position (low-
+    clamped only, so a non-owner left of the owning shard sees values up
+    to the GLOBAL length -- ``t_hi`` declares that real domain, the
+    default covers a single-shard slab) and ``owned`` (R,) marks the
+    rows whose token lives on this shard.  Returns ``(updated_cache,
+    carry_k (R, D), carry_v (R, Dv))`` where the carry is the freshly
+    computed row for the first level above the sharded chain (valid on
+    owner rows)."""
     R, D = k_new.shape
     Dv = v_new.shape[-1]
     nlev = 1 + len(cache.ck)
@@ -838,7 +856,7 @@ def update_cache_partial(cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
         out_shape=tuple(out_shape),
         operands=[k_new, v_new, *arrs],
         scalars=(t_loc.astype(jnp.int32), owned.astype(jnp.int32)),
-        scalar_bounds=((0, Lloc - 1), (0, 1)),
+        scalar_bounds=((0, Lloc - 1 if t_hi is None else t_hi), (0, 1)),
         scalar_names=("t_loc", "owned"),
         in_names=["k_new", "v_new"] + lvl_names,
         out_names=lvl_names + ["carry_k", "carry_v"],

@@ -162,8 +162,18 @@ class KernelPolicy:
                  cache_dir: Optional[str] = None,
                  defaults_path: Optional[str] = None):
         self.backend = backend or detect_backend()
-        self.cache_dir = (cache_dir
-                          or os.environ.get("REPRO_TUNE_CACHE")
+        env_dir = os.environ.get("REPRO_TUNE_CACHE")
+        if env_dir is not None and ("\0" in env_dir
+                                    or not env_dir.strip()):
+            # a malformed override must not crash mid-autotune: every
+            # later filesystem call would raise ValueError on the NUL
+            # (or scatter tables into a '' relative path)
+            warnings.warn(
+                f"repro_tune: REPRO_TUNE_CACHE={env_dir!r} is not a "
+                f"usable path; using the default cache dir",
+                RuntimeWarning)
+            env_dir = None
+        self.cache_dir = (cache_dir or env_dir
                           or os.path.expanduser("~/.cache/repro_tune"))
         self.defaults = _load_defaults(defaults_path)
         self._tables: Dict[str, Dict[str, Any]] = {}
@@ -348,7 +358,9 @@ class KernelPolicy:
             with open(tmp, "w") as f:
                 json.dump(payload, f, indent=1, sort_keys=True)
             os.replace(tmp, path)
-        except OSError as e:
+        except (OSError, ValueError) as e:
+            # ValueError: embedded NUL from a cache_dir passed directly
+            # to the constructor (the env override is sanitized there)
             warnings.warn(
                 f"repro_tune: cannot persist tuning table {path} ({e}); "
                 f"keeping measured entries in memory only", RuntimeWarning)

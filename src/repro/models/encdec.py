@@ -101,7 +101,7 @@ def encode(params, cfg: ModelConfig, frames, *, frame_weight=None):
     h = frames.astype(cfg.jdtype)
     positions = jnp.broadcast_to(jnp.arange(Se)[None], (B, Se))
     for lp in params["encoder"]:
-        def body(hh):
+        def body(hh, lp=lp):
             hh = logical(hh, ("pod", "data"), "model", None)
             a = attn_apply(lp["attn"], cfg, rmsnorm_apply(lp["ln1"], hh),
                            positions, causal=False, kv_weight=frame_weight)
@@ -119,7 +119,7 @@ def decode_train(params, cfg: ModelConfig, tokens, enc_h, *,
     h = params["embed"]["w"][tokens].astype(cfg.jdtype)
     positions = jnp.broadcast_to(jnp.arange(Sd)[None], (B, Sd))
     for lp in params["decoder"]:
-        def body(hh):
+        def body(hh, lp=lp):
             hh = logical(hh, ("pod", "data"), "model", None)
             a = attn_apply(lp["attn"], cfg, rmsnorm_apply(lp["ln1"], hh),
                            positions, causal=True)

@@ -246,7 +246,7 @@ def lm_forward(params, cfg: ModelConfig, tokens, *, prefix_embeds=None,
         for i, lp in enumerate(params["layers"]):
             kind = block_kind(cfg, i)
 
-            def body(hh):
+            def body(hh, lp=lp, kind=kind, i=i):
                 return block_apply(lp, cfg, kind, hh, positions,
                                    kv_weight=kv_weight,
                                    layer_global=cfg.layer_uses_global_attn(i))
@@ -372,7 +372,7 @@ def lm_prefill(params, cfg: ModelConfig, tokens, Lmax: int, *,
         e0 = h
         stacked = _uses_scan(cfg)
         for i in range(cfg.num_layers):
-            lp = (jax.tree.map(lambda x: x[i], params["layers"])
+            lp = (jax.tree.map(lambda x, i=i: x[i], params["layers"])
                   if stacked else params["layers"][i])
             kind = block_kind(cfg, i)
             h, cache = _block_prefill(lp, cfg, kind, h, positions, Lmax,
@@ -435,7 +435,7 @@ def lm_decode_step(params, cfg: ModelConfig, caches, token, t, *,
         e0 = h
         stacked = _uses_scan(cfg)
         for i in range(cfg.num_layers):
-            lp = (jax.tree.map(lambda x: x[i], params["layers"])
+            lp = (jax.tree.map(lambda x, i=i: x[i], params["layers"])
                   if stacked else params["layers"][i])
             kind = block_kind(cfg, i)
             h, cache = _block_decode(lp, cfg, kind, h, t, caches[ci],

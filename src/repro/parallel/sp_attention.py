@@ -160,6 +160,28 @@ def _ppermute_left(x, axis, d):
     return jax.lax.ppermute(x, axis, [(i + 1, i) for i in range(d - 1)])
 
 
+def sp_n_shallow(M: int, Lloc: int, nr: int) -> int:
+    """Number of hierarchy levels (fine level 0 included) the
+    training/prefill path runs LOCALLY per shard: level ``l`` keeps at
+    least one whole ``nr``-row coarse block per shard iff
+    ``Lloc >> l >= nr``.  Levels at or above the returned count go
+    through the gathered deep path.  One definition shared by
+    :func:`sp_h1d_attention` and ``analysis/dist.py``."""
+    return min(M, int(math.log2(Lloc // nr)) + 1)
+
+
+def sp_halo_pack(kc_l, vc_l, wc_l, n_shallow: int, nr: int, side: str):
+    """Pack the shard-boundary ``nr``-row block of every shallow level
+    into ONE ``(B, n_shallow * nr, Dk + Dv + 1)`` buffer -- the whole
+    multi-level halo then costs a single ppermute per direction.
+    ``side='prev'`` takes each level's LAST block (sent rightward),
+    ``side='next'`` the FIRST (sent leftward)."""
+    sl = slice(-nr, None) if side == "prev" else slice(None, nr)
+    return jnp.concatenate(
+        [_pack_kvw(kc_l[l][:, sl], vc_l[l][:, sl], wc_l[l][:, sl])
+         for l in range(n_shallow)], axis=1)
+
+
 def _edge_term(qe, ke, ve, we, mask):
     """Partial banded softmax of an edge query slab against one halo
     key block.  qe: (B, G, nq, D); ke/ve: (B, nk, *); we: (B, nk);
@@ -337,7 +359,7 @@ def sp_h1d_attention(q, k, v, *, mesh: Mesh, axis: str = "data",
     M = hc.num_levels(L, nr)
     fine_q = causal and causal_mode == "fine-q"
     # levels 0..n_shallow-1 keep >= one nr-row coarse block per shard
-    n_shallow = min(M, int(math.log2(Lloc // nr)) + 1)
+    n_shallow = sp_n_shallow(M, Lloc, nr)
     scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
     out_dtype = v.dtype
     spec0 = _dim0_spec(mesh, B, "h1d_attention")
@@ -372,13 +394,12 @@ def sp_h1d_attention(q, k, v, *, mesh: Mesh, axis: str = "data",
                 wq_l.append(hc.coarsen_sum(wq_l[-1], axis=-1))
 
         # ---- one packed halo exchange per direction ------------------
-        prev_halo = _ppermute_right(jnp.concatenate(
-            [_pack_kvw(kc_l[l][:, -nr:], vc_l[l][:, -nr:], wc_l[l][:, -nr:])
-             for l in range(n_shallow)], axis=1), axis, d)
+        prev_halo = _ppermute_right(
+            sp_halo_pack(kc_l, vc_l, wc_l, n_shallow, nr, "prev"), axis, d)
         if not causal:
-            next_halo = _ppermute_left(jnp.concatenate(
-                [_pack_kvw(kc_l[l][:, :nr], vc_l[l][:, :nr], wc_l[l][:, :nr])
-                 for l in range(n_shallow)], axis=1), axis, d)
+            next_halo = _ppermute_left(
+                sp_halo_pack(kc_l, vc_l, wc_l, n_shallow, nr, "next"),
+                axis, d)
 
         def halo(buf, l):
             return _unpack_kvw(buf[:, l * nr:(l + 1) * nr], Dk, Dv)
@@ -501,6 +522,24 @@ def sp_sharded_levels(Lmax: int, nr: int, d: int) -> int:
     return n
 
 
+def sp_update_owner(t, Lloc: int, d: int):
+    """Owning shard of a decode-update row at global position ``t``.
+    Out-of-range ``t`` (defensive: the engine freezes slots before this
+    can happen) is owned by the LAST shard, whose kernel then clamps the
+    pair index exactly like the single-chip launch -- without the clip
+    no shard owns the row and the masked-psum carry would write ZEROS
+    into the deep levels."""
+    return jnp.clip(t // Lloc, 0, d - 1)
+
+
+def sp_update_local_t(t, s, Lloc: int):
+    """Shard-local position handed to ``update_cache_partial``.  Keeps
+    the raw low bits (no upper clip): the kernel's pair_map min()-clamps
+    the index, and the sibling parity ``(t >> l) & 1`` must match the
+    unclamped single-chip value."""
+    return jnp.maximum(t - s * Lloc, 0)
+
+
 def sp_cache_specs(cache, mesh: Mesh, *, nr: int, axis: str = "data"):
     """PartitionSpec tree for an ``H1DCache`` under SP: fine + shallow
     coarse levels shard their sequence axis over ``axis``; deep levels
@@ -586,9 +625,12 @@ def sp_decode_attend(cache, q, t, *, nr: int, softmax_scale=None,
         with _local_region():
             s = jax.lax.axis_index(axis)
             bidx, owned = _band_geometry(t, s, nr, Lmax, d, nsh, M - 1)
+            # t stays GLOBAL inside the partial kernel (the band masks
+            # compare global positions), so its declared domain is the
+            # full sequence, not the local slab
             num, den, m = dk.decode_attend_partial(
                 cache, q, t, bidx, owned, nr=nr, softmax_scale=scale,
-                interpret=interpret)
+                t_hi=Lmax - 1, interpret=interpret)
             mg = jax.lax.pmax(m, axis)
             e = jnp.exp(m - mg)
             num = jax.lax.psum(num * e[..., None], axis)
@@ -643,22 +685,18 @@ def sp_update_cache(cache, k_new, v_new, t, *, impl: str = "pallas",
     def body(cache, k_new, v_new, t):
         with _local_region():
             s = jax.lax.axis_index(axis)
-            # out-of-range t (defensive: the engine freezes slots before
-            # this can happen) is owned by the LAST shard, whose kernel
-            # then clamps the pair index exactly like the single-chip
-            # launch -- without the clip no shard owns the row and the
-            # masked-psum carry would write ZEROS into the deep levels
-            owner = jnp.clip(t // Lloc, 0, d - 1)
+            owner = sp_update_owner(t, Lloc, d)
             owned = (owner == s).astype(jnp.int32)
-            # keep the raw low bits (no upper clip): the kernel's
-            # pair_map min()-clamps the index, and the sibling parity
-            # (t >> l) & 1 must match the unclamped single-chip value
-            t_loc = jnp.maximum(t - s * Lloc, 0)
+            t_loc = sp_update_local_t(t, s, Lloc)
             sharded = type(cache)(k=cache.k, v=cache.v,
                                   ck=cache.ck[:nsh - 1],
                                   cv=cache.cv[:nsh - 1])
+            # t_hi: non-owner rows keep t_loc = t - s*Lloc up to Lmax
+            # (shard 0 under a last-shard row); the contract must
+            # declare the real domain, not the local slab's
             upd, carry_k, carry_v = dk.update_cache_partial(
-                sharded, k_new, v_new, t_loc, owned, interpret=interpret)
+                sharded, k_new, v_new, t_loc, owned, t_hi=Lmax,
+                interpret=interpret)
             ck = list(upd.ck) + list(cache.ck[nsh - 1:])
             cv = list(upd.cv) + list(cache.cv[nsh - 1:])
             if nsh <= nlev - 1:

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import os
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -223,6 +224,25 @@ class PagePool:
             else:
                 self.free[l].append(page)
 
+    def _maybe_check(self, *, slot: Optional[int] = None,
+                     t: Optional[int] = None) -> None:
+        """Opt-in runtime invariant mode (``REPRO_POOL_CHECK=1``): run
+        the model checker's invariant functions after a mutating op, so
+        fuzzing and ``analysis/pool_model.py`` share ONE invariant
+        definition.  ``slot``/``t`` additionally run the tick write-set
+        postconditions."""
+        if not os.environ.get("REPRO_POOL_CHECK"):
+            return
+        from repro.analysis import pool_model
+        vs = pool_model.check_pool_invariants(self)
+        if slot is not None and t is not None:
+            vs += pool_model.check_tick_postconditions(self, slot, t)
+        if vs:
+            raise AssertionError(
+                "REPRO_POOL_CHECK: pool invariant violated:\n"
+                + "\n".join(f"  [{v.kind}] {v.operand}: {v.detail}"
+                            for v in vs))
+
     # -- request lifecycle ---------------------------------------------
     def admit(self, slot: int, tokens: np.ndarray, *,
               share: bool = True) -> Dict[int, List[Tuple[int, int]]]:
@@ -271,7 +291,9 @@ class PagePool:
                     self._unregister(l, p)
                 self.table[l][slot, blk] = -1
                 self._decref(l, p)
+            self._maybe_check()
             raise
+        self._maybe_check()
         return writes
 
     def release_slot(self, slot: int) -> None:
@@ -283,6 +305,27 @@ class PagePool:
             for blk in np.nonzero(row >= 0)[0]:
                 self._decref(l, int(row[blk]))
             row[:] = -1
+        self._maybe_check()
+
+    def admit_snapshot(self, slot: int,
+                       blocks: Dict[int, Sequence[int]],
+                       ) -> Dict[int, List[Tuple[int, int]]]:
+        """Re-map a preempted slot's snapshotted blocks onto fresh
+        PRIVATE pages (no registry sharing -- see :func:`restore_slot`
+        for why).  Returns per level the ``(block, page)`` pairs in
+        block order so the caller can scatter the saved bytes back.
+        Raises :class:`PoolExhausted` with the partial mapping LEFT IN
+        PLACE -- the caller unwinds with :func:`release_slot`."""
+        out: Dict[int, List[Tuple[int, int]]] = {}
+        for l, blks in blocks.items():
+            pairs = []
+            for b in blks:
+                p = self._alloc(l)
+                self._map(slot, l, int(b), p)
+                pairs.append((int(b), p))
+            out[l] = pairs
+        self._maybe_check()
+        return out
 
     def prepare_tick(self, slot: int, t: int,
                      copies: Dict[int, List[Tuple[int, int]]]) -> None:
@@ -313,6 +356,7 @@ class PagePool:
                 self.stats.cow_copies += 1
             elif (l, p) in self.key_of:
                 self._unregister(l, p)
+        self._maybe_check(slot=slot, t=t)
 
     # -- per-tick device tables ----------------------------------------
     def build_tables(self, pos: np.ndarray, active: np.ndarray,
@@ -559,11 +603,11 @@ def snapshot_slot(caches, pool: PagePool, slot: int, Hkv: int,
              for b in blks])
         rj = jnp.asarray(rows)
 
-        def lvl_arrays(c):
+        def lvl_arrays(c, l=l):
             return ((c.k, c.v) if l == 0
                     else (c.ck[l - 1], c.cv[l - 1]))
 
-        def lvl_scales(c):
+        def lvl_scales(c, l=l):
             return ((c.ksc, c.vsc) if l == 0
                     else (c.cksc[l - 1], c.cvsc[l - 1]))
 
@@ -616,16 +660,11 @@ def restore_slot(caches, pool: PagePool, slot: int, snap, Hkv: int,
                 f"into a {lvl_dtype[l]} pool -- cache_dtype/quant_levels "
                 "changed between snapshot and restore")
 
-    per_level_rows = {}
-    for l, entry in snap.items():
-        blks = entry[0]
-        dst = []
-        for b in blks:
-            p = pool._alloc(l)
-            pool._map(slot, l, int(b), p)
-            dst.append(p)
-        per_level_rows[l] = np.concatenate(
-            [np.arange(Hkv) + p * Hkv for p in dst])
+    placed = pool.admit_snapshot(
+        slot, {l: entry[0] for l, entry in snap.items()})
+    per_level_rows = {
+        l: np.concatenate([np.arange(Hkv) + p * Hkv for _, p in pairs])
+        for l, pairs in placed.items()}
 
     def per_layer(c, li):
         def per_level(l, ka, va):

@@ -306,3 +306,108 @@ def test_vmem_all_rejected_names_the_reason(fresh_policy):
     with pytest.raises(AssertionError, match="rejected:vmem"):
         fresh_policy.autotune_band(L=64, nr=16, mode="l0_causal", d=16,
                                    vmem_budget=1)
+
+
+# ---------------------------------------------------------------------------
+# check CLI: --json report schema, --family filter, section selection
+# ---------------------------------------------------------------------------
+
+def _report(tmp_path, argv):
+    import json
+    path = tmp_path / "report.json"
+    rc = check.main(argv + ["--json", str(path)])
+    with open(path) as f:
+        return rc, json.load(f)
+
+
+def test_check_json_report_schema(tmp_path, capsys):
+    """Pin the machine-readable report's schema: tooling diffs these
+    across PRs, so a key rename must fail loudly here."""
+    rc, rep = _report(tmp_path, ["--pool", "--pool-states", "400"])
+    capsys.readouterr()
+    assert rc == 0
+    assert set(rep) == {"sections", "contracts", "families", "violations",
+                        "dist", "pool", "ok", "runtime_s"}
+    assert rep["sections"] == ["pool"]
+    assert rep["contracts"] == 0 and rep["families"] == {}
+    assert rep["violations"] == [] and rep["ok"] is True
+    assert rep["dist"] is None
+    assert isinstance(rep["runtime_s"], float)
+    pool = rep["pool"]
+    assert pool["states"] >= 400
+    assert pool["transitions"] > pool["states"] // 2
+    assert isinstance(pool["coverage"], dict) and pool["coverage"]
+    assert "counterexample" not in pool        # only present on failure
+
+
+def test_check_json_kernels_section(tmp_path, capsys):
+    """Kernel runs populate contracts/families; violations (none on the
+    committed kernels) carry label + the Violation dataclass fields."""
+    rc, rep = _report(tmp_path, ["--kernels", "--nr", "4", "--d", "8",
+                                 "--samples", "1",
+                                 "--family", "decode_update"])
+    capsys.readouterr()
+    assert rc == 0
+    assert rep["contracts"] > 0
+    assert rep["families"] and all(f.startswith("decode_update")
+                                   for f in rep["families"])
+    assert rep["pool"] is None and rep["dist"] is None
+
+
+def test_check_family_filters_contracts(capsys):
+    """--family SUBSTR restricts the kernel sweep to matching labels or
+    contract families (and the run still passes)."""
+    assert check.main(["--nr", "4", "--d", "8", "--samples", "1",
+                       "--family", "band_fwd"]) == 0
+    out = capsys.readouterr().out
+    assert "band_fwd" in out
+    assert "decode" not in out
+
+
+def test_check_cli_pool_section_stdout(capsys):
+    assert check.main(["--pool", "--pool-states", "300"]) == 0
+    out = capsys.readouterr().out
+    assert "pool:" in out and "states" in out
+    assert "checked" not in out            # kernel summary suppressed
+
+
+# ---------------------------------------------------------------------------
+# env-override hardening (REPRO_VMEM_BUDGET / REPRO_TUNE_CACHE)
+# ---------------------------------------------------------------------------
+
+def test_vmem_budget_malformed_env_warns_and_defaults(monkeypatch):
+    monkeypatch.setenv("REPRO_VMEM_BUDGET", "lots")
+    with pytest.warns(RuntimeWarning, match="REPRO_VMEM_BUDGET"):
+        got = vmem.default_budget()
+    assert got == int(vmem.VMEM_BYTES * vmem.DEFAULT_FRACTION)
+
+
+def test_tune_cache_malformed_env_warns_and_defaults(monkeypatch,
+                                                     tmp_path):
+    """A blank or NUL-bearing REPRO_TUNE_CACHE cannot be a cache dir:
+    the policy must warn and fall back to the default path instead of
+    crashing on first table save."""
+    import os
+    for bad in ("   ", "a\0b"):
+        # NUL bytes cannot pass through putenv, so patch the mapping
+        monkeypatch.setattr(os, "environ", {"REPRO_TUNE_CACHE": bad})
+        with pytest.warns(RuntimeWarning, match="REPRO_TUNE_CACHE"):
+            p = KernelPolicy()
+        assert p.cache_dir == os.path.expanduser("~/.cache/repro_tune")
+    # a usable path passes through silently
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path))
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        p = KernelPolicy()
+    assert p.cache_dir == str(tmp_path)
+
+
+def test_save_table_bad_dir_degrades_gracefully(tmp_path):
+    """An unusable cache_dir passed EXPLICITLY (bypassing the env
+    sanitizer) must not crash tuning -- table persistence is best
+    effort."""
+    p = KernelPolicy(cache_dir="cache\0dir")
+    p._tables["band_fwd"] = {"x": {"tq": 16}}
+    with pytest.warns(RuntimeWarning, match="cannot persist"):
+        assert p._save_table("band_fwd") is None   # kept in memory

@@ -1,0 +1,118 @@
+"""Distributed-ownership checker (`analysis/dist.py`): the committed
+sequence-parallel dispatch rules must verify clean on every mesh size,
+and each violation kind (ownership-gap, ownership-overlap,
+halo-mismatch, comm-mismatch) must be provably catchable -- a seeded
+mutation of the corresponding rule is injected through the checker's
+hook arguments and the expected kind must come back."""
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import dist
+from repro.parallel import sp_attention as sp
+
+
+def _kinds(violations):
+    return sorted({v.kind for v in violations})
+
+
+# ---------------------------------------------------------------------------
+# committed rules verify clean
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d", [1, 2, 4, 8])
+def test_decode_ownership_clean(d):
+    checks, vs = dist.check_decode(d, 4, 64)
+    assert checks > 0
+    assert vs == [], _kinds(vs)
+
+
+@pytest.mark.parametrize("d", [2, 4])
+def test_halo_and_comm_clean(d):
+    checks_h, vs_h = dist.check_halo(d, 4, 128)
+    checks_c, vs_c = dist.check_comm(d, 4, 128)
+    assert checks_h > 0 and checks_c > 0
+    assert vs_h == [] and vs_c == []
+
+
+def test_run_dist_sweep_shape():
+    stats, vs = dist.run_dist(mesh_sizes=(2,), decode_geoms=((4, 64),),
+                              band_geoms=((4, 64),))
+    assert vs == []
+    assert stats["configs"] == 3          # 1 decode + 1 halo/comm pair
+    assert stats["checks"] > 0
+
+
+# ---------------------------------------------------------------------------
+# seeded mutations: every DIST kind is actually caught
+# ---------------------------------------------------------------------------
+
+def test_mutation_unclamped_owner_is_ownership_gap():
+    """The historical last-shard rule: without the clip to d-1 the
+    final position t == Lmax has no owner."""
+    _, vs = dist.check_decode(
+        4, 4, 64, update_owner=lambda t, Lloc, d: t // Lloc)
+    assert "ownership-gap" in _kinds(vs)
+
+
+def test_mutation_geq_owned_bits_is_ownership_overlap():
+    """An `owner >= s` rule makes every earlier shard also claim the
+    row: the exactly-once check must flag the double ownership."""
+    _, vs = dist.check_decode(
+        4, 4, 64,
+        update_owned=lambda t, s, Lloc, d:
+            (t // Lloc >= s).astype(jnp.int32))
+    assert "ownership-overlap" in _kinds(vs)
+
+
+def test_mutation_upper_clipped_local_t_is_halo_mismatch():
+    """Clamping the owner's local position to Lloc-1 (the pre-PR-5 bug
+    shape) breaks the sibling parity bits and the pair-map agreement."""
+    _, vs = dist.check_decode(
+        4, 4, 64,
+        update_local_t=lambda t, s, Lloc: jnp.clip(t - s * Lloc, 0,
+                                                   Lloc - 1))
+    assert "halo-mismatch" in _kinds(vs)
+
+
+def test_mutation_doubled_band_index_is_halo_mismatch():
+    """A band-geometry that returns twice the local block index no
+    longer reconstructs the dense contract's global block."""
+    def bad_geo(t, s, nr, Lmax, d, nsh, nlevels):
+        bidx, own = sp._band_geometry(t, s, nr, Lmax, d, nsh, nlevels)
+        return bidx + bidx, own
+    _, vs = dist.check_decode(4, 4, 64, band_geometry=bad_geo)
+    assert "halo-mismatch" in _kinds(vs)
+
+
+def test_mutation_empty_halo_is_halo_mismatch():
+    """Dropping the one-block-per-direction halo exchange leaves the
+    band_mask neighbourhood uncovered at every shard boundary."""
+    _, vs = dist.check_halo(
+        4, 4, 64, halo_blocks=lambda s, nbl, d, causal: set())
+    assert _kinds(vs) == ["halo-mismatch"]
+    assert len(vs) > 1                     # both modes, several levels
+
+
+def test_mutation_wrong_shallow_count_is_comm_mismatch():
+    """An off n_shallow breaks the L >> l >= d*nr threshold rule, the
+    decode-path agreement and the pinned comm-volume formula."""
+    _, vs = dist.check_comm(
+        4, 4, 64, n_shallow_fn=lambda M, Lloc, nr: 1)
+    assert "comm-mismatch" in _kinds(vs)
+
+
+def test_all_dist_kinds_are_catchable():
+    """Union over the seeded mutations covers every DIST kind -- the
+    checker has no dead violation class."""
+    caught = set()
+    for kw in (dict(update_owner=lambda t, Lloc, d: t // Lloc),
+               dict(update_owned=lambda t, s, Lloc, d:
+                    (t // Lloc >= s).astype(jnp.int32)),
+               dict(update_local_t=lambda t, s, Lloc:
+                    jnp.clip(t - s * Lloc, 0, Lloc - 1))):
+        caught |= {v.kind for v in dist.check_decode(4, 4, 64, **kw)[1]}
+    caught |= {v.kind for v in dist.check_comm(
+        4, 4, 64, n_shallow_fn=lambda M, Lloc, nr: 1)[1]}
+    caught |= {v.kind for v in dist.check_halo(
+        4, 4, 64, halo_blocks=lambda s, nbl, d, causal: set())[1]}
+    assert caught >= set(dist.DIST_KINDS)

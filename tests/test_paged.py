@@ -2,7 +2,16 @@
 paged-vs-dense greedy token parity (the dense slot engine is the
 oracle), allocator/scheduler unit behavior, prefix sharing + COW,
 eviction, preemption (swap and recompute), chunked prefill, and
-bit-exact page reconstruction."""
+bit-exact page reconstruction.
+
+The randomized/property schedules run under ``REPRO_POOL_CHECK=1``:
+the pool re-runs the model checker's invariants
+(``analysis/pool_model.check_pool_invariants``) after every mutating
+op, so these fuzzed engine runs double as an allocator soundness
+sweep."""
+import contextlib
+import os
+
 import jax
 import numpy as np
 import pytest
@@ -20,6 +29,18 @@ from repro.serve import paged_cache as pc
 
 
 _STATE = {}
+
+
+@contextlib.contextmanager
+def _pool_check():
+    """Run the enclosed engine schedule with per-op pool invariant
+    checking (plain env try/finally: the hypothesis shim replays test
+    bodies, which interacts badly with fixture-scoped monkeypatching)."""
+    os.environ["REPRO_POOL_CHECK"] = "1"
+    try:
+        yield
+    finally:
+        os.environ.pop("REPRO_POOL_CHECK", None)
 
 
 def _model():
@@ -117,7 +138,9 @@ def test_preemption_swap_restores_bit_exact_tokens():
     cfg, _ = _model()
     wl = _workload(7, 10, cfg)
     ref = _dense_ref(7, 10)
-    eng, out = _run(wl, slots=4, paged=True, pool_pages=8, lookahead=4)
+    with _pool_check():
+        eng, out = _run(wl, slots=4, paged=True, pool_pages=8,
+                        lookahead=4)
     assert eng.preemptions > 0, "schedule no longer exercises preemption"
     assert out == ref
 
@@ -151,7 +174,8 @@ def test_randomized_admission_eviction_preemption_schedule(seed):
     kw = dict(slots=int(rng.integers(2, 6)),
               pool_pages=int(rng.integers(8, 16)),
               lookahead=int(rng.integers(0, 6)))
-    eng, out = _run(wl, paged=True, **kw)
+    with _pool_check():
+        eng, out = _run(wl, paged=True, **kw)
     assert out == ref, kw
 
 
@@ -170,7 +194,8 @@ def test_property_random_schedules_match_dense(seed):
               pool_pages=int(rng.integers(7, 20)),
               lookahead=int(rng.integers(0, 5)),
               token_budget=int(rng.integers(16, 64)))
-    _, out = _run(wl, paged=True, **kw)
+    with _pool_check():
+        _, out = _run(wl, paged=True, **kw)
     assert out == ref, kw
 
 
@@ -428,7 +453,8 @@ def test_property_int8_schedules_self_consistent(seed):
               pool_pages=int(rng.integers(7, 20)),
               lookahead=int(rng.integers(0, 5)),
               token_budget=int(rng.integers(16, 64)))
-    _, out = _run(wl, paged=True, cache_dtype="int8", **kw)
+    with _pool_check():
+        _, out = _run(wl, paged=True, cache_dtype="int8", **kw)
     assert out == base, kw
     assert _match_rate(out, ref) >= 0.99, kw
 

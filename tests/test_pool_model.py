@@ -1,0 +1,237 @@
+"""Paged-pool model checker (`analysis/pool_model.py`): the REAL
+PagePool must verify clean over an exhaustive bounded exploration, and
+each violation kind (refcount-leak, use-after-free, shared-alias,
+zombie-registry) must be provably catchable -- a seeded allocator
+mutation (a PagePool subclass breaking one rule) must be caught with a
+minimized counterexample that replays through the real pool."""
+import inspect
+import json
+
+import numpy as np
+import pytest
+
+from repro.analysis import pool_model as pm
+from repro.analysis.checker import Violation
+from repro.serve.paged_cache import PagePool, PoolExhausted
+
+
+def _geom():
+    return dict(pm.DEFAULT_GEOMETRY)
+
+
+# ---------------------------------------------------------------------------
+# seeded allocator mutations (each breaks exactly one rule)
+# ---------------------------------------------------------------------------
+
+class NoUnregister(PagePool):
+    """Eviction / COW forget to drop the registry entry."""
+
+    def _unregister(self, l, page):
+        pass
+
+
+class LosePage(PagePool):
+    """Unregistered refcount-0 pages silently leak (never freed)."""
+
+    def _decref(self, l, page):
+        self.refcount[l][page] -= 1
+        if self.refcount[l][page] == 0 and (l, page) in self.key_of:
+            self.evictable[(l, page)] = None
+
+
+class EagerFree(PagePool):
+    """Pages returned to the free list while still mapped elsewhere."""
+
+    def _decref(self, l, page):
+        super()._decref(l, page)
+        if self.refcount[l][page] > 0:
+            self.free[l].append(page)
+
+
+class NoCow(PagePool):
+    """Decode writes land on still-shared pages (no copy-on-write)."""
+
+    def prepare_tick(self, slot, t, copies):
+        from repro.serve.paged_cache import ZERO
+        for l in range(self.M):
+            blk = t // (self.nr << l)
+            p = int(self.table[l][slot, blk])
+            if p < 0:
+                np_ = self._alloc(l)
+                self._map(slot, l, blk, np_)
+                copies.setdefault(l, []).append((ZERO, np_))
+            elif (l, p) in self.key_of and self.refcount[l][p] == 1:
+                self._unregister(l, p)
+
+
+MUTANTS = [
+    (NoUnregister, "zombie-registry"),
+    (LosePage, "refcount-leak"),
+    (EagerFree, "use-after-free"),
+    (NoCow, "shared-alias"),
+]
+
+
+# ---------------------------------------------------------------------------
+# the real pool is clean
+# ---------------------------------------------------------------------------
+
+def test_real_pool_explores_clean():
+    res = pm.explore(max_states=2500)
+    assert res.violations == []
+    assert res.counterexample is None
+    assert res.states >= 2500              # state space larger than cap
+    # every op class and every interesting allocator path was exercised
+    for op in ("admit", "tick", "finish", "snapshot", "restore"):
+        assert res.coverage.get(op, 0) > 0, op
+    for path in ("cow_copies", "evictions", "shared_maps", "fresh_pages"):
+        assert res.coverage.get(path, 0) > 0, path
+
+
+def test_ci_exploration_meets_state_floor():
+    """The CI entry point (`run_pool` via `check --pool`) must explore
+    at least 10^4 distinct states by default."""
+    sig = inspect.signature(pm.run_pool)
+    assert sig.parameters["max_states"].default >= 10 ** 4
+
+
+# ---------------------------------------------------------------------------
+# every pool kind is catchable, with replayable minimized schedules
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cls,kind", MUTANTS,
+                         ids=[c.__name__ for c, _ in MUTANTS])
+def test_mutation_caught_and_counterexample_replays(cls, kind):
+    res = pm.explore(pool_factory=lambda: cls(**_geom()),
+                     max_states=4000)
+    kinds = {v.kind for v in res.violations}
+    assert kind in kinds, kinds
+    assert kinds <= set(pm.POOL_KINDS)
+    ce = res.counterexample
+    assert ce, "no counterexample schedule returned"
+    assert len(ce) <= 4                    # minimization actually ran
+    # the minimized schedule reproduces on the REAL (mutated) PagePool
+    vs, _ = pm.replay_schedule(ce, pool_factory=lambda: cls(**_geom()))
+    assert vs and {v.kind for v in vs} <= kinds
+    # ... and the unmutated pool sails through the same schedule
+    vs_clean, _ = pm.replay_schedule(ce)
+    assert vs_clean == []
+    # ... and survives a JSON round trip (the regression format)
+    wire = json.loads(json.dumps(pm.schedule_to_json(ce)))
+    assert pm.schedule_from_json(wire) == ce
+
+
+def test_all_pool_kinds_are_catchable():
+    caught = set()
+    for cls, _ in MUTANTS:
+        res = pm.explore(pool_factory=lambda cls=cls: cls(**_geom()),
+                         max_states=4000)
+        caught |= {v.kind for v in res.violations}
+    assert caught == set(pm.POOL_KINDS)
+
+
+# ---------------------------------------------------------------------------
+# invariant functions flag hand-corrupted pools
+# ---------------------------------------------------------------------------
+
+def _admitted_pool():
+    pool = PagePool(**_geom())
+    pool.admit(0, pm.default_prompts()[0])
+    assert pm.check_pool_invariants(pool) == []
+    return pool
+
+
+def test_invariants_flag_freed_while_mapped():
+    pool = _admitted_pool()
+    pool.free[0].append(int(pool.table[0][0, 0]))
+    assert "use-after-free" in {v.kind
+                                for v in pm.check_pool_invariants(pool)}
+
+
+def test_invariants_flag_refcount_drift():
+    pool = _admitted_pool()
+    pool.refcount[0][int(pool.table[0][0, 0])] += 1
+    assert "refcount-leak" in {v.kind
+                               for v in pm.check_pool_invariants(pool)}
+
+
+def test_invariants_flag_unregistered_alias():
+    pool = _admitted_pool()
+    p = int(pool.table[0][0, 0])
+    pool.table[0][1, 0] = p                # alias without registry bump
+    pool.refcount[0][p] += 1
+    pool._unregister(0, p)
+    assert "shared-alias" in {v.kind
+                              for v in pm.check_pool_invariants(pool)}
+
+
+def test_invariants_flag_stale_registry():
+    pool = _admitted_pool()
+    pool.registry[("bogus",)] = (0, 99)
+    assert "zombie-registry" in {v.kind
+                                 for v in pm.check_pool_invariants(pool)}
+
+
+def test_tick_postconditions_flag_shared_write_set():
+    pool = PagePool(**_geom())
+    toks = pm.default_prompts()[2]         # 6 tokens: partial fine page
+    pool.admit(0, toks)
+    pool.admit(1, toks)                    # frontier page now shared
+    t = len(toks)                          # t=6 lands IN the shared page
+    vs = pm.check_tick_postconditions(pool, 0, t)
+    assert "shared-alias" in {v.kind for v in vs}
+    pool.prepare_tick(0, t, {})            # the real COW fixes it
+    assert pm.check_tick_postconditions(pool, 0, t) == []
+    assert pm.check_pool_invariants(pool) == []
+
+
+def test_failed_admit_rolls_back_identically():
+    pool = PagePool(slots=2, max_len=64, nr=8, pool_pages=4)
+    fp0 = pm.pool_fingerprint(pool)
+    with pytest.raises(PoolExhausted):
+        pool.admit(0, np.arange(40, dtype=np.int32))   # needs 5 > 4
+    assert pm._check_rollback(fp0, pm.pool_fingerprint(pool),
+                              "admit slot0") == []
+
+
+# ---------------------------------------------------------------------------
+# admit_snapshot (restore path's allocator entry point)
+# ---------------------------------------------------------------------------
+
+def test_admit_snapshot_maps_private_pages():
+    pool = PagePool(**_geom())
+    toks = pm.default_prompts()[1]
+    pool.admit(0, toks)
+    blocks = {l: [int(b) for b in np.nonzero(pool.table[l][0] >= 0)[0]]
+              for l in range(pool.M)}
+    pool.release_slot(0)
+    placed = pool.admit_snapshot(1, blocks)
+    for l, pairs in placed.items():
+        assert [b for b, _ in pairs] == blocks[l]
+        for b, p in pairs:
+            assert int(pool.table[l][1, b]) == p
+            assert int(pool.refcount[l][p]) == 1     # private
+            assert (l, p) not in pool.key_of          # never registered
+    assert pm.check_pool_invariants(pool) == []
+
+
+def test_admit_snapshot_exhaustion_unwinds_via_release():
+    pool = PagePool(slots=1, max_len=16, nr=4, pool_pages=2)
+    with pytest.raises(PoolExhausted):
+        # 3 fine blocks against a 2-page fine pool
+        pool.admit_snapshot(0, {0: [0, 1, 2]})
+    # documented contract: partial mapping left in place ...
+    assert (pool.table[0][0] >= 0).any()
+    pool.release_slot(0)                   # ... caller unwinds
+    assert pm.check_pool_invariants(pool) == []
+    assert pool.occupancy() == 0.0
+
+
+def test_violation_objects_are_checker_violations():
+    """pool_model reuses the LaunchContract Violation type so the CLI
+    and JSON report render both layers uniformly."""
+    pool = _admitted_pool()
+    pool.refcount[0][int(pool.table[0][0, 0])] += 1
+    vs = pm.check_pool_invariants(pool)
+    assert vs and all(isinstance(v, Violation) for v in vs)
+    assert all(v.family == "pool" for v in vs)

@@ -1,0 +1,159 @@
+"""Characterization tests for `serve/scheduler.py`: pin the victim
+choice (LIFO over admit serials, exclusions honored) and the plan()
+token-budget accounting (active slots pre-charge the budget, chunked
+prefill charges the CHUNK, lookahead bounds the skip-ahead window)
+that the preemption and parity tests depend on indirectly."""
+import numpy as np
+import pytest
+
+from repro.serve import ContinuousBatchingScheduler, QueueEntry
+
+
+def _entry(n, uid):
+    return QueueEntry(req=uid, prompt=np.arange(n, dtype=np.int32))
+
+
+def _bucket(s):
+    return 1 << max(s - 1, 0).bit_length()
+
+
+def _plan(sched, queue, free_slots=4, n_active=0, can=lambda e: True):
+    groups, rest = sched.plan(queue, free_slots, n_active, _bucket, can)
+    return ([[e.req for e in g.entries] for g in groups],
+            [e.req for e in rest])
+
+
+# ---------------------------------------------------------------------------
+# choose_victim
+# ---------------------------------------------------------------------------
+
+def test_choose_victim_is_lifo_by_admit_serial():
+    """The MOST RECENTLY admitted slot is preempted (slot ids do not
+    matter, admission serials do): oldest work keeps its pages."""
+    assert ContinuousBatchingScheduler.choose_victim(
+        {0: 11, 1: 5, 2: 9}) == 0
+    assert ContinuousBatchingScheduler.choose_victim(
+        {3: 1, 1: 2}) == 1                    # serial wins, not slot id
+
+
+def test_choose_victim_honors_exclusions():
+    serial = {0: 3, 1: 2, 2: 1}
+    assert ContinuousBatchingScheduler.choose_victim(
+        serial, exclude=(0,)) == 1
+    assert ContinuousBatchingScheduler.choose_victim(
+        serial, exclude=(0, 1)) == 2
+    assert ContinuousBatchingScheduler.choose_victim(
+        serial, exclude=(0, 1, 2)) is None
+    assert ContinuousBatchingScheduler.choose_victim({}) is None
+
+
+# ---------------------------------------------------------------------------
+# plan(): token-budget accounting
+# ---------------------------------------------------------------------------
+
+def test_budget_is_precharged_by_active_slots():
+    """Every active slot costs one token of this tick's work BEFORE any
+    admission: budget 10 with 6 decoding slots leaves 4, so a 5-token
+    prompt no longer fits (it did with n_active=0)."""
+    sched = ContinuousBatchingScheduler(token_budget=10)
+    assert _plan(sched, [_entry(5, 0)], n_active=0)[0] == [[0]]
+    assert _plan(sched, [_entry(5, 0)], n_active=6)[0] == []
+    # exactly-fitting chunk is admitted (budget is >=, not >)
+    assert _plan(sched, [_entry(4, 0)], n_active=6)[0] == [[0]]
+
+
+def test_budget_never_goes_negative():
+    """n_active beyond the budget clamps to zero rather than borrowing
+    from future ticks -- only the anti-starvation pick can exceed it."""
+    sched = ContinuousBatchingScheduler(token_budget=4)
+    groups, rest = _plan(sched, [_entry(2, 0)], n_active=9)
+    assert groups == [] and rest == [0]
+    # idle engine (n_active=0): first pick admitted even over budget
+    groups, _ = _plan(sched, [_entry(30, 0)], n_active=0)
+    assert groups == [[0]]
+    # ... but NOT when other work is already running this tick
+    groups, rest = _plan(sched, [_entry(30, 0)], n_active=1)
+    assert groups == [] and rest == [0]
+
+
+def test_budget_spends_cumulatively_across_groups():
+    """Each admission debits its chunk: 3+3 exhausts budget 7 after the
+    second entry (leaving 1), so the third entry (cost 3) stays queued
+    even though a slot is free."""
+    sched = ContinuousBatchingScheduler(token_budget=7)
+    groups, rest = _plan(
+        sched, [_entry(3, 0), _entry(3, 1), _entry(3, 2)], free_slots=3)
+    assert groups == [[0, 1]] and rest == [2]
+
+
+def test_chunked_prefill_charges_the_chunk_not_the_prompt():
+    """With prefill_chunk=4 a 30-token prompt costs 4 budget tokens and
+    admits on its first 4 tokens only; the tail streams through decode
+    ticks (engine-side), so budget 8 fits TWO long prompts."""
+    sched = ContinuousBatchingScheduler(token_budget=8, prefill_chunk=4)
+    queue = [_entry(30, 0), _entry(30, 1), _entry(30, 2)]
+    groups, rest = sched.plan(queue, 4, 0, _bucket, lambda e: True)
+    assert [[e.req for e in g.entries] for g in groups] == [[0, 1]]
+    assert [e.req for e in rest] == [2]
+    for g in groups:
+        for c in g.chunks:
+            assert len(c) == 4
+        assert g.bucket == _bucket(4)
+    # short prompts are charged their true length, not the chunk cap
+    assert sched.chunk_len(3) == 3 and sched.chunk_len(30) == 4
+
+
+def test_lookahead_bounds_the_skip_window():
+    """An infeasible head may be jumped by at most `lookahead` later
+    entries; entry lookahead+1 is out of the window even if feasible."""
+    can = lambda e: len(e.prompt) < 10
+    queue = lambda: [_entry(30, 0), _entry(40, 1), _entry(5, 2)]
+    # lookahead=1: the feasible entry sits at index 2 -- unreachable
+    sched = ContinuousBatchingScheduler(lookahead=1)
+    groups, rest = _plan(sched, queue(), free_slots=1, can=can)
+    assert groups == [] and rest == [0, 1, 2]
+    # lookahead=2 reaches it; FIFO order of the skipped heads survives
+    sched = ContinuousBatchingScheduler(lookahead=2)
+    groups, rest = _plan(sched, queue(), free_slots=1, can=can)
+    assert groups == [[2]] and rest == [0, 1]
+
+
+def test_legacy_mode_groups_consecutive_same_bucket_only():
+    """token_budget=None + lookahead=0 + no chunking is the dense parity
+    oracle's schedule: pop the head, pull CONSECUTIVE same-bucket
+    entries, never skip."""
+    sched = ContinuousBatchingScheduler()
+    queue = [_entry(5, 0), _entry(6, 1), _entry(20, 2), _entry(7, 3)]
+    groups, rest = _plan(sched, queue, free_slots=4)
+    # 5 and 6 share bucket 8; 20 breaks the run, 7 starts a new group
+    assert groups == [[0, 1], [2], [3]] and rest == []
+    # with lookahead, the same queue coalesces the split bucket
+    sched = ContinuousBatchingScheduler(lookahead=2)
+    groups, rest = _plan(sched, queue, free_slots=4)
+    assert groups == [[0, 1, 3], [2]] and rest == []
+
+
+def test_free_slots_cap_admissions():
+    sched = ContinuousBatchingScheduler()
+    queue = [_entry(5, i) for i in range(4)]
+    groups, rest = _plan(sched, queue, free_slots=2)
+    assert groups == [[0, 1]] and rest == [2, 3]
+    groups, rest = _plan(sched, queue, free_slots=0)
+    assert groups == [] and rest == [0, 1, 2, 3]
+
+
+def test_can_admit_gates_every_pick():
+    """The pool-availability probe rejects entries anywhere in a group,
+    not just the head pick."""
+    sched = ContinuousBatchingScheduler(lookahead=3)
+    queue = [_entry(5, 0), _entry(6, 1), _entry(5, 2)]
+    groups, rest = _plan(sched, queue, free_slots=3,
+                         can=lambda e: e.req != 1)
+    assert groups == [[0, 2]] and rest == [1]
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError, match="token_budget"):
+        ContinuousBatchingScheduler(token_budget=0)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ContinuousBatchingScheduler(prefill_chunk=0)
