@@ -38,6 +38,8 @@ import time
 import jax
 import numpy as np
 
+from repro.obs import Histogram
+
 from .common import emit
 
 
@@ -112,7 +114,13 @@ def _drive(eng, workload):
                 done_at[i] = tick
         tick += 1
     wall = time.perf_counter() - t0
-    lat = np.array([done_at[i] - arrivals[i] for i in range(len(reqs))])
+    # request latency (ticks) on the shared telemetry histogram: the
+    # reservoir covers every request, so quantiles are the exact order
+    # statistics the old np.percentile bookkeeping computed
+    lat = Histogram("serve.request_latency_ticks",
+                    keep_samples=max(len(reqs), 1))
+    for i in range(len(reqs)):
+        lat.observe(done_at[i] - arrivals[i])
     total = sum(len(r.out_tokens) for r in reqs)
     return wall, tick, lat, peak_c, peak_occ, total, \
         [r.out_tokens for r in reqs]
@@ -161,9 +169,9 @@ def run(json_path=None, requests=12, prefix_len=64):
     record("serve_dense_tok_s", wall / max(total_d, 1) * 1e6,
            f"tok_s={total_d / wall:.1f} ticks={ticks} "
            f"concurrency={conc_d}")
-    record("serve_dense_latency", float(np.percentile(lat, 50)) * 1e6,
-           f"p50_ticks={np.percentile(lat, 50):.0f} "
-           f"p99_ticks={np.percentile(lat, 99):.0f}")
+    record("serve_dense_latency", lat.quantile(0.5) * 1e6,
+           f"p50_ticks={lat.quantile(0.5):.0f} "
+           f"p99_ticks={lat.quantile(0.99):.0f}")
 
     paged = _build(cfg, params, paged=True, pool_pages=pool_pages)
     wall, ticks, lat, conc_p, occ, total_p, out_p = _drive(paged, wl)
@@ -171,13 +179,16 @@ def run(json_path=None, requests=12, prefix_len=64):
     record("serve_paged_tok_s", wall / max(total_p, 1) * 1e6,
            f"tok_s={total_p / wall:.1f} ticks={ticks} "
            f"concurrency={conc_p} pool_occupancy_peak={occ:.2f}")
-    record("serve_paged_latency", float(np.percentile(lat, 50)) * 1e6,
-           f"p50_ticks={np.percentile(lat, 50):.0f} "
-           f"p99_ticks={np.percentile(lat, 99):.0f}")
+    record("serve_paged_latency", lat.quantile(0.5) * 1e6,
+           f"p50_ticks={lat.quantile(0.5):.0f} "
+           f"p99_ticks={lat.quantile(0.99):.0f}")
     record("serve_paged_pool", 0.0,
            f"pages={pool_pages} shared={st.shared_maps} "
            f"cow={st.cow_copies} evict={st.evictions} "
            f"preempt={paged.preemptions}")
+    record("serve_prefix_hit_rate", 0.0,
+           f"hit_rate={st.prefix_hit_rate():.3f} "
+           f"hits={st.prefix_hits} misses={st.prefix_misses}")
     record("serve_concurrency_fixed_hbm", 0.0,
            f"dense={conc_d} paged={conc_p} "
            f"ratio={conc_p / max(conc_d, 1):.1f} "
@@ -204,9 +215,9 @@ def run(json_path=None, requests=12, prefix_len=64):
     record("serve_paged_int8_tok_s", wall / max(total_q, 1) * 1e6,
            f"tok_s={total_q / wall:.1f} ticks={ticks} "
            f"concurrency={conc_q} pool_occupancy_peak={occ_q:.2f}")
-    record("serve_paged_int8_latency", float(np.percentile(lat, 50)) * 1e6,
-           f"p50_ticks={np.percentile(lat, 50):.0f} "
-           f"p99_ticks={np.percentile(lat, 99):.0f}")
+    record("serve_paged_int8_latency", lat.quantile(0.5) * 1e6,
+           f"p50_ticks={lat.quantile(0.5):.0f} "
+           f"p99_ticks={lat.quantile(0.99):.0f}")
     record("serve_paged_int8_pool", 0.0,
            f"pages={int8_pages} shared={stq.shared_maps} "
            f"cow={stq.cow_copies} evict={stq.evictions} "

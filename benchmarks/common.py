@@ -1,9 +1,19 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities.
+
+Latency bookkeeping runs on the shared telemetry histogram
+(``repro.obs.Histogram``) instead of bespoke ``np.percentile`` code:
+with ``keep_samples`` >= the iteration count the reservoir holds every
+observation, so :meth:`~repro.obs.metrics.Histogram.quantile` is the
+exact order statistic -- medians/percentiles are bit-identical to the
+old ``np.median``/``np.percentile`` bookkeeping and the committed
+BENCH_*.json baselines stay valid.
+"""
 import os
 import time
 
 import jax
-import numpy as np
+
+from repro.obs import Histogram
 
 
 def scale() -> float:
@@ -16,15 +26,24 @@ def steps(n: int) -> int:
     return max(10, int(n * scale()))
 
 
-def time_fn(fn, *args, iters=5, warmup=2):
+def time_hist(fn, *args, iters=5, warmup=2) -> Histogram:
+    """Time ``iters`` blocking calls into an exact-quantile histogram
+    (seconds)."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    ts = []
+    h = Histogram(keep_samples=max(int(iters), 1))
     for _ in range(iters):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts)) * 1e6   # us
+        h.observe(time.perf_counter() - t0)
+    assert h.exact, "keep_samples must cover iters for exact quantiles"
+    return h
+
+
+def time_fn(fn, *args, iters=5, warmup=2):
+    """Median microseconds per call (exact -- see :func:`time_hist`)."""
+    return time_hist(fn, *args, iters=iters, warmup=warmup).quantile(0.5) \
+        * 1e6   # us
 
 
 def emit(name: str, us_per_call: float, derived: str):

@@ -46,7 +46,20 @@ def main():
                     choices=["fp32", "int8"],
                     help="paged page storage dtype (int8: per-row "
                          "scales, ~4x pages at fixed HBM)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="enable repro.obs metrics + spans and print a "
+                         "summary (implied by --trace-out / --prom-out)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON (load it at "
+                         "ui.perfetto.dev)")
+    ap.add_argument("--prom-out", default=None, metavar="PATH",
+                    help="write a Prometheus text exposition of the "
+                         "final metrics")
     args = ap.parse_args()
+
+    from repro import obs
+    if args.telemetry or args.trace_out or args.prom_out:
+        obs.enable()
 
     cfg = get_smoke_config(args.arch)
     fns = get_model(cfg)
@@ -83,10 +96,26 @@ def main():
         print(f"paged pool: shared_maps={st.shared_maps} "
               f"cow={st.cow_copies} evictions={st.evictions} "
               f"preemptions={eng.preemptions} "
-              f"fresh_pages={st.fresh_pages}")
+              f"fresh_pages={st.fresh_pages} "
+              f"prefix_hit_rate={st.prefix_hit_rate():.2f}")
     for r in reqs[:3]:
         print(f"  req {r.uid}: prompt[:6]={r.prompt[:6].tolist()} "
               f"-> out={r.out_tokens[:8]}...")
+    if obs.enabled():
+        snap = obs.export.snapshot()
+        c = snap["metrics"]["counters"]
+        hbm = sum(v for k, v in c.items()
+                  if k.startswith("kernel.hbm_"))
+        print(f"telemetry: ticks={c.get('serve.ticks', 0)} "
+              f"launches={sum(v for k, v in c.items() if k.startswith('kernel.launches'))} "
+              f"analytic_hbm_bytes={hbm} "
+              f"trace_events={snap['trace']['events']}")
+        if args.trace_out:
+            obs.export.write_trace(args.trace_out)
+            print(f"telemetry: wrote Chrome trace -> {args.trace_out}")
+        if args.prom_out:
+            obs.export.write_prometheus(args.prom_out)
+            print(f"telemetry: wrote Prometheus text -> {args.prom_out}")
 
 
 if __name__ == "__main__":

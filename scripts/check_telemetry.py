@@ -1,0 +1,64 @@
+#!/usr/bin/env python
+"""CI telemetry smoke validator.
+
+Validates the artifacts a ``--telemetry`` serve run wrote -- the Chrome
+trace-event JSON and the Prometheus text exposition -- against the
+pinned schemas in ``repro.obs.export`` (the same validators the unit
+tests use, so CI and tests cannot drift apart).
+
+    python scripts/check_telemetry.py --trace /tmp/trace.json \
+        --prom /tmp/metrics.prom [--require-kernel-traffic]
+
+Exits non-zero listing every schema violation.
+"""
+import argparse
+import json
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", required=True,
+                    help="Chrome trace-event JSON written by --trace-out")
+    ap.add_argument("--prom", required=True,
+                    help="Prometheus text written by --prom-out")
+    ap.add_argument("--require-kernel-traffic", action="store_true",
+                    help="fail unless >= 1 kernel.launch instant event "
+                         "carries the analytic HBM/FLOP args (needs a "
+                         "kernel-path impl, e.g. --decode-impl "
+                         "pallas_interpret on CPU)")
+    args = ap.parse_args(argv)
+
+    from repro.obs import export
+
+    errs = []
+    with open(args.trace) as f:
+        doc = json.load(f)
+    errs += [f"trace: {e}" for e in export.validate_chrome_trace(
+        doc, require_kernel_traffic=args.require_kernel_traffic)]
+
+    with open(args.prom) as f:
+        text = f.read()
+    required = ("repro_serve_ticks_total", "repro_serve_requests_total",
+                "repro_serve_finished_total", "repro_serve_ttft_s_bucket")
+    if args.require_kernel_traffic:
+        required += ("repro_kernel_launches_total",
+                     "repro_kernel_hbm_read_bytes_total",
+                     "repro_kernel_flops_total")
+    errs += [f"prom: {e}" for e in export.validate_prometheus_text(
+        text, require_metrics=required)]
+
+    if errs:
+        for e in errs:
+            print(f"FAIL {e}", file=sys.stderr)
+        return 1
+    n_ev = len(doc["traceEvents"])
+    n_launch = sum(1 for e in doc["traceEvents"]
+                   if e.get("name") == "kernel.launch")
+    print(f"telemetry OK: {n_ev} trace events "
+          f"({n_launch} kernel launches), prometheus text valid")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -99,12 +99,30 @@ class LaunchContract:
 
 _RECENT: collections.deque = collections.deque(maxlen=256)
 _CAPTURES: List[List[LaunchContract]] = []
+_LAUNCH_HOOKS: List[Callable[[LaunchContract], None]] = []
 
 
 def _record(contract: LaunchContract) -> None:
     _RECENT.append(contract)
     for buf in _CAPTURES:
         buf.append(contract)
+    for hook in _LAUNCH_HOOKS:
+        hook(contract)
+
+
+def add_launch_hook(hook: Callable[[LaunchContract], None]) -> None:
+    """Register a callback fired on every recorded contract (i.e. once
+    per *traced* ``pallas_call``, not per device execution).  This is
+    how the telemetry layer (:mod:`repro.obs`) observes launches
+    without this module importing it; the disabled path costs an
+    iteration over an empty list."""
+    if hook not in _LAUNCH_HOOKS:
+        _LAUNCH_HOOKS.append(hook)
+
+
+def remove_launch_hook(hook: Callable[[LaunchContract], None]) -> None:
+    if hook in _LAUNCH_HOOKS:
+        _LAUNCH_HOOKS.remove(hook)
 
 
 @contextlib.contextmanager

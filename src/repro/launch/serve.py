@@ -64,7 +64,30 @@ def main(argv=None):
     ap.add_argument("--lookahead", type=int, default=0,
                     help="admission skip-ahead window past a "
                          "head-of-queue that does not fit")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="enable repro.obs metrics + serve-tick spans "
+                         "(implied by --trace-out / --prom-out / "
+                         "--metrics-jsonl)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON "
+                         "(Perfetto-loadable) at exit")
+    ap.add_argument("--prom-out", default=None, metavar="PATH",
+                    help="write a Prometheus text exposition at exit")
+    ap.add_argument("--metrics-jsonl", default=None, metavar="PATH",
+                    help="append periodic metrics snapshots as JSON "
+                         "lines while serving")
+    ap.add_argument("--metrics-period", type=float, default=10.0,
+                    help="--metrics-jsonl emission period in seconds")
     args = ap.parse_args(argv)
+
+    from repro import obs
+    telemetry = (args.telemetry or args.trace_out or args.prom_out
+                 or args.metrics_jsonl)
+    if telemetry:
+        obs.enable()
+    emitter = (obs.export.JsonlEmitter(args.metrics_jsonl,
+                                       args.metrics_period)
+               if args.metrics_jsonl else None)
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     fns = get_model(cfg)
@@ -91,7 +114,13 @@ def main(argv=None):
         reqs.append(r)
         eng.submit(r)
     t0 = time.perf_counter()
-    eng.run()
+    if emitter is None:
+        eng.run()
+    else:
+        while eng.queue or eng.active.any():
+            eng.step()
+            emitter.maybe_emit()
+        emitter.emit()       # short runs still get >= 1 line
     dt = time.perf_counter() - t0
     total = sum(len(r.out_tokens) for r in reqs)
     print(f"[serve] {len(reqs)} requests, {total} tokens, {dt:.2f}s "
@@ -99,7 +128,18 @@ def main(argv=None):
     if args.paged:
         st = eng.pool.stats
         print(f"[serve] paged: shared={st.shared_maps} cow={st.cow_copies} "
-              f"evict={st.evictions} preempt={eng.preemptions}")
+              f"evict={st.evictions} preempt={eng.preemptions} "
+              f"hit_rate={st.prefix_hit_rate():.2f}")
+    if telemetry:
+        if args.trace_out:
+            obs.export.write_trace(args.trace_out)
+            print(f"[serve] telemetry: trace -> {args.trace_out}")
+        if args.prom_out:
+            obs.export.write_prometheus(args.prom_out)
+            print(f"[serve] telemetry: prometheus -> {args.prom_out}")
+        c = obs.export.snapshot()["metrics"]["counters"]
+        print(f"[serve] telemetry: ticks={c.get('serve.ticks', 0)} "
+              f"finished={c.get('serve.finished', 0)}")
     return reqs
 
 

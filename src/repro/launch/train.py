@@ -54,7 +54,17 @@ def main(argv=None):
                          "'data' axis and run the fused band kernels per "
                          "shard (shard_map halo exchange); pairs with "
                          "--attn-impl pallas for long-sequence training")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="enable repro.obs metrics + train-step spans "
+                         "(implied by --trace-out)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON "
+                         "(Perfetto-loadable) at exit")
     args = ap.parse_args(argv)
+
+    from repro import obs
+    if args.telemetry or args.trace_out:
+        obs.enable()
 
     dshape = tuple(int(x) for x in args.mesh.split("x"))
     mesh = make_mesh(dshape, ("data", "model")[:len(dshape)] if
@@ -106,10 +116,17 @@ def main(argv=None):
             for step in range(int(state.step), args.steps):
                 batch = jax.tree.map(jnp.asarray, pre.next())
                 t0 = time.perf_counter()
-                state, metrics = step_fn(state, batch)
-                loss = float(metrics["loss"])
+                with obs.span("train.step", tid=obs.TRACK_TRAIN,
+                              args={"step": step}):
+                    state, metrics = step_fn(state, batch)
+                    loss = float(metrics["loss"])
                 dt = time.perf_counter() - t0
+                if obs.enabled():
+                    obs.counter("train.steps").inc()
+                    obs.histogram("train.step_s").observe(dt)
+                    obs.gauge("train.loss").set(loss)
                 if wd.observe(dt):
+                    obs.counter("train.watchdog_alarms").inc()
                     print(f"[watchdog] slow step {step}: {dt:.2f}s")
                 if step % 10 == 0 or step == args.steps - 1:
                     print(f"step {step}: loss={loss:.4f} ({dt*1e3:.0f} ms)")
@@ -118,6 +135,9 @@ def main(argv=None):
         finally:
             pre.close()
         saver.wait()
+    if args.trace_out:
+        obs.export.write_trace(args.trace_out)
+        print(f"[train] telemetry: trace -> {args.trace_out}")
     print("[train] done")
     return state
 

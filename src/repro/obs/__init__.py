@@ -1,0 +1,66 @@
+"""Process-wide telemetry: metrics, spans, kernel-launch accounting.
+
+Quickstart::
+
+    from repro import obs
+    obs.enable()
+    ... run serve / train / bench ...
+    obs.export.write_trace("trace.json")       # load in ui.perfetto.dev
+    print(obs.export.prometheus_text())
+    snap = obs.export.snapshot()
+
+Telemetry is OFF by default and costs one branch per instrumentation
+site when off (:mod:`repro.obs.metrics` returns shared no-op stubs).
+:func:`enable` flips the registry live and registers the kernel-launch
+hook on :mod:`repro.analysis.contracts`, so every ``pallas_call``
+traced while enabled is accounted (family, grid, analytic HBM bytes
+and FLOPs -- see :mod:`repro.obs.traffic`).  CLIs expose this as
+``--telemetry`` / ``--trace-out`` / ``--prom-out``.
+"""
+from __future__ import annotations
+
+from . import export, metrics, tracing, traffic
+from .metrics import (NULL_COUNTER, NULL_GAUGE, NULL_HISTOGRAM, NULL_SPAN,
+                      Histogram, counter, enabled, gauge, histogram,
+                      registry)
+from .tracing import (TRACK_BENCH, TRACK_KERNELS, TRACK_SERVE, TRACK_TRAIN,
+                      instant, span)
+
+__all__ = [
+    "enable", "disable", "enabled", "reset",
+    "counter", "gauge", "histogram", "span", "instant",
+    "registry", "Histogram",
+    "metrics", "tracing", "traffic", "export",
+    "NULL_COUNTER", "NULL_GAUGE", "NULL_HISTOGRAM", "NULL_SPAN",
+    "TRACK_SERVE", "TRACK_TRAIN", "TRACK_BENCH", "TRACK_KERNELS",
+]
+
+_HOOKED = False
+
+
+def enable() -> None:
+    """Turn telemetry on and hook kernel-launch accounting."""
+    global _HOOKED
+    metrics._set_enabled(True)
+    if not _HOOKED:
+        from repro.analysis import contracts
+        contracts.add_launch_hook(traffic.on_launch)
+        _HOOKED = True
+
+
+def disable() -> None:
+    """Turn telemetry off (hot paths revert to the one-branch no-op).
+    Collected metrics/trace events are kept until :func:`reset`."""
+    global _HOOKED
+    metrics._set_enabled(False)
+    if _HOOKED:
+        from repro.analysis import contracts
+        contracts.remove_launch_hook(traffic.on_launch)
+        _HOOKED = False
+
+
+def reset() -> None:
+    """Clear all collected metrics and trace events (enabled state is
+    unchanged)."""
+    metrics.registry().reset()
+    tracing.buffer().reset()

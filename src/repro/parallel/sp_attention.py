@@ -63,11 +63,18 @@ try:
 except ImportError:  # pragma: no cover - newer jax moved it to the top level
     from jax import shard_map
 
+from repro import obs
 from repro.core import hierarchy as hc
 from repro.kernels import h1d_block
 
 NEG_INF = h1d_block.NEG_INF
 _MIN_M = -1e30
+
+
+def _note_dispatch(op: str, shards: int) -> None:
+    """Trace-time SP dispatch counter (one per traced shard_map shape,
+    like the kernel-launch accounting)."""
+    obs.counter("sp.dispatches", op=op, shards=shards).inc()
 
 
 # ---------------------------------------------------------------------------
@@ -268,6 +275,7 @@ def sp_band_attention(q, k, v, w, *, nr: int, mode: str, ratio: int = 1,
         with _local_region():
             return band_attention(q, k, v, w, nr=nr, mode=mode, ratio=ratio,
                                   impl=impl, tq=tq)
+    _note_dispatch("band_attention", d)
     B, G, Lq, dk = q.shape
     dv = v.shape[-1]
     Lk = k.shape[1]
@@ -355,6 +363,7 @@ def sp_h1d_attention(q, k, v, *, mesh: Mesh, axis: str = "data",
                                  kv_weight=kv_weight,
                                  softmax_scale=softmax_scale,
                                  impl=impl, tq=tq)
+    _note_dispatch("h1d_attention", d)
     Lloc = _validate_sp_shape(L, d, nr, "sp_h1d_attention")
     M = hc.num_levels(L, nr)
     fine_q = causal and causal_mode == "fine-q"
@@ -613,6 +622,7 @@ def sp_decode_attend(cache, q, t, *, nr: int, softmax_scale=None,
         return dk.decode_attend_fused(cache, q, t, nr=nr,
                                       softmax_scale=softmax_scale,
                                       interpret=interpret)
+    _note_dispatch("decode_attend", d)
     R, G, D = q.shape
     Lmax = cache.k.shape[-2]
     M = hc.num_levels(Lmax, nr)
@@ -669,6 +679,7 @@ def sp_update_cache(cache, k_new, v_new, t, *, impl: str = "pallas",
         # below AND too small to shard usefully: single-launch kernel
         return dk.update_cache_fused(cache, k_new, v_new, t,
                                      interpret=interpret)
+    _note_dispatch("update_cache", d)
     Lmax = cache.k.shape[-2]
     Lloc = Lmax // d
     # the update signature has no nr, but a cache with >= 1 coarse level

@@ -42,12 +42,14 @@ Design points for scale (DESIGN.md):
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import ModelConfig, get_model
 from .scheduler import ContinuousBatchingScheduler, QueueEntry
 
@@ -220,6 +222,16 @@ class ServeEngine:
         self._serial = 0
         self.preemptions = 0
         self.queue: List[QueueEntry] = []
+        # telemetry bookkeeping (repro.obs): per-request wall-clock
+        # marks keyed by id(req) -- submit time (TTFT) and last-token
+        # time (inter-token latency) -- plus a per-tick prefill-token
+        # accumulator (token-budget utilization) and the last-seen pool
+        # stats (mirrored into obs counters as deltas).  All writes are
+        # behind ``obs.enabled()`` so the disabled path stays free.
+        self._t_submit: Dict[int, float] = {}
+        self._t_last: Dict[int, float] = {}
+        self._tick_prefill_tokens = 0
+        self._pool_seen: Dict[str, int] = {}
 
         # Prompt length bucketing: right-pad prompts to the next power of
         # two (capped at max_len) so _prefill1 compiles O(log max_len)
@@ -279,6 +291,53 @@ class ServeEngine:
                     f"overflow='truncate'")
         req.out_tokens = []
         self.queue.append(QueueEntry(req=req, prompt=prompt))
+        if obs.enabled():
+            self._t_submit[id(req)] = time.perf_counter()
+            obs.counter("serve.requests").inc()
+
+    # -- telemetry -----------------------------------------------------
+    def _note_token(self, req: Request) -> None:
+        """TTFT on the first generated token, inter-token latency on
+        every later one (both survive preemption: the marks are keyed
+        by request, not slot)."""
+        now = time.perf_counter()
+        rid = id(req)
+        if len(req.out_tokens) == 1:
+            t0 = self._t_submit.get(rid)
+            if t0 is not None:
+                obs.histogram("serve.ttft_s").observe(now - t0)
+        else:
+            last = self._t_last.get(rid)
+            if last is not None:
+                obs.histogram("serve.itl_s").observe(now - last)
+        self._t_last[rid] = now
+
+    def _note_finish(self, req: Request) -> None:
+        obs.counter("serve.finished").inc()
+        rid = id(req)
+        self._t_last.pop(rid, None)
+        t0 = self._t_submit.pop(rid, None)
+        if t0 is not None:
+            obs.histogram("serve.request_latency_s").observe(
+                time.perf_counter() - t0)
+
+    def _tick_obs(self, n_active: int) -> None:
+        """Per-tick gauges/counters (called only when telemetry is on)."""
+        obs.counter("serve.ticks").inc()
+        obs.gauge("serve.queue_depth").set(len(self.queue))
+        obs.gauge("serve.active_slots").set(n_active)
+        budget = self.sched.token_budget
+        if budget:
+            used = self._tick_prefill_tokens + n_active
+            obs.gauge("serve.token_budget_util").set(used / budget)
+        self._tick_prefill_tokens = 0
+        if self.paged:
+            obs.gauge("pool.occupancy").set(self.pool.occupancy())
+            for k, v in self.pool.stats.snapshot().items():
+                delta = v - self._pool_seen.get(k, 0)
+                if delta:
+                    obs.counter(f"pool.{k}").inc(delta)
+                    self._pool_seen[k] = v
 
     def _bucket_len(self, S: int) -> int:
         """Padded prompt length: next power of two capped at max_len
@@ -424,6 +483,9 @@ class ServeEngine:
             s = dst[i]
             req = entry.req
             chunk_n = int(ns[i])
+            if obs.enabled():
+                obs.counter("serve.admissions").inc()
+                self._tick_prefill_tokens += chunk_n
             self.pos_host[s] = chunk_n
             self._admitted[s] = entry.prompt
             slot_w.append(s)
@@ -448,6 +510,8 @@ class ServeEngine:
             self.feed[s] = []
             self.req[s] = req
             req.out_tokens.append(int(nxt[i]))
+            if obs.enabled():
+                self._note_token(req)
             # done-check at admission: the first sampled token may
             # already satisfy max_new_tokens, a stop token, or a full
             # cache -- the slot then never activates, so no decode tick
@@ -457,6 +521,8 @@ class ServeEngine:
                     or chunk_n >= self.max_len - 1
                     or self._stopped(req, int(nxt[i])))
             if done:
+                if obs.enabled():
+                    self._note_finish(req)
                 self._release(s)
             else:
                 self.active[s] = True
@@ -545,6 +611,7 @@ class ServeEngine:
         self.queue.insert(0, entry)
         self._release(victim)
         self.preemptions += 1
+        obs.counter("serve.preemptions").inc()
 
     def _try_restore(self, entry: QueueEntry, s: int) -> bool:
         """Swap-in a preempted entry into free slot ``s``; False when
@@ -571,6 +638,7 @@ class ServeEngine:
         self.active[s] = True
         self._serial += 1
         self._admit_serial[s] = self._serial
+        obs.counter("serve.restores").inc()
         return True
 
     def _paged_prepare(self):
@@ -616,21 +684,34 @@ class ServeEngine:
     def step(self) -> int:
         """One engine tick: admit + one decode step for all active slots.
         Returns number of active slots."""
-        self._admit()
+        with obs.span("serve.tick", tid=obs.TRACK_SERVE):
+            n = self._step()
+        if obs.enabled():
+            self._tick_obs(n)
+        return n
+
+    def _step(self) -> int:
+        with obs.span("serve.admit", tid=obs.TRACK_SERVE):
+            self._admit()
         if not self.active.any():
             return 0
         if self.paged:
-            self._paged_prepare()
+            with obs.span("serve.prepare", tid=obs.TRACK_SERVE):
+                self._paged_prepare()
             if not self.active.any():        # everything preempted
                 return 0
             tabs = self.pool.build_tables(self.pos_host, self.active,
                                           self.cfg.num_kv_heads)
-            logits, self.caches = self._decode(self.params, self.caches,
-                                               self.tokens, self.pos,
-                                               tabs)
+            with obs.span("serve.decode", tid=obs.TRACK_SERVE):
+                logits, self.caches = self._decode(self.params,
+                                                   self.caches,
+                                                   self.tokens, self.pos,
+                                                   tabs)
         else:
-            logits, self.caches = self._decode(self.params, self.caches,
-                                               self.tokens, self.pos)
+            with obs.span("serve.decode", tid=obs.TRACK_SERVE):
+                logits, self.caches = self._decode(self.params,
+                                                   self.caches,
+                                                   self.tokens, self.pos)
         if self.greedy:
             nxt = jnp.argmax(logits, -1).astype(jnp.int32)
         else:
@@ -659,10 +740,14 @@ class ServeEngine:
                 continue
             req = self.req[s]
             req.out_tokens.append(int(nxt_host[s]))
+            if obs.enabled():
+                self._note_token(req)
             done = (len(req.out_tokens) >= req.max_new_tokens
                     or int(self.pos_host[s]) >= self.max_len - 1
                     or self._stopped(req, int(nxt_host[s])))
             if done:
+                if obs.enabled():
+                    self._note_finish(req)
                 self._release(s)
         if feed_idx:
             self.tokens = self.tokens.at[jnp.asarray(

@@ -68,10 +68,30 @@ TRASH = 1     # reserved write sink for inactive engine rows
 
 @dataclasses.dataclass
 class PoolStats:
+    """Monotonic pool counters.  ``prefix_hits``/``prefix_misses``
+    count LOOKUPS against the prefix registry during prefix-sharing
+    admissions (one per page span), so ``prefix_hit_rate()`` is a true
+    rate; ``shared_maps`` keeps counting the hit *mappings* for
+    backward compatibility (equal to ``prefix_hits`` in practice)."""
     cow_copies: int = 0
     evictions: int = 0
     shared_maps: int = 0
     fresh_pages: int = 0
+    prefix_hits: int = 0
+    prefix_misses: int = 0
+
+    def snapshot(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+    def reset(self) -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, 0)
+
+    def prefix_hit_rate(self) -> float:
+        """Registry hit rate over prefix-sharing admissions (0.0 when
+        no sharing-eligible lookup has happened)."""
+        lookups = self.prefix_hits + self.prefix_misses
+        return self.prefix_hits / lookups if lookups else 0.0
 
 
 class PagePool:
@@ -275,10 +295,13 @@ class PagePool:
                         self._map(slot, l, blk, hit[1])
                         placed.append((l, blk, hit[1], None))
                         self.stats.shared_maps += 1
+                        self.stats.prefix_hits += 1
                     else:
                         p = self._alloc(l)
                         self._map(slot, l, blk, p)
                         self.stats.fresh_pages += 1
+                        if share:
+                            self.stats.prefix_misses += 1
                         wl.append((blk, p))
                         placed.append((l, blk, p, key))
                         if share:

@@ -14,6 +14,7 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.models import ModelConfig, get_model
 from repro.optim import (
     adamw, adafactor, apply_updates, cosine_schedule, init_error_feedback,
@@ -176,10 +177,17 @@ def train(cfg: ModelConfig, tc: TrainConfig, data_source, num_steps: int,
     for step in range(step0, num_steps):
         batch = jax.tree.map(jnp.asarray, data_source.batch(step))
         t0 = time.perf_counter()
-        state, metrics = train_step(state, batch)
-        jax.block_until_ready(metrics["loss"])
+        with obs.span("train.step", tid=obs.TRACK_TRAIN,
+                      args={"step": step}):
+            state, metrics = train_step(state, batch)
+            jax.block_until_ready(metrics["loss"])
         dt = time.perf_counter() - t0
+        if obs.enabled():
+            obs.counter("train.steps").inc()
+            obs.histogram("train.step_s").observe(dt)
+            obs.gauge("train.loss").set(float(metrics["loss"]))
         if wd.observe(dt):
+            obs.counter("train.watchdog_alarms").inc()
             log(f"[watchdog] step {step} took {dt:.3f}s "
                 f"(ema {wd.ema:.3f}s) -- straggler suspected")
         if step % tc.log_every == 0:

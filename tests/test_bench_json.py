@@ -64,9 +64,16 @@ def test_bench_serve_covers_both_engines():
     names = {r["name"] for r in payload["rows"]}
     for want in ("serve_dense_tok_s", "serve_paged_tok_s",
                  "serve_dense_latency", "serve_paged_latency",
-                 "serve_paged_pool", "serve_concurrency_fixed_hbm",
+                 "serve_paged_pool", "serve_prefix_hit_rate",
+                 "serve_concurrency_fixed_hbm",
                  "serve_paged_token_parity"):
         assert want in names, want
+    hit = next(r for r in payload["rows"]
+               if r["name"] == "serve_prefix_hit_rate")
+    rate = float(hit["derived"].split("hit_rate=")[1].split()[0])
+    assert 0.0 <= rate <= 1.0, rate
+    # the shared-prefix workload must actually hit the registry
+    assert rate > 0.0, hit["derived"]
     for knob in ("max_len", "nr", "requests", "prefix_len",
                  "dense_slots", "paged_slots"):
         assert knob in payload["shape"], knob
